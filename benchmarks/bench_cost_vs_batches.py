@@ -1,0 +1,34 @@
+"""Fig 4: computation cost vs number of batches, normalised to the
+single-batch baseline (batch counts follow the paper's 4500-file splits)."""
+from __future__ import annotations
+
+from repro.core import batched_cost_curve
+
+from .common import Timer, emit, paper_query, write_result
+
+BATCH_COUNTS = [1, 2, 4, 9, 15, 30, 50, 60]  # paper: sizes 4500..75 files
+
+
+def main() -> None:
+    rows = []
+    with Timer() as t:
+        from repro.data.tpch import PAPER_QUERY_IDS
+
+        for qid in PAPER_QUERY_IDS:
+            q = paper_query(qid)
+            for nb, cost, norm in batched_cost_curve(q, BATCH_COUNTS):
+                rows.append({"query": qid, "num_batches": nb,
+                             "cost": cost, "norm_cost": norm})
+    write_result("cost_vs_batches", {"rows": rows})
+    worst = max(rows, key=lambda r: r["norm_cost"])
+    mono_ok = all(
+        a["norm_cost"] <= b["norm_cost"] + 1e-9
+        for a, b in zip(rows, rows[1:]) if a["query"] == b["query"]
+    )
+    emit("fig4_cost_vs_batches", t.seconds * 1e6 / len(rows),
+         f"monotone={mono_ok} worst={worst['query']}@{worst['num_batches']}"
+         f"batches={worst['norm_cost']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

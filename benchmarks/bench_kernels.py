@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks (CPU wall-clock of the jnp/XLA paths; the Pallas
+kernels themselves are TPU-target and validated in interpret mode by tests).
+Reported so the executor cost models in the examples are reproducible."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Timer, emit, write_result
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    rows = []
+    with Timer() as t:
+        # segagg (ref path, jitted)
+        from repro.kernels.segagg.ref import segagg_ref
+
+        for n, g in ((50_000, 1_000), (200_000, 10_000)):
+            keys = jnp.asarray(np.random.randint(0, g, n, np.int32))
+            vals = jnp.ones((n, 1), jnp.float32)
+            fn = jax.jit(lambda k, v, g=g: segagg_ref(k, v, g))
+            dt = _time(fn, keys, vals)
+            rows.append({"kernel": "segagg", "n": n, "groups": g,
+                         "us": dt * 1e6, "rows_per_s": n / dt})
+        # flash attention (jnp path)
+        from repro.layers.attention import AttnSpec, chunked_attention
+
+        B, S, H, D = 1, 1024, 4, 64
+        q = jnp.ones((B, S, H, D), jnp.bfloat16)
+        fn = jax.jit(lambda q: chunked_attention(
+            q, q, q, AttnSpec(causal=True, chunk=256)))
+        dt = _time(fn, q)
+        flops = 4 * B * S * S * H * D * 0.5
+        rows.append({"kernel": "flash_attention", "n": S, "us": dt * 1e6,
+                     "gflops_s": flops / dt / 1e9})
+        # ssd (jnp path)
+        from repro.layers.ssd import ssd_chunked
+
+        x = jnp.ones((1, 1024, 4, 64), jnp.float32)
+        dtm = jnp.ones((1, 1024, 4), jnp.float32) * 0.1
+        A = -jnp.ones((4,))
+        Bm = jnp.ones((1, 1024, 4, 32), jnp.float32) * 0.1
+        fn = jax.jit(lambda x, d, B_: ssd_chunked(x, d, A, B_, B_,
+                                                  jnp.ones((4,)), 128)[0])
+        dt = _time(fn, x, dtm, Bm)
+        rows.append({"kernel": "ssd", "n": 1024, "us": dt * 1e6})
+    write_result("kernels", {"rows": rows})
+    emit("kernel_micro", t.seconds * 1e6 / len(rows),
+         "; ".join(f"{r['kernel']}:{r['us']:.0f}us" for r in rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Deliverable (g): roofline report from the dry-run artifacts.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+emits the per-(arch x shape x mesh) table: three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, memory fit."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from .common import RESULTS, Timer, emit, write_result
+
+DRYRUN = RESULTS / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for fn in sorted(glob.glob(str(DRYRUN / "*.json"))):
+        cells.append(json.loads(pathlib.Path(fn).read_text()))
+    return cells
+
+
+def markdown_table(cells, mesh="single") -> str:
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | mfu_bound | mem/chip | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped | — | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR: "
+                        f"{c.get('error','')[:40]} | | | | | | | |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {c['useful_flops_ratio']:.2f} | "
+            f"{c['mfu_bound']:.3f} | "
+            f"{m['peak_bytes_per_chip']/2**30:.2f} GiB | "
+            f"{'Y' if m['fits_hbm'] else 'N'} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    with Timer() as t:
+        cells = load_cells()
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    errors = [c for c in cells if c["status"] not in ("ok", "skipped")]
+    fits = sum(1 for c in ok if c["memory"]["fits_hbm"])
+    dominant = {}
+    for c in ok:
+        dominant[c["roofline"]["dominant"]] = \
+            dominant.get(c["roofline"]["dominant"], 0) + 1
+    write_result("roofline_summary", {
+        "num_ok": len(ok), "num_skipped": len(skipped),
+        "num_errors": len(errors), "fits": fits, "dominant": dominant,
+        "table_single": markdown_table(cells, "single"),
+        "table_multi": markdown_table(cells, "multi"),
+    })
+    emit("roofline_dryrun", t.seconds * 1e6 / max(len(cells), 1),
+         f"cells ok={len(ok)} skipped={len(skipped)} errors={len(errors)} "
+         f"fits_hbm={fits}/{len(ok)} dominant={dominant}")
+
+
+if __name__ == "__main__":
+    main()

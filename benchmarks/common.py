@@ -1,0 +1,58 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+from repro.core import ConstantRateArrival, Query
+from repro.data.tpch import NUM_FILES, PAPER_QUERY_IDS, paper_cost_model
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def paper_query(qid: str, deadline_frac: float = 2.0,
+                num_files: int = NUM_FILES, regime: str = "fig4") -> Query:
+    """One of the paper's 13 queries as a scheduler Query over the §7.1
+    stream (1 file/s, window [0, num_files])."""
+    cm = paper_cost_model(qid, regime)
+    arr = ConstantRateArrival(wind_start=0.0, rate=1.0,
+                              num_tuples_total=num_files)
+    base = cm.cost(num_files)
+    return Query(
+        query_id=qid,
+        wind_start=0.0,
+        wind_end=arr.wind_end,
+        deadline=arr.wind_end + deadline_frac * base,
+        num_tuples_total=num_files,
+        cost_model=cm,
+        arrival=arr,
+    )
+
+
+def all_paper_queries(deadline_frac: float = 2.0,
+                      num_files: int = NUM_FILES,
+                      regime: str = "fig4") -> List[Query]:
+    return [paper_query(q, deadline_frac, num_files, regime)
+            for q in PAPER_QUERY_IDS]
+
+
+def write_result(name: str, payload: Dict) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=str))
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows (one per artifact) and writes
+detailed JSON under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_single_query,      # Fig 2 + Fig 6
+        bench_cost_vs_batches,   # Fig 4
+        bench_batch_vs_streaming,# Fig 5
+        bench_multi_query,       # Fig 7 (both calibration regimes)
+        bench_input_modes,       # Table 2 analogue (real executor)
+        bench_memory,            # §7.2 OOM analysis
+        bench_kernels,           # kernel micro-benches
+        bench_roofline,          # deliverable (g): dry-run roofline table
+    )
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_single_query, bench_cost_vs_batches,
+                bench_batch_vs_streaming, bench_multi_query,
+                bench_input_modes, bench_memory, bench_kernels,
+                bench_roofline):
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod.__name__},0,FAILED")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Dynamic multi-job deadline serving with REAL model execution:
+
+three concurrent batch-inference jobs (prompt windows with deadlines) are
+time-shared by the paper's Algorithm 2 (LLF) on one reduced-config model;
+every scheduled MinBatch runs actual prefill compute on CPU.
+
+    PYTHONPATH=src python examples/multi_query_serving.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import Strategy, UniformWindowArrival
+from repro.models.base import get_config
+from repro.models.lm import build_specs
+from repro.models.params import init_params, num_params
+from repro.serve.engine import PrefillExecutor, WindowJob, serve_multi_jobs
+
+SEQ = 64
+
+cfg = get_config("yi_6b").reduced()
+cfg = dataclasses.replace(cfg, vocab_size=1024)
+params = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+print(f"model: reduced {cfg.name} ({num_params(build_specs(cfg))/1e6:.2f}M params)")
+
+executor = PrefillExecutor(cfg, params, buckets=(1, 2, 4, 8, 16))
+cost_model = executor.calibrate(SEQ, cfg.vocab_size)
+print(f"calibrated: prefill(1)={cost_model.cost(1)*1e3:.1f} ms, "
+      f"prefill(16)={cost_model.cost(16)*1e3:.1f} ms")
+
+rng = np.random.default_rng(0)
+jobs = []
+for i, (n, window, slack) in enumerate([(24, 30.0, 3.0), (16, 20.0, 2.0),
+                                        (32, 40.0, 2.5)]):
+    arr = UniformWindowArrival(wind_start=0.0, wind_end=window,
+                               num_tuples_total=n)
+    jobs.append(WindowJob(
+        job_id=f"job{i}",
+        prompts=rng.integers(0, cfg.vocab_size, (n, SEQ)).astype(np.int32),
+        arrival=arr,
+        deadline=window + slack * cost_model.cost(n),
+    ))
+
+report = serve_multi_jobs(jobs, executor, cost_model, Strategy.LLF,
+                          delta_rsf=0.5, c_max=5.0)
+for jid, r in report.items():
+    print(f"{jid}: processed {r['processed']} prompts in {r['num_batches']} "
+          f"batches; modelled finish {r['completion']:.2f}s vs deadline "
+          f"{r['deadline']:.2f}s -> met={r['met_modelled']}; real exec "
+          f"{r['wall_exec_seconds']*1e3:.0f} ms")
+assert all(r["met_modelled"] for r in report.values())
+assert all(report[j.job_id]["processed"] == j.num_requests for j in jobs)
+print("all jobs met their deadlines with batched execution.")

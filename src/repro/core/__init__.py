@@ -1,0 +1,108 @@
+"""repro.core — the paper's contribution: deadline-aware intermittent batch
+scheduling (Saranya & Sudarshan, "Scheduling of Intermittent Query
+Processing", 2023).
+
+Pure-Python/numpy, executor-agnostic.  Consumed by the discrete-event
+simulator (paper experiments), the TPU analytics executor
+(``repro.serve.analytics``) and the model-serving engine
+(``repro.serve.engine``).
+"""
+from .arrivals import (
+    ArrivalModel,
+    ConstantRateArrival,
+    TraceArrival,
+    UniformWindowArrival,
+    jittered_trace,
+)
+from .cost_model import (
+    CostModelBase,
+    LinearCostModel,
+    PiecewiseLinearCostModel,
+    SublinearCostModel,
+    fit_piecewise_linear,
+)
+from .constraints import (
+    brute_force_optimal,
+    feasible_assignment,
+    schedule_via_constraints,
+)
+from .minbatch import find_min_batch_size
+from .multi_query import (
+    LARGE_NUMBER,
+    DynamicQuerySpec,
+    schedule_dynamic,
+)
+from .schedulability import (
+    FeasibilityReport,
+    check as check_schedulability,
+    min_post_window_work,
+    post_window_condition,
+)
+from .simulator import (
+    MemoryModel,
+    batched_cost_curve,
+    micro_batch_trace,
+    one_shot_trace,
+    staggered_deadlines,
+)
+from .single_query import (
+    execute_single,
+    plan_cost,
+    schedule_single,
+    schedule_with_agg_cost,
+    schedule_without_agg_cost,
+    validate_schedule,
+)
+from .types import (
+    Batch,
+    BatchExecution,
+    ExecutionTrace,
+    InfeasibleDeadline,
+    Query,
+    QueryOutcome,
+    Schedule,
+    Strategy,
+)
+
+__all__ = [
+    "ArrivalModel",
+    "Batch",
+    "BatchExecution",
+    "ConstantRateArrival",
+    "CostModelBase",
+    "DynamicQuerySpec",
+    "ExecutionTrace",
+    "FeasibilityReport",
+    "InfeasibleDeadline",
+    "LARGE_NUMBER",
+    "LinearCostModel",
+    "MemoryModel",
+    "PiecewiseLinearCostModel",
+    "Query",
+    "QueryOutcome",
+    "Schedule",
+    "Strategy",
+    "SublinearCostModel",
+    "TraceArrival",
+    "UniformWindowArrival",
+    "batched_cost_curve",
+    "brute_force_optimal",
+    "check_schedulability",
+    "execute_single",
+    "micro_batch_trace",
+    "one_shot_trace",
+    "staggered_deadlines",
+    "feasible_assignment",
+    "find_min_batch_size",
+    "fit_piecewise_linear",
+    "jittered_trace",
+    "min_post_window_work",
+    "plan_cost",
+    "post_window_condition",
+    "schedule_dynamic",
+    "schedule_single",
+    "schedule_via_constraints",
+    "schedule_with_agg_cost",
+    "schedule_without_agg_cost",
+    "validate_schedule",
+]

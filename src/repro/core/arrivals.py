@@ -1,0 +1,165 @@
+"""Input-stream arrival models (paper §2.1: "the input data rate can be
+modeled"; §4.4 variable-rate handling).
+
+The planners need two primitives:
+
+* ``input_time(k)``        — InputTime(s, k): time at which the k-th tuple of
+                             the window has arrived (k in 1..N; k=0 -> wind_start).
+* ``tuples_available(t)``  — number of window tuples that have arrived by t.
+
+Both are exact inverses for the deterministic models.  ``JitteredArrival``
+wraps a base model with seeded noise to model the *actual* arrival process
+diverging from the *predicted* one (§3.1 last paragraphs, §4.4) — planners
+always see the base model, executors see the jittered truth.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+class ArrivalModel:
+    wind_start: float
+    wind_end: float
+    num_tuples_total: int
+
+    def input_time(self, num_tuples: int) -> float:
+        raise NotImplementedError
+
+    def tuples_available(self, t: float) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantRateArrival(ArrivalModel):
+    """rate tuples per unit time, uniformly over [wind_start, wind_end].
+
+    Matches the paper's worked example (§3.1): window [1, 10], 1 tuple/s ->
+    tuple k available at time wind_start + k/rate ... with their convention
+    tuple k arrives at time k (wind_start=1 means arrivals at 1+? they use
+    "available from time 6" for 6 tuples) — i.e. the k-th tuple lands at
+    ``wind_start + (k - 1)/rate``?  Their numbers: 10 tuples, window [1,10],
+    rate 1/s, "8 tuples available by time 8", "6 tuples available from 6":
+    tuple k arrives at time k = wind_start + (k-1)/rate.  We therefore use
+    ``input_time(k) = wind_start + (k - 1) / rate`` and require
+    ``input_time(N) == wind_end``.
+    """
+
+    wind_start: float
+    rate: float
+    num_tuples_total: int
+
+    @property
+    def wind_end(self) -> float:  # type: ignore[override]
+        return self.input_time(self.num_tuples_total)
+
+    def input_time(self, num_tuples: int) -> float:
+        if num_tuples <= 0:
+            return self.wind_start
+        return self.wind_start + (num_tuples - 1) / self.rate
+
+    def tuples_available(self, t: float) -> int:
+        if t < self.wind_start:
+            return 0
+        k = int((t - self.wind_start) * self.rate + 1e-9) + 1
+        return min(k, self.num_tuples_total)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformWindowArrival(ArrivalModel):
+    """N tuples spread uniformly over an explicitly given [wind_start, wind_end].
+
+    The k-th tuple arrives at ``wind_start + (k-1)/(N-1) * (wind_end-wind_start)``
+    (first at window start, last exactly at window end).  This is the default
+    for synthetic experiments where the window is given, not the rate.
+    """
+
+    wind_start: float
+    wind_end: float
+    num_tuples_total: int
+
+    def input_time(self, num_tuples: int) -> float:
+        n = self.num_tuples_total
+        if num_tuples <= 0 or n <= 1:
+            return self.wind_start if num_tuples <= 0 else self.wind_end
+        k = min(num_tuples, n)
+        return self.wind_start + (k - 1) / (n - 1) * (self.wind_end - self.wind_start)
+
+    def tuples_available(self, t: float) -> int:
+        n = self.num_tuples_total
+        if t < self.wind_start:
+            return 0
+        if t >= self.wind_end:
+            return n
+        if n <= 1:
+            return n
+        frac = (t - self.wind_start) / (self.wind_end - self.wind_start)
+        return min(n, int(frac * (n - 1) + 1e-9) + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceArrival(ArrivalModel):
+    """Arrivals given by an explicit sorted timestamp list (one per tuple).
+
+    Used as the *ground truth* in dynamic/jittered scenarios and by the data
+    pipeline (each generated record carries a timestamp, §7.1).
+    """
+
+    timestamps: Tuple[float, ...]
+
+    def __post_init__(self) -> None:
+        ts = list(self.timestamps)
+        if ts != sorted(ts):
+            raise ValueError("timestamps must be sorted")
+        if not ts:
+            raise ValueError("empty trace")
+
+    @property
+    def wind_start(self) -> float:  # type: ignore[override]
+        return self.timestamps[0]
+
+    @property
+    def wind_end(self) -> float:  # type: ignore[override]
+        return self.timestamps[-1]
+
+    @property
+    def num_tuples_total(self) -> int:  # type: ignore[override]
+        return len(self.timestamps)
+
+    def input_time(self, num_tuples: int) -> float:
+        if num_tuples <= 0:
+            return self.wind_start
+        return self.timestamps[min(num_tuples, len(self.timestamps)) - 1]
+
+    def tuples_available(self, t: float) -> int:
+        return bisect.bisect_right(self.timestamps, t + 1e-12)
+
+
+def jittered_trace(
+    base: ArrivalModel,
+    seed: int,
+    jitter_frac: float = 0.1,
+    rate_scale: float = 1.0,
+) -> TraceArrival:
+    """Build a ground-truth trace = predicted model + seeded jitter (§4.4).
+
+    ``rate_scale`` > 1 means the true stream is faster than predicted (arrives
+    earlier), < 1 slower.  Per-tuple jitter is uniform in
+    ±jitter_frac * inter-arrival.  Monotonicity is restored by sorting.
+    """
+    import random
+
+    rng = random.Random(seed)
+    n = base.num_tuples_total
+    ts: List[float] = []
+    for k in range(1, n + 1):
+        t = base.input_time(k)
+        span = (t - base.wind_start) / max(rate_scale, 1e-9)
+        t = base.wind_start + span
+        if k < n:  # keep the window-end anchor exact for the last tuple
+            gap = (base.wind_end - base.wind_start) / max(n - 1, 1)
+            t += rng.uniform(-jitter_frac, jitter_frac) * gap
+        ts.append(max(t, base.wind_start))
+    ts.sort()
+    return TraceArrival(timestamps=tuple(ts))

@@ -1,0 +1,195 @@
+"""Cost models (paper §2.2, Fig 1; §6.2 piecewise-linear fit).
+
+A cost model answers three questions the planners need:
+
+* ``cost(n)``            — cost (== time, in the paper's units) of processing
+                           ``n`` tuples in ONE batch.  Eq. (1) for the linear
+                           model: ``n * tupleProcCost + overheadCost``.
+* ``tuples_processable(d)`` — ``EstTuplesProcessed``: max tuples one batch can
+                           process within duration ``d`` (inverse of ``cost``).
+* ``agg_cost(b)``        — final-aggregation cost when partials from ``b``
+                           batches are combined (Eq. (4) context; §6.2 models
+                           it as piecewise linear in the number of batches).
+
+All models must be monotone non-decreasing in ``n``; the Algorithm-1 planner
+works for ANY such model (§3.1 closing remark), which we exercise in tests.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+
+class CostModelBase:
+    """Interface; see module docstring."""
+
+    def cost(self, num_tuples: int) -> float:
+        raise NotImplementedError
+
+    def agg_cost(self, num_batches: int) -> float:
+        """Final-aggregation cost. Single-batch runs need no final agg (§2.1)."""
+        raise NotImplementedError
+
+    # -- derived ---------------------------------------------------------
+    def tuples_processable(self, duration: float, hi: int = 1 << 40) -> int:
+        """EstTuplesProcessed(q, duration): largest n with cost(n) <= duration.
+
+        Generic integer bisection so arbitrary monotone models work; linear
+        models override with a closed form.
+        """
+        if duration < 0 or self.cost(0) > duration:
+            # Cannot even pay the per-batch overhead.
+            return 0
+        lo, hi_ = 0, 1
+        while hi_ < hi and self.cost(hi_) <= duration:
+            lo, hi_ = hi_, hi_ * 2
+        # invariant: cost(lo) <= duration < cost(hi_)
+        while lo + 1 < hi_:
+            mid = (lo + hi_) // 2
+            if self.cost(mid) <= duration:
+                lo = mid
+            else:
+                hi_ = mid
+        return lo
+
+    def batched_cost(self, num_tuples: int, batch_size: int) -> float:
+        """Total cost of processing ``num_tuples`` in chunks of ``batch_size``
+        plus the final aggregation (used by MinBatch sizing, §4.1)."""
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        full, rem = divmod(num_tuples, batch_size)
+        nb = full + (1 if rem else 0)
+        c = full * self.cost(batch_size) + (self.cost(rem) if rem else 0.0)
+        if nb > 1:
+            c += self.agg_cost(nb)
+        return c
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearCostModel(CostModelBase):
+    """Eq. (1): compCost = n * tuple_cost + overhead  (per batch).
+
+    ``agg_tuple_cost``: final aggregation modelled as linear in the number of
+    batches (each batch contributes one partial-aggregate file, §6.1/6.2),
+    plus a fixed ``agg_overhead`` — 0 by default so the paper's §3.1 worked
+    examples (no aggregation cost) hold exactly.
+    """
+
+    tuple_cost: float
+    overhead: float = 0.0
+    agg_per_batch: float = 0.0
+    agg_overhead: float = 0.0
+
+    def cost(self, num_tuples: int) -> float:
+        if num_tuples <= 0:
+            return self.overhead if num_tuples == 0 else 0.0
+        return num_tuples * self.tuple_cost + self.overhead
+
+    def agg_cost(self, num_batches: int) -> float:
+        if num_batches <= 1:
+            return 0.0
+        return num_batches * self.agg_per_batch + self.agg_overhead
+
+    def tuples_processable(self, duration: float, hi: int = 1 << 40) -> int:
+        if duration < self.overhead:
+            return 0
+        if self.tuple_cost <= 0:
+            return hi
+        return int(math.floor((duration - self.overhead) / self.tuple_cost + 1e-9))
+
+
+@dataclasses.dataclass(frozen=True)
+class PiecewiseLinearCostModel(CostModelBase):
+    """§6.2: measured (batch-size, cost) samples fitted piecewise-linearly.
+
+    ``points`` are (num_tuples, cost) knots sorted by num_tuples; costs are
+    linearly interpolated between knots and extrapolated from the last
+    segment's slope beyond them.  ``agg_points`` similarly maps
+    (num_batches, agg_cost).
+    """
+
+    points: Tuple[Tuple[float, float], ...]
+    agg_points: Tuple[Tuple[float, float], ...] = ((1, 0.0),)
+
+    def __post_init__(self) -> None:
+        xs = [p[0] for p in self.points]
+        if xs != sorted(xs) or len(xs) < 2:
+            raise ValueError("points must be >=2 knots sorted by num_tuples")
+        cs = [p[1] for p in self.points]
+        if any(b < a - 1e-12 for a, b in zip(cs, cs[1:])):
+            raise ValueError("cost must be monotone non-decreasing")
+
+    @staticmethod
+    def _interp(points: Sequence[Tuple[float, float]], x: float) -> float:
+        if len(points) == 1:
+            return points[0][1]
+        xs = [p[0] for p in points]
+        i = bisect.bisect_left(xs, x)
+        if i < len(xs) and xs[i] == x:
+            return points[i][1]
+        if i == 0:
+            (x0, y0), (x1, y1) = points[0], points[1]
+        elif i == len(xs):
+            (x0, y0), (x1, y1) = points[-2], points[-1]
+        else:
+            (x0, y0), (x1, y1) = points[i - 1], points[i]
+        if x1 == x0:
+            return y0
+        t = (x - x0) / (x1 - x0)
+        return y0 + t * (y1 - y0)
+
+    def cost(self, num_tuples: int) -> float:
+        if num_tuples <= 0:
+            return 0.0
+        return max(0.0, self._interp(self.points, float(num_tuples)))
+
+    def agg_cost(self, num_batches: int) -> float:
+        if num_batches <= 1:
+            return 0.0
+        return max(0.0, self._interp(self.agg_points, float(num_batches)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SublinearCostModel(CostModelBase):
+    """Fig 1's non-linear curve: cost grows sublinearly with batch size
+    (``scale * n**exponent + overhead``, exponent in (0, 1]).  Used in tests to
+    show Algorithm 1 handles arbitrary monotone models."""
+
+    scale: float
+    exponent: float = 0.85
+    overhead: float = 0.0
+    agg_per_batch: float = 0.0
+
+    def cost(self, num_tuples: int) -> float:
+        if num_tuples <= 0:
+            return 0.0
+        return self.scale * float(num_tuples) ** self.exponent + self.overhead
+
+    def agg_cost(self, num_batches: int) -> float:
+        if num_batches <= 1:
+            return 0.0
+        return num_batches * self.agg_per_batch
+
+
+def fit_piecewise_linear(
+    samples: Sequence[Tuple[float, float]],
+    agg_samples: Sequence[Tuple[float, float]] = ((1, 0.0),),
+) -> PiecewiseLinearCostModel:
+    """§6.2 cost modelling: fit measured (batch_size, time) samples.
+
+    We keep the measured points as knots after isotonic cleanup (costs made
+    monotone by cumulative max — measurement noise can otherwise produce a
+    locally decreasing cost, which the planners' inversion logic rejects).
+    """
+    pts = sorted((float(x), float(y)) for x, y in samples)
+    mono: List[Tuple[float, float]] = []
+    running = 0.0
+    for x, y in pts:
+        running = max(running, y)
+        mono.append((x, running))
+    if len(mono) == 1:
+        x, y = mono[0]
+        mono.append((x + 1.0, y))
+    return PiecewiseLinearCostModel(points=tuple(mono), agg_points=tuple(agg_samples))

@@ -1,0 +1,65 @@
+"""Minimum batch size for the dynamic scenario (paper §4.1, Eq. 9).
+
+The dynamic scheduler cannot hold work back for globally optimal batches
+(other queries claim the executor), so each query is processed whenever
+``MinBatch`` tuples are ready.  ``MinBatch`` trades cost against
+schedulability:
+
+* cost bound   — processing everything in MinBatch-sized chunks (plus final
+                 aggregation) must cost at most ``(1 + delta_rsf)`` times the
+                 single-batch minimum (Eq. 9: delta_rsf = 0.1 -> factor 1.1);
+* latency bound— one MinBatch must cost <= ``c_max`` so the non-preemptive
+                 blocking period is bounded (§4.2/§4.3);
+* group floor  — at least ~2x the number of GROUP-BY groups, else partial
+                 aggregation shrinks nothing (§4.1).
+"""
+from __future__ import annotations
+
+from .cost_model import CostModelBase
+from .types import InfeasibleDeadline
+
+
+def find_min_batch_size(
+    num_tuples_total: int,
+    cost_model: CostModelBase,
+    delta_rsf: float,
+    c_max: float,
+    num_groups: int = 0,
+) -> int:
+    """FindMinBatchSize (Algorithm 2 helper).
+
+    Smallest batch size whose total batched cost respects Eq. (9), then capped
+    so a single batch never exceeds ``c_max``; floored at ``2 * num_groups``
+    when that is compatible with ``c_max``.
+    """
+    n = num_tuples_total
+    if n <= 0:
+        return 1
+    budget = (1.0 + delta_rsf) * cost_model.cost(n)
+
+    # batched_cost is non-increasing in batch size (fewer batches => less
+    # overhead + less final agg), so binary-search the smallest x within budget.
+    lo, hi = 1, n
+    if cost_model.batched_cost(n, n) > budget + 1e-9:
+        raise InfeasibleDeadline("cost budget below single-batch cost")
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cost_model.batched_cost(n, mid) <= budget + 1e-9:
+            hi = mid
+        else:
+            lo = mid + 1
+    x = lo
+
+    # Group floor (§4.1): significant reduction needs >= 2x groups per batch.
+    if num_groups > 0:
+        x = max(x, min(2 * num_groups, n))
+
+    # C_max cap (§4.2): one batch must fit the scheduler quantum.  This may
+    # override the Eq.-9 bound — the paper gives C_max precedence ("its
+    # Minbatch size is reduced such that its cost does not exceed C_max").
+    if cost_model.cost(1) > c_max + 1e-9:
+        raise InfeasibleDeadline(
+            f"cost of a single tuple {cost_model.cost(1):.3g} exceeds C_max {c_max:.3g}"
+        )
+    cap = cost_model.tuples_processable(c_max)
+    return max(1, min(x, cap, n))

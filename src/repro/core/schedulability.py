@@ -1,0 +1,133 @@
+"""Schedulability analysis for the dynamic NINP scheduler (paper §4.3, §7.4).
+
+Exact schedulability of non-preemptive task sets is NP-complete (Georges et
+al., paper ref [21]), so — like the paper — we provide *necessary* conditions
+used as a pre-flight check and in experiments to explain infeasible cases
+(the paper's §7.4 "sum of last-batch costs was ~105, so the largest deadline
+must be >= windowEnd + 105" analysis is exactly `post_window_condition`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from .single_query import schedule_single, schedule_without_agg_cost
+from .types import InfeasibleDeadline, Query
+
+
+@dataclasses.dataclass(frozen=True)
+class FeasibilityReport:
+    feasible: bool  # False == a NECESSARY condition failed (definitely infeasible)
+    reasons: Tuple[str, ...]
+
+    def __bool__(self) -> bool:
+        return self.feasible
+
+
+def max_prewindow_tuples(q: Query) -> int:
+    """Largest stream prefix a dedicated executor could finish strictly by
+    q's window end (in-order batches, arrivals respected).  Monotone in k, so
+    binary-searchable via the backward planner on the k-tuple prefix."""
+    import dataclasses as _dc
+
+    def feasible(k: int) -> bool:
+        if k == 0:
+            return True
+        qk = _dc.replace(
+            q,
+            num_tuples_total=k,
+            wind_end=q.arrival.input_time(k),
+            deadline=q.wind_end,
+        )
+        try:
+            schedule_without_agg_cost(qk, q.wind_end)
+            return True
+        except InfeasibleDeadline:
+            return False
+
+    lo, hi = 0, q.num_tuples_total
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if feasible(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def min_post_window_work(q: Query) -> float:
+    """Lower bound on the work that MUST run after q's window end: even if a
+    dedicated executor maximally front-loads the stream prefix, the remaining
+    tuples still cost at least one batch after the window (final-aggregation
+    cost excluded to keep the bound valid for single-batch completions)."""
+    k = max_prewindow_tuples(q)
+    rest = q.num_tuples_total - k
+    return q.cost_model.cost(rest) if rest > 0 else 0.0
+
+
+def post_window_condition(queries: Sequence[Query]) -> FeasibilityReport:
+    """§7.4's necessary condition, generalised to EDF prefixes.
+
+    Sort by deadline; for every deadline-prefix, the sum of minimum
+    post-window work must fit between the EARLIEST window end in the prefix
+    (before which none of that work can start) and the prefix's deadline.
+    A single shared executor cannot do better regardless of strategy, so
+    failure proves infeasibility.  (The paper's §7.4 instance — identical
+    windows, sum of last-batch costs 105 vs largest deadline — is the
+    degenerate case of this check.)
+    """
+    reasons: List[str] = []
+    qs = sorted(queries, key=lambda q: q.deadline)
+    for i in range(len(qs)):
+        prefix = qs[: i + 1]
+        anchor = min(q.wind_end for q in prefix)
+        work = sum(min_post_window_work(q) for q in prefix)
+        budget = qs[i].deadline - anchor
+        if work > budget + 1e-9:
+            reasons.append(
+                f"deadline-prefix through {qs[i].query_id}: post-window work "
+                f"{work:.4g} exceeds budget {budget:.4g} "
+                f"(deadline {qs[i].deadline:.6g} - earliest window end {anchor:.6g})"
+            )
+    return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))
+
+
+def single_query_condition(queries: Sequence[Query]) -> FeasibilityReport:
+    """Each query must be feasible in isolation (necessary)."""
+    reasons: List[str] = []
+    for q in queries:
+        try:
+            schedule_single(q)
+        except InfeasibleDeadline as e:
+            reasons.append(f"{q.query_id}: infeasible alone ({e})")
+    return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))
+
+
+def blocking_period_bound(queries: Sequence[Query], c_max: float) -> FeasibilityReport:
+    """§4.3: with batch costs bounded by C_max, a newly released urgent query
+    waits at most C_max (+ its own work).  Flags queries whose slack at
+    submission is smaller than that bound — they can miss purely from
+    blocking, which no NINP strategy avoids."""
+    reasons: List[str] = []
+    for q in queries:
+        slack = q.deadline - q.wind_end - q.min_comp_cost
+        if 0 <= slack < c_max:
+            reasons.append(
+                f"{q.query_id}: slack {slack:.4g} < C_max {c_max:.4g}; "
+                "vulnerable to NINP blocking"
+            )
+    # Blocking vulnerability is a warning, not a proof of infeasibility.
+    return FeasibilityReport(feasible=True, reasons=tuple(reasons))
+
+
+def check(queries: Sequence[Query], c_max: float = float("inf")) -> FeasibilityReport:
+    """Combined pre-flight: necessary conditions + blocking warnings."""
+    parts = [
+        single_query_condition(queries),
+        post_window_condition(queries),
+        blocking_period_bound(queries, c_max),
+    ]
+    return FeasibilityReport(
+        feasible=all(p.feasible for p in parts),
+        reasons=tuple(r for p in parts for r in p.reasons),
+    )

@@ -1,0 +1,140 @@
+"""Core datatypes for intermittent-query scheduling.
+
+Mirrors Table 1 of the paper (notation for query attributes). Times are floats
+in *cost-model units* (the paper's experiments equate cost and time: "cost
+refers to the total time required for processing the query", §1). Tuple counts
+are ints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+class InfeasibleDeadline(Exception):
+    """Raised when no batch schedule can meet the query deadline (§3.1)."""
+
+
+class Strategy(enum.Enum):
+    """Multi-query dispatch strategies (§4.2)."""
+
+    LLF = "llf"
+    EDF = "edf"
+    SJF = "sjf"
+    RR = "rr"
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch:
+    """One scheduled batch: process ``num_tuples`` starting at ``sched_time``."""
+
+    sched_time: float
+    num_tuples: int
+
+    def __post_init__(self) -> None:
+        if self.num_tuples < 0:
+            raise ValueError(f"negative batch size {self.num_tuples}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Output of the single-query planners: Algorithm 1's (schPoints, schTuples)."""
+
+    batches: Tuple[Batch, ...]
+
+    @property
+    def sch_points(self) -> List[float]:
+        return [b.sched_time for b in self.batches]
+
+    @property
+    def sch_tuples(self) -> List[int]:
+        return [b.num_tuples for b in self.batches]
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.batches)
+
+    @property
+    def total_tuples(self) -> int:
+        return sum(b.num_tuples for b in self.batches)
+
+
+@dataclasses.dataclass
+class Query:
+    """A deadline-bound intermittent query (Table 1).
+
+    ``cost_model`` maps tuples->processing cost for one batch;
+    ``arrival`` models the input stream rate (InputTime / tuples_available).
+    """
+
+    query_id: str
+    wind_start: float
+    wind_end: float
+    deadline: float
+    num_tuples_total: int
+    cost_model: "CostModelBase"  # noqa: F821  (cost_model.py)
+    arrival: "ArrivalModel"  # noqa: F821  (arrivals.py)
+    # Optional distinct final-aggregation model; defaults to cost_model.agg_cost.
+    submit_time: Optional[float] = None  # when the query enters the system (§4)
+
+    def __post_init__(self) -> None:
+        if self.wind_end < self.wind_start:
+            raise ValueError("wind_end < wind_start")
+        if self.submit_time is None:
+            self.submit_time = self.wind_start
+
+    @property
+    def min_comp_cost(self) -> float:
+        """minCompCost: cost of processing all tuples in a single batch (Table 1)."""
+        return self.cost_model.cost(self.num_tuples_total)
+
+    @property
+    def slack_time(self) -> float:
+        """Eq. (2): slackTime = deadline - windEndTime - minCompCost."""
+        return self.deadline - self.wind_end - self.min_comp_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchExecution:
+    """One executed batch in a trace (simulator / real executor)."""
+
+    query_id: str
+    start: float
+    end: float
+    num_tuples: int
+    kind: str = "batch"  # "batch" | "final_agg"
+
+
+@dataclasses.dataclass
+class QueryOutcome:
+    query_id: str
+    completion_time: float
+    deadline: float
+    total_cost: float
+    num_batches: int
+
+    @property
+    def met_deadline(self) -> bool:
+        # Allow tiny float slop from accumulated arithmetic.
+        return self.completion_time <= self.deadline + 1e-9
+
+
+@dataclasses.dataclass
+class ExecutionTrace:
+    executions: List[BatchExecution] = dataclasses.field(default_factory=list)
+    outcomes: List[QueryOutcome] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(e.end - e.start for e in self.executions)
+
+    def outcome(self, query_id: str) -> QueryOutcome:
+        for o in self.outcomes:
+            if o.query_id == query_id:
+                return o
+        raise KeyError(query_id)
+
+    @property
+    def all_met(self) -> bool:
+        return all(o.met_deadline for o in self.outcomes)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: flash attention forward (causal / sliding-window /
+GQA / logit soft-cap).
+
+Grid: (B, H, num_q_blocks, num_k_blocks).  The last grid dimension is
+sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+scratch and persists across k-blocks; the normalised output is written on
+the final k-block.  GQA maps query head h to KV head h // group in the
+K/V BlockSpec index maps — KV blocks are never replicated in HBM.
+
+Block shapes: q (BQ, D), k/v (BK, D) with D the head dim (128-lane aligned
+for the MXU); the (BQ, BK) logit tile exists only in VMEM — this is what
+removes the O(S*chunk) HBM traffic of the XLA-lowered jnp path (see
+EXPERIMENTS.md §Perf, iteration 1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -2.0 ** 30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      scale: float, causal: bool, window: int,
+                      logit_cap: float, bq: int, bk: int, nk: int,
+                      seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Skip tiles that are fully masked (above the causal diagonal or outside
+    # the sliding window) — no MXU work is issued for them.
+    live = True
+    if causal:
+        live = jnp.logical_and(live, qi * bq + bq - 1 >= ki * bk)
+    if window > 0:
+        live = jnp.logical_and(live, ki * bk + bk - 1 > qi * bq - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (BQ, BK)
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        ok = k_pos < seq_k
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window > 0:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                   # (BQ, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (BQ, D)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention_pallas(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, Hkv, Sk, D)
+    v: jax.Array,            # (B, Hkv, Sk, D)
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    seq_k: int = -1,          # true (unpadded) key length
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    seq_k = Sk if seq_k < 0 else seq_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        logit_cap=logit_cap, bq=bq, bk=bk, nk=nk, seq_k=seq_k)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+        pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+        pltpu.VMEM((bq, D), jnp.float32),   # unnormalised accumulator
+    ]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

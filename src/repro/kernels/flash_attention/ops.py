@@ -1,0 +1,45 @@
+"""Public flash-attention op: layout adaptation + padding + block sizing.
+
+Model code uses (B, S, H, D) layout; the kernel wants (B, H, S, D) with
+block-aligned sequence lengths.  On TPU (interpret=False) this is the
+production attention; the jnp path (repro.layers.attention) is the
+algorithmically identical fallback + oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+
+
+def _pad_seq(x: jax.Array, block: int) -> jax.Array:
+    s = x.shape[2]
+    pad = -s % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6))
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, D)
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = min(DEFAULT_BQ, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(DEFAULT_BK, max(8, 1 << (Sk - 1).bit_length()))
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), bq)
+    kt = _pad_seq(k.transpose(0, 2, 1, 3), bk)
+    vt = _pad_seq(v.transpose(0, 2, 1, 3), bk)
+    out = flash_attention_pallas(
+        qt, kt, vt, causal, window, logit_cap, bq, bk, Sk, interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain masked softmax
+attention (materialised S x S — fine at test sizes)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True, window=0, logit_cap=0.0, seq_k=-1):
+    """q (B,H,Sq,D), k/v (B,Hkv,Sk,D) -> (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    seq_k = Sk if seq_k < 0 else seq_k
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if logit_cap > 0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = k_pos < seq_k
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if window > 0:
+        ok = ok & (k_pos > q_pos - window)
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

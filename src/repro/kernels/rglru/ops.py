@@ -1,0 +1,39 @@
+"""Public RG-LRU recurrence op: gate math in XLA, scan in the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .rglru import BLOCK_N, BLOCK_S, rglru_pallas
+
+_C = 8.0  # Griffin decay sharpness (matches repro.layers.rglru)
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def rglru(x: jax.Array, r: jax.Array, i: jax.Array, a_param: jax.Array,
+          h0: jax.Array | None = None, interpret: bool = True):
+    """Full RG-LRU (gates + recurrence), kernel-backed.
+
+    x, r, i: (B, S, N); a_param: (N,).  Returns (y (B,S,N), h_last (B,N))."""
+    B, S, N = x.shape
+    rf = r.astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(a_param.astype(jnp.float32)) * rf
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((B, N), jnp.float32)
+
+    pad_s = -S % BLOCK_S
+    pad_n = -N % BLOCK_N
+    if pad_s or pad_n:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad_s), (0, pad_n)))
+        u = jnp.pad(u, ((0, 0), (0, pad_s), (0, pad_n)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_n)))
+    y, h_last = rglru_pallas(log_a.astype(x.dtype), u.astype(x.dtype), h0,
+                             interpret)
+    y = y[:, :S, :N]
+    # h_last must reflect the true last step, not padded steps (padded steps
+    # have log_a = 0 -> a = 1, u = 0 => state unchanged, so slicing is safe).
+    return y, h_last[:, :N]

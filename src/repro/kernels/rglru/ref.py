@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_rec_ref(log_a: jax.Array, u: jax.Array, h0: jax.Array):
+    """Sequential reference: h_t = exp(log_a_t) h_{t-1} + u_t.
+    log_a, u: (B, S, N); h0: (B, N).  Returns (y, h_last)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(h, xs):
+        at, ut = xs
+        h = at * h + ut
+        return h, h
+
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2), uf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(u.dtype), h_last

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: RG-LRU chunked linear recurrence (recurrentgemma).
+
+The recurrence h_t = a_t * h_{t-1} + b_t is memory-bound elementwise work
+(VPU, not MXU).  Grid: (B, num_width_blocks, num_seq_blocks) — the sequence
+axis is the sequential minor grid dimension, with the carried state h in
+VMEM scratch.  Within a block the recurrence runs as a fori_loop over time
+steps on (BN,)-wide vectors.
+
+Gate/decay math (sigmoid projections) stays in XLA — it is MXU matmul work
+that fuses well there; the kernel takes precomputed per-step (log_a, u) and
+does the part XLA handles badly: the sequential scan, without materialising
+per-step f32 carries in HBM (the associative_scan fallback keeps
+O(S log S) HBM traffic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128   # channel-block width (lane dim)
+BLOCK_S = 256   # time steps per grid step
+
+
+def _rglru_kernel(log_a_ref, u_ref, h0_ref, y_ref, h_last_ref, h_scr):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)    # (1, BN)
+
+    log_a = log_a_ref[0].astype(jnp.float32)            # (BS, BN)
+    u = u_ref[0].astype(jnp.float32)                    # (BS, BN)
+    a = jnp.exp(log_a)
+
+    def body(t, carry):
+        h = carry                                       # (1, BN)
+        h = a[t][None, :] * h + u[t][None, :]
+        y_ref[0, pl.ds(t, 1), :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, log_a.shape[0], body, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(si == ns - 1)
+    def _final():
+        h_last_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def rglru_pallas(log_a: jax.Array, u: jax.Array, h0: jax.Array,
+                 interpret: bool = True):
+    """log_a, u: (B, S, N) per-step decay (log) and input; h0: (B, N) f32.
+    Returns (y (B,S,N) u.dtype, h_last (B,N) f32).  S, N must be multiples
+    of the block sizes (ops pads)."""
+    B, S, N = u.shape
+    assert S % BLOCK_S == 0 and N % BLOCK_N == 0, (S, N)
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid = (B, N // BLOCK_N, S // BLOCK_S)
+    return pl.pallas_call(
+        _rglru_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_S, BLOCK_N), lambda b, n, s: (b, s, n)),
+            pl.BlockSpec((1, BLOCK_S, BLOCK_N), lambda b, n, s: (b, s, n)),
+            pl.BlockSpec((1, BLOCK_N), lambda b, n, s: (b, n)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK_S, BLOCK_N), lambda b, n, s: (b, s, n)),
+            pl.BlockSpec((1, BLOCK_N), lambda b, n, s: (b, n)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, N), u.dtype),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, BLOCK_N), jnp.float32)],
+        interpret=interpret,
+    )(log_a, u, h0)

@@ -1,0 +1,49 @@
+"""Public segagg op: padding, dtype handling, multi-level combine."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .segagg import BLOCK_G, BLOCK_N, segagg_pallas
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def segagg(keys: jax.Array, values: jax.Array, num_groups: int,
+           interpret: bool = True) -> jax.Array:
+    """GROUP-BY partial aggregation: (N,) keys + (N, V) values ->
+    (num_groups, V) f32 sums.  Pads rows/groups/width to kernel blocks;
+    padded rows are routed to a sacrificial group and sliced away.
+
+    ``interpret=True`` executes the kernel body with the Pallas interpreter
+    (CPU container); on TPU pass interpret=False.
+    """
+    N = keys.shape[0]
+    if values.ndim == 1:
+        values = values[:, None]
+    V = values.shape[1]
+    Np = _pad_to(N, BLOCK_N)
+    Gp = _pad_to(num_groups + 1, BLOCK_G)   # +1 sacrificial group for padding
+    Vp = _pad_to(V, 128)
+    keys_p = jnp.full((Np,), num_groups, jnp.int32).at[:N].set(
+        keys.astype(jnp.int32))
+    vals_p = jnp.zeros((Np, Vp), values.dtype).at[:N, :V].set(values)
+    out = segagg_pallas(keys_p, vals_p, Gp, interpret)
+    return out[:num_groups, :V]
+
+
+def group_count(keys: jax.Array, num_groups: int,
+                interpret: bool = True) -> jax.Array:
+    """COUNT(*) GROUP BY — values = ones."""
+    ones = jnp.ones((keys.shape[0], 1), jnp.float32)
+    return segagg(keys, ones, num_groups, interpret)[:, 0]
+
+
+def combine(partials: jax.Array) -> jax.Array:
+    """Final aggregation step over per-batch partials: (B, G, V) -> (G, V)."""
+    return partials.sum(axis=0)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the segagg kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segagg_ref(keys: jax.Array, values: jax.Array, num_groups: int) -> jax.Array:
+    """keys (N,) int32, values (N, V) -> (num_groups, V) f32 group sums."""
+    return jax.ops.segment_sum(
+        values.astype(jnp.float32), keys, num_segments=num_groups)
+
+
+def combine_ref(partials: jax.Array) -> jax.Array:
+    """Final aggregation (paper §2.1): sum the per-batch partials.
+    partials: (num_batches, G, V) -> (G, V)."""
+    return partials.sum(axis=0)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: blocked GROUP-BY partial aggregation (the paper's
+query-executor hot spot — CQ1..CQ4 / TPC-H COUNT/SUM GROUP BY).
+
+TPU adaptation (DESIGN.md §2): instead of a hash table (the CPU/Spark
+formulation — pointer chasing, no TPU analogue), aggregation is a blocked
+ONE-HOT MATMUL on the MXU:
+
+    partial[g, v] = sum_i  [keys_i == g] * values[i, v]
+
+Grid: (num_group_blocks, num_row_blocks).  Each instance builds the
+(BLOCK_N x BLOCK_G) one-hot membership matrix in VMEM from an iota compare
+(never in HBM) and contracts it with the (BLOCK_N x V) value block on the
+MXU, accumulating into the (BLOCK_G x V) output block across the row-block
+grid dimension (the sequential minor axis on TPU).
+
+Batches of rows become independent partial aggregates; the paper's "final
+aggregation" is then a trivial add over partials (`combine`), whose cost
+grows with num_groups x num_batches exactly as the paper's §6.2 model says.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512    # rows per block
+BLOCK_G = 256    # groups per block (lane-dim multiple of 128)
+# value width is padded to the 128-lane MXU boundary by ops.segagg
+
+
+def _segagg_kernel(keys_ref, values_ref, out_ref):
+    gi = pl.program_id(0)
+    ni = pl.program_id(1)
+
+    keys = keys_ref[...]                     # (BLOCK_N,) int32
+    vals = values_ref[...]                   # (BLOCK_N, V)
+
+    g0 = gi * BLOCK_G
+    # (BLOCK_N, BLOCK_G) one-hot membership, built in VMEM.
+    gids = g0 + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_N, BLOCK_G), 1)
+    onehot = (keys[:, None] == gids).astype(vals.dtype)
+
+    # MXU contraction: (BLOCK_G, BLOCK_N) @ (BLOCK_N, V) -> (BLOCK_G, V)
+    partial = jax.lax.dot_general(
+        onehot, vals,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ni == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def segagg_pallas(keys: jax.Array, values: jax.Array, num_groups: int,
+                  interpret: bool = True) -> jax.Array:
+    """keys: (N,) int32 in [0, num_groups); values: (N, V) float.
+    Returns (num_groups, V) f32 partial aggregate.  N, V, num_groups must be
+    pre-padded to block multiples (ops.segagg handles padding)."""
+    N, V = values.shape
+    assert N % BLOCK_N == 0 and num_groups % BLOCK_G == 0, (N, num_groups)
+    grid = (num_groups // BLOCK_G, N // BLOCK_N)
+    return pl.pallas_call(
+        _segagg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda g, n: (n,)),
+            pl.BlockSpec((BLOCK_N, V), lambda g, n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_G, V), lambda g, n: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, V), jnp.float32),
+        interpret=interpret,
+    )(keys, values)

@@ -1,0 +1,35 @@
+"""Public SSD op: dt-weighting, padding, D-skip — kernel-backed."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import CHUNK, ssd_pallas
+
+
+@functools.partial(jax.jit, static_argnums=(6,))
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, D: jax.Array, interpret: bool = True):
+    """Mamba-2 SSD, matching repro.layers.ssd.ssd_chunked semantics.
+
+    x (B,S,H,P), dt (B,S,H) positive, A (H,) negative, Bm/Cm (B,S,H,N),
+    D (H,).  Returns (y (B,S,H,P), h_last (B,H,N,P) f32)."""
+    B, S, H, P = x.shape
+    dtf = dt.astype(jnp.float32)
+    la = dtf * A.astype(jnp.float32)[None, None, :]
+    xw = x.astype(jnp.float32) * dtf[..., None]
+    pad = -S % CHUNK
+    if pad:
+        xw = jnp.pad(xw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, h_last = ssd_pallas(xw.astype(x.dtype), la, Bm, Cm, interpret)
+    y = y[:, :S]
+    y = y.astype(jnp.float32) + x.astype(jnp.float32) * \
+        D.astype(jnp.float32)[None, None, :, None]
+    # padded steps: la = 0 -> exp(0)=1 state decay, x = 0 -> no update, so
+    # h_last after padding equals h_last at step S.
+    return y.astype(x.dtype), h_last

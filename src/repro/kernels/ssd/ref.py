@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential SSM recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_rec_ref(x, la, Bm, Cm):
+    """Sequential recurrence reference.
+
+    x (B,S,H,P) dt-weighted, la (B,S,H) log-decay, Bm/Cm (B,S,H,N).
+    h_t = exp(la_t) h_{t-1} + B_t x_t^T ;  y_t = C_t h_t.
+    Returns (y (B,S,H,P), h_last (B,H,N,P))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, xs):
+        xt, lat, bt, ct = xs
+        h = jnp.exp(lat.astype(jnp.float32))[..., None, None] * h + jnp.einsum(
+            "bhn,bhp->bhnp", bt.astype(jnp.float32), xt.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2, 3), la.transpose(1, 0, 2),
+         Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_last

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked forward.
+
+Grid: (B, H, num_chunks) — chunks are the sequential minor grid dim; the
+(N, P) recurrent state lives in VMEM scratch.  Per chunk, everything is MXU
+matmul work (the whole point of SSD):
+
+    G        = (C_q B_q^T) .* decay_mask          (Q x Q)
+    y_intra  = G @ X                              (Q x P)
+    y_inter  = (C_q @ h) .* decay_in              (Q x P)
+    h'       = exp(total) h + (B_q .* w)^T @ X    (N x P)
+
+Inputs are pre-projected (B,S,H,*) tensors (the projections are dense
+matmuls XLA already handles); dt-weighting is folded into X by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 128
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, hlast_ref, h_scr):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    la = la_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    Bq = b_ref[0, :, 0, :].astype(jnp.float32)     # (Q, N)
+    Cq = c_ref[0, :, 0, :].astype(jnp.float32)     # (Q, N)
+    h = h_scr[...]                                  # (N, P)
+
+    cum = jnp.cumsum(la)                            # (Q,)
+    total = cum[-1]
+    Q = x.shape[0]
+
+    # intra-chunk: decay(t,s) = exp(cum_t - cum_s), s <= t
+    dmat = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    dmat = jnp.where(tri, jnp.exp(dmat), 0.0)
+    G = jax.lax.dot_general(Cq, Bq, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * dmat
+    y = jax.lax.dot_general(G, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: incoming state
+    y += jax.lax.dot_general(Cq, h, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+
+    # state update
+    w = jnp.exp(total - cum)                        # (Q,)
+    dB = Bq * w[:, None]
+    h_new = jnp.exp(total) * h + jax.lax.dot_general(
+        dB, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        hlast_ref[0, 0] = h_new
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def ssd_pallas(x: jax.Array, la: jax.Array, Bm: jax.Array, Cm: jax.Array,
+               interpret: bool = True):
+    """x: (B,S,H,P) dt-weighted input; la: (B,S,H) per-step log decay;
+    Bm/Cm: (B,S,H,N).  S must be a CHUNK multiple (ops pads).
+    Returns (y (B,S,H,P) f32-accurate in x.dtype, h_last (B,H,N,P) f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % CHUNK == 0, S
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid = (B, H, S // CHUNK)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CHUNK, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, CHUNK, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, CHUNK, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, CHUNK, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, CHUNK, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, la, Bm, Cm)

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture x input-shape) cell, on the single-pod (16x16) and
+multi-pod (2x16x16) production meshes:
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves it fits 16 GiB/chip
+    print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+COMPOSITIONAL COSTING.  XLA's cost_analysis counts while-loop bodies ONCE
+(verified empirically), so the depth-scanned full program under-reports
+flops/bytes/collectives by ~the layer count.  Costs are therefore measured
+compositionally, which is exact for scans (every trip is identical):
+
+    cost(U1..Uk) = base + sum_s U_s * unit_s
+    base        = cost(model with zero layers)         [embed+loss+optimizer]
+    unit_s      = cost(model with only segment s, 1 unit) - base
+
+The cost variants set ``inner_unroll`` so attention/SSD chunk scans are fully
+unrolled (counted exactly); the PRODUCTION program (scanned, not unrolled) is
+still lowered AND compiled for the memory_analysis fit proof and the
+compile-coherence proof.  Both artifacts are recorded.
+
+Results are cached as JSON under benchmarks/results/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi_6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.dist.roofline import Roofline, parse_collectives
+from repro.launch.mesh import (
+    HBM_BYTES,
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.launch.steps import build_cell_program, model_specs
+from repro.models.base import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.models.params import num_params
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+ICI_LINKS = 4
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE experts scaled by top_k/E)."""
+    specs = model_specs(cfg)
+    total = 0
+    for s in specs.values():
+        n = int(np.prod(s.shape))
+        if "experts" in s.axes and cfg.num_experts:
+            n = int(n * cfg.top_k / cfg.num_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS (param-matmul only: 6*N*D train, 2*N*D fwd)."""
+    n_act = active_params(cfg)
+    if cell.kind == "train":
+        return 6.0 * n_act * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_act * cell.global_batch * cell.seq_len
+    return 2.0 * n_act * cell.global_batch
+
+
+def _segment_variants(cfg):
+    """(zero-layer cfg, [(segment_index, one-unit cfg, num_units)])."""
+    base = dataclasses.replace(cfg, segments=(), encoder_segments=(),
+                               inner_unroll=True)
+    variants = []
+    for si, seg in enumerate(cfg.segments):
+        one = dataclasses.replace(
+            cfg, segments=(dataclasses.replace(seg, num_units=1),),
+            encoder_segments=(), inner_unroll=True)
+        variants.append(("dec", si, one, seg.num_units))
+    for si, seg in enumerate(cfg.encoder_segments):
+        one = dataclasses.replace(
+            cfg, segments=(),
+            encoder_segments=(dataclasses.replace(seg, num_units=1),),
+            inner_unroll=True)
+        variants.append(("enc", si, one, seg.num_units))
+    return base, variants
+
+
+def _measure(cfg, cell, mesh):
+    """cost_analysis + collective stats for one variant program."""
+    prog = build_cell_program(cfg, cell, mesh)
+    with mesh:
+        compiled = prog.jitted().lower(*prog.args).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": colls.total_bytes,
+        "coll_counts": colls.counts,
+    }
+
+
+def _combine(base, units):
+    """base + sum U_s * (unit_s - base), element-wise on cost dicts."""
+    out = {
+        "flops": base["flops"],
+        "bytes": base["bytes"],
+        "coll_bytes": base["coll_bytes"],
+        "coll_counts": dict(base["coll_counts"]),
+    }
+    for meas, U in units:
+        for key in ("flops", "bytes", "coll_bytes"):
+            out[key] += U * max(meas[key] - base[key], 0.0)
+        for k, c in meas["coll_counts"].items():
+            delta = c - base["coll_counts"].get(k, 0)
+            if delta > 0:
+                out["coll_counts"][k] = out["coll_counts"].get(k, 0) + U * delta
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    skip = cell_supported(cfg, cell)
+    if skip:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nchips = int(np.prod(list(mesh.shape.values())))
+
+    # ---- production program: compile-coherence + memory-fit proof ---------
+    t0 = time.time()
+    prog = build_cell_program(cfg, cell, mesh)
+    with mesh:
+        lowered = prog.jitted().lower(*prog.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        print(ma)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+
+    # ---- compositional costing (unrolled variants) -------------------------
+    base_cfg, variants = _segment_variants(cfg)
+    base = _measure(base_cfg, cell, mesh)
+    units = [(_measure(vcfg, cell, mesh), U) for _, _, vcfg, U in variants]
+    cost = _combine(base, units)
+
+    roof = Roofline(
+        compute_s=cost["flops"] / PEAK_FLOPS_BF16,
+        memory_s=cost["bytes"] / HBM_BW,
+        collective_s=cost["coll_bytes"] / (ICI_BW_PER_LINK * ICI_LINKS),
+        flops_per_chip=cost["flops"],
+        bytes_per_chip=cost["bytes"],
+        collective_bytes_per_chip=cost["coll_bytes"],
+        collective_counts=cost["coll_counts"],
+    )
+
+    mf = model_flops(cfg, cell)
+    hlo_flops_total = roof.flops_per_chip * nchips
+    peak_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                  + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "chips": nchips,
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "params": num_params(model_specs(cfg)),
+        "active_params": active_params(cfg),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_chip": peak_bytes,
+            "fits_hbm": bool(peak_bytes < HBM_BYTES),
+        },
+        "roofline": roof.as_dict(),
+        "model_flops_total": mf,
+        "hlo_flops_total": hlo_flops_total,
+        "useful_flops_ratio": mf / hlo_flops_total if hlo_flops_total else None,
+        "mfu_bound": mf / (nchips * PEAK_FLOPS_BF16 * roof.step_seconds)
+        if roof.step_seconds else None,
+    }
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> pathlib.Path:
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                out = cell_path(arch, shape, mesh_name)
+                if out.exists() and not args.force:
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") != "error":
+                        print(f"[cached] {arch} x {shape} x {mesh_name}")
+                        continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi)
+                except Exception as e:  # record failures — they are bugs
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                out.write_text(json.dumps(rec, indent=2))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" step={r['step_seconds']:.4f}s"
+                             f" mem={rec['memory']['peak_bytes_per_chip']/2**30:.2f}GiB"
+                             f" fits={rec['memory']['fits_hbm']}"
+                             f" mfu_bound={rec['mfu_bound']:.3f}")
+                print(f"[{status}] {arch} x {shape} x {mesh_name}{extra}",
+                      flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

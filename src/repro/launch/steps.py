@@ -1,0 +1,230 @@
+"""Step-function builders: one (arch x shape x mesh) cell -> jitted fn +
+ShapeDtypeStruct example args + in/out shardings.
+
+Used by the dry-run (lower+compile only), the trainer and the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import (
+    cache_pspecs,
+    input_pspecs,
+    param_pspecs,
+    param_shardings,
+)
+from ..models import lm
+from ..models.base import ShapeCell, input_specs as model_input_specs
+from ..models.config import ModelConfig
+from ..models.encdec import build_encdec_specs, encdec_loss
+from ..models.params import shape_structs
+from ..train.optimizer import (
+    AdamWConfig,
+    TrainState,
+    apply_updates,
+    cast_params,
+    state_shape_structs,
+)
+
+
+@dataclasses.dataclass
+class CellProgram:
+    fn: Callable
+    args: Tuple[Any, ...]             # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def model_specs(cfg: ModelConfig):
+    return build_encdec_specs(cfg) if cfg.family == "audio" else lm.build_specs(cfg)
+
+
+def loss_fn_for(cfg: ModelConfig):
+    return encdec_loss if cfg.family == "audio" else lm.lm_loss
+
+
+def _replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train_program(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                        adamw: AdamWConfig = AdamWConfig(),
+                        remat: bool = True) -> CellProgram:
+    specs = model_specs(cfg)
+    pstructs = shape_structs(specs)
+    state_structs = state_shape_structs(pstructs)
+    in_structs = model_input_specs(cfg, cell)
+    loss_fn = loss_fn_for(cfg)
+
+    pspecs = param_pspecs(specs, mesh)
+    pshard = {k: NamedSharding(mesh, s) for k, s in pspecs.items()}
+
+    nmicro = max(cfg.train_microbatches, 1)
+    if cell.global_batch % nmicro:
+        nmicro = 1
+
+    def train_step(state: TrainState, batch):
+        def scalar_loss(masters, mb):
+            # bf16 compute copies, explicitly pinned to the param sharding:
+            # these are the scan xs, and the backward builds the stacked
+            # grad accumulator with the same spec (otherwise Shardy loses it
+            # through the while-loop cotangent and replicates multi-GiB
+            # buffers).
+            p = {k: jax.lax.with_sharding_constraint(
+                    v.astype(jnp.bfloat16), pshard[k])
+                 for k, v in masters.items()}
+            loss, metrics = loss_fn(cfg, p, mb, remat=remat)
+            return loss, metrics
+
+        if nmicro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                scalar_loss, has_aux=True)(state.params, batch)
+        else:
+            # Gradient accumulation: split the global batch into nmicro
+            # microbatches, scan, and average grads in f32.  This is what
+            # keeps the biggest train cells (mixtral/internvl2 @ B=256,
+            # S=4096) inside 16 GiB/chip.
+            from ..dist.sharding import batch_spec
+
+            # Keep the microbatch dim unsharded and re-pin the row dim to
+            # the DP axes — without the constraint SPMD resolves the
+            # reshape by full rematerialisation (replicate-then-reshard).
+            mbs = {k: jax.lax.with_sharding_constraint(
+                       v.reshape((nmicro, v.shape[0] // nmicro) + v.shape[1:]),
+                       NamedSharding(mesh, P(None, *batch_spec(
+                           mesh, v.shape[0] // nmicro, v.ndim))))
+                   for k, v in batch.items()}
+
+            def micro(acc, mb):
+                g_acc, loss_acc = acc
+                (loss, metrics), g = jax.value_and_grad(
+                    scalar_loss, has_aux=True)(state.params, mb)
+                g_acc = {k: g_acc[k] + g[k].astype(jnp.float32)
+                         for k in g_acc}
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = {k: jnp.zeros(v.shape, jnp.float32)
+                  for k, v in state.params.items()}
+            g0 = {k: jax.lax.with_sharding_constraint(v, pshard[k])
+                  for k, v in g0.items()}
+            (grads, loss_sum), metrics = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), mbs,
+                unroll=nmicro if cfg.inner_unroll else 1)
+            grads = {k: g / nmicro for k, g in grads.items()}
+            loss = loss_sum / nmicro
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+
+        # Pin gradient shardings to the parameter shardings BEFORE the
+        # optimizer: sharding propagation loses the spec for scan-stacked
+        # cotangents and otherwise materialises replicated full-size
+        # weight-gradient buffers (observed: 5.8 GiB f32[32,4096,11008]
+        # per chip for yi-6b).
+        grads = {k: jax.lax.with_sharding_constraint(g, pshard[k])
+                 for k, g in grads.items()}
+        new_state, opt_metrics = apply_updates(state, grads, adamw)
+        out_metrics = {"loss": loss, **{k: v for k, v in metrics.items()},
+                       **opt_metrics}
+        return new_state, out_metrics
+    state_shard = TrainState(params=pshard, m=dict(pshard), v=dict(pshard),
+                             step=_replicated(mesh))
+    batch_shard = {k: NamedSharding(mesh, s)
+                   for k, s in input_pspecs(in_structs, mesh).items()}
+    metrics_shard = None  # compiler-chosen
+    return CellProgram(
+        fn=train_step,
+        args=(state_structs, in_structs),
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, metrics_shard),
+        donate_argnums=(0,),
+    )
+
+
+def build_prefill_program(cfg: ModelConfig, cell: ShapeCell,
+                          mesh: Mesh) -> CellProgram:
+    specs = model_specs(cfg)
+    pstructs = shape_structs(specs)
+    in_structs = model_input_specs(cfg, cell)
+    pshard = param_shardings(specs, mesh)
+    batch_shard = {k: NamedSharding(mesh, s)
+                   for k, s in input_pspecs(in_structs, mesh).items()}
+
+    cache_structs = lm.cache_shape_specs(cfg, cell.global_batch, cell.seq_len)
+    cache_shard = {k: NamedSharding(mesh, s)
+                   for k, s in cache_pspecs(cfg, cache_structs, mesh).items()}
+
+    if cfg.family == "audio":
+        from ..models.encdec import encdec_prefill
+
+        def prefill_step(params, batch):
+            logits, cache, clen, _ = encdec_prefill(
+                cfg, params, batch["frames"], batch["tokens"], cell.seq_len)
+            return logits, cache, clen
+    else:
+        def prefill_step(params, batch):
+            logits, cache, clen = lm.prefill(
+                cfg, params, batch["tokens"], cell.seq_len,
+                patches=batch.get("patches"))
+            return logits, cache, clen
+
+    return CellProgram(
+        fn=prefill_step,
+        args=(pstructs, in_structs),
+        in_shardings=(pshard, batch_shard),
+        out_shardings=(None, cache_shard, None),
+    )
+
+
+def build_decode_program(cfg: ModelConfig, cell: ShapeCell,
+                         mesh: Mesh) -> CellProgram:
+    """serve_step: one new token against a seq_len-deep cache."""
+    specs = model_specs(cfg)
+    pstructs = shape_structs(specs)
+    pshard = param_shardings(specs, mesh)
+    B = cell.global_batch
+    cache_structs = lm.cache_shape_specs(cfg, B, cell.seq_len)
+    cache_shard = {k: NamedSharding(mesh, s)
+                   for k, s in cache_pspecs(cfg, cache_structs, mesh).items()}
+    tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh, input_pspecs({"tokens": tok_struct}, mesh)["tokens"])
+    clen_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, cache_len, tokens):
+        return lm.decode_step(cfg, params, cache, cache_len, tokens)
+
+    return CellProgram(
+        fn=serve_step,
+        args=(pstructs, cache_structs, clen_struct, tok_struct),
+        in_shardings=(pshard, cache_shard, _replicated(mesh), tok_shard),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(1,),
+    )
+
+
+def build_cell_program(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                       **kw) -> CellProgram:
+    if cell.kind == "train":
+        return build_train_program(cfg, cell, mesh, **kw)
+    if cell.kind == "prefill":
+        return build_prefill_program(cfg, cell, mesh)
+    if cell.kind == "decode":
+        return build_decode_program(cfg, cell, mesh)
+    raise ValueError(cell.kind)

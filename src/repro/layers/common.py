@@ -1,0 +1,115 @@
+"""Shared layer primitives: norms, RoPE variants, gated MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    # (1 + scale) convention: zero-initialised scale params == identity norm.
+    out = out * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    """Inverse frequencies for the rotating half of the head dim."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0, rotary_frac: float = 1.0) -> jax.Array:
+    """Rotary embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    ``rotary_frac`` < 1 rotates only the leading fraction of the head dim —
+    ChatGLM's "2d RoPE" rotates half the head dim and leaves the rest as-is
+    (the second 'dimension' carried positionally), which is what we implement
+    for ``rotary_frac=0.5``.
+    """
+    d = x.shape[-1]
+    rot_d = int(d * rotary_frac)
+    if rot_d == 0:
+        return x
+    rot_d -= rot_d % 2
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+    inv = rope_frequencies(rot_d, theta)  # (rot_d/2,)
+    ang = positions.astype(jnp.float32)[..., None, None] * inv  # (...,S,1,rot_d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x_rot[..., 0::2].astype(jnp.float32), x_rot[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if x_pass.shape[-1] else out
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """SwiGLU/GeGLU feed-forward: down( act(x@gate) * (x@up) )."""
+    h_g = jnp.einsum("...d,df->...f", x, w_gate)
+    h_u = jnp.einsum("...d,df->...f", x, w_up)
+    h = _activate(h_g, act) * h_u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+        b_up: Optional[jax.Array] = None, b_down: Optional[jax.Array] = None,
+        act: str = "gelu") -> jax.Array:
+    """Plain two-matrix feed-forward (whisper, starcoder-style)."""
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    if b_up is not None:
+        h = h + b_up
+    h = _activate(h, act)
+    out = jnp.einsum("...f,fd->...d", h, w_down)
+    if b_down is not None:
+        out = out + b_down
+    return out
+
+
+def sinusoidal_at(positions: jax.Array, d_model: int,
+                  dtype=jnp.float32) -> jax.Array:
+    """Sinusoidal absolute-position embeddings at arbitrary positions.
+    positions: (S,) -> (S, d_model)."""
+    import math as _math
+
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-_math.log(10_000.0) * dim / max(d_model // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _activate(x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {act!r}")

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts with token-choice top-k routing (GShard-style grouped
+dense dispatch — the TPU-native formulation: dispatch/combine are einsums on
+the MXU, expert parallelism falls out of sharding the expert/ffn dims).
+
+Tokens are processed in GROUPS of <= ``group_size`` (a batch row is split
+into sequence chunks): the dispatch tensor is (G, Tg, E, Cap) with
+Cap = k * Tg * capacity_factor / E, so its footprint is linear in total
+tokens (a flat dispatch over all tokens would be quadratic — infeasible at
+the 1M-token train step of mixtral/train_4k).
+
+Used by olmoe-1b-7b (64 experts, top-8) and mixtral-8x22b (8 experts, top-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import _activate
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    renormalize: bool = True   # mixtral/olmoe renormalize top-k gates
+    group_size: int = 2048     # tokens per dispatch group
+
+
+def route_group(gate_logits: jax.Array, spec: MoESpec, cap: int):
+    """Top-k routing within token groups.  gate_logits: (G, Tg, E).
+
+    Returns (dispatch (G,Tg,E,cap), combine (G,Tg,E,cap), aux_loss scalar).
+    """
+    G, Tg, E = gate_logits.shape
+    probs = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, spec.top_k)            # (G,Tg,k)
+    if spec.renormalize:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9
+        )
+
+    # Slot assignment: order token-choices (t, k) lexicographically within the
+    # group, count prior assignments to the same expert.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)           # (G,Tg,k,E)
+    flat = onehot.reshape(G, Tg * spec.top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                             # 0-based slots
+    slot = (pos.reshape(G, Tg, spec.top_k, E) * onehot).sum(-1).astype(jnp.int32)
+    keep = slot < cap
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, slot_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, slot_oh, gate_vals)
+
+    # Switch-style load-balance aux loss, over all tokens.
+    frac_tokens = jnp.mean(onehot.sum(2).reshape(-1, E), axis=0)
+    frac_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) / spec.top_k
+    return dispatch, combine, aux
+
+
+def moe_ffn(
+    x: jax.Array,          # (B, S, D)
+    gate_w: jax.Array,     # (D, E) router
+    w_gate: jax.Array,     # (E, D, F) expert gate proj
+    w_up: jax.Array,       # (E, D, F)
+    w_down: jax.Array,     # (E, F, D)
+    spec: MoESpec,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,D), aux_loss)."""
+    from ..dist.context import constrain
+
+    B, S, D = x.shape
+    Tg = min(spec.group_size, S)
+    assert S % Tg == 0, (S, Tg)
+    G = B * (S // Tg)
+    xt = x.reshape(G, Tg, D)
+    cap = int(max(spec.top_k * Tg * spec.capacity_factor / spec.num_experts, 4))
+    # hardware-align the expert buffer for the MXU
+    cap = -(-cap // 8) * 8
+    # The dispatch/combine tensors are the MoE memory hot spot (G,Tg,E,cap);
+    # pin the group dim to the DP axes (propagation loses it through
+    # cumsum/top_k and replicates multi-GiB buffers) and carry them in the
+    # compute dtype.
+    xt = constrain(xt, "batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xt, gate_w)
+    dispatch, combine, aux = route_group(logits, spec, cap)
+    dd = constrain(dispatch.astype(x.dtype), "batch", None, None, None)
+    cc = constrain(combine.astype(x.dtype), "batch", None, None, None)
+    xe = jnp.einsum("gtd,gtec->gecd", xt, dd)                 # (G,E,cap,D)
+    h = _activate(jnp.einsum("gecd,edf->gecf", xe, w_gate), spec.act)
+    h = h * jnp.einsum("gecd,edf->gecf", xe, w_up)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_down)              # (G,E,cap,D)
+    y = jnp.einsum("gecd,gtec->gtd", ye, cc)
+    return y.reshape(B, S, D).astype(x.dtype), aux

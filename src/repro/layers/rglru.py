@@ -1,0 +1,85 @@
+"""RG-LRU: the Real-Gated Linear Recurrent Unit (Griffin / RecurrentGemma,
+arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t + b_r)                    (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)                    (input gate)
+    a_t = exp(-c * softplus(a_param) * r_t)         (per-channel decay, c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses an associative scan over the sequence (the recurrence is
+a first-order linear scan, so log-depth parallel); the Pallas kernel
+(``repro.kernels.rglru``) implements the same chunked recurrence for TPU.
+Decode is the single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+def _log_a(a_param: jax.Array, r: jax.Array) -> jax.Array:
+    """log a_t = -c * softplus(a_param) * r_t  (always < 0, stable)."""
+    return -_C * jax.nn.softplus(a_param.astype(jnp.float32)) * r
+
+
+def rglru_scan(
+    x: jax.Array,        # (B, S, N) gated input
+    r: jax.Array,        # (B, S, N) recurrence gate, in (0,1)
+    i: jax.Array,        # (B, S, N) input gate, in (0,1)
+    a_param: jax.Array,  # (N,)
+    h0: jax.Array | None = None,  # (B, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,N), h_last (B,N)).  f32 state, cast back to x.dtype."""
+    B, S, N = x.shape
+    rf = r.astype(jnp.float32)
+    log_a = _log_a(a_param, rf)                       # (B,S,N)
+    a = jnp.exp(log_a)
+    gated = (i.astype(jnp.float32) * x.astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * gated                                   # (B,S,N)
+    if h0 is not None:
+        # fold h0 in as a virtual step: h_t = a_t h_{t-1} + u_t
+        u = u.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(
+    x: jax.Array,        # (B, N)
+    r: jax.Array,        # (B, N)
+    i: jax.Array,        # (B, N)
+    a_param: jax.Array,  # (N,)
+    h: jax.Array,        # (B, N) carried state (f32)
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step; returns (y (B,N), h_new (B,N) f32)."""
+    rf = r.astype(jnp.float32)
+    log_a = _log_a(a_param, rf)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h_new = a * h + beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return h_new.astype(x.dtype), h_new
+
+
+def short_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise temporal conv (width T), causal.  x: (B,S,N), w: (T,N).
+
+    Returns (y, new_state) where state carries the last T-1 inputs for
+    decode continuation; pass state=(B,T-1,N) and S=1 for decode.
+    """
+    B, S, N = x.shape
+    T = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, T - 1, N), x.dtype)
+    xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+T-1, N)
+    y = sum(
+        xx[:, t : t + S, :] * w[t][None, None, :] for t in range(T)
+    )
+    return y.astype(x.dtype), xx[:, -(T - 1):, :]

@@ -1,0 +1,108 @@
+"""Mamba-2 SSD — State-Space Duality (arXiv:2405.21060), chunked form.
+
+The SSD recurrence per head (state N = d_state, head dim P):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t  x_t^T      (N x P state)
+    y_t = C_t h_t + D * x_t
+
+The chunked ("block-decomposition") algorithm computes, per chunk of length
+Q: the intra-chunk quadratic term (an attention-like masked matmul — MXU
+friendly) and the inter-chunk term through the running state.  This is the
+TPU-native mapping of the paper's insight: all heavy ops are matmuls.
+The Pallas kernel (``repro.kernels.ssd``) implements the same blocking; this
+jnp version is the oracle and the dry-run path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, S, H, P)  input (already gated/conv'd)
+    dt: jax.Array,      # (B, S, H)     positive step sizes
+    A: jax.Array,       # (H,)          negative decay rates (A = -softplus(a))
+    Bm: jax.Array,      # (B, S, H, N)  input projection ("B" matrix)
+    Cm: jax.Array,      # (B, S, H, N)  output projection ("C" matrix)
+    D: jax.Array,       # (H,)          skip gain
+    chunk: int = 128,
+    h0: jax.Array | None = None,  # (B, H, N, P)
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), h_last (B,H,N,P) f32)."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    # per-step log decay: la_t = dt_t * A_h  (<= 0)
+    la = dtf * Af[None, None, :]                                  # (B,S',H)
+    xw = x.astype(jnp.float32) * dtf[..., None]                   # dt-weighted input
+
+    xc = xw.reshape(B_, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    lac = la.reshape(B_, nc, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bm.astype(jnp.float32).reshape(B_, nc, Q, H, N).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.astype(jnp.float32).reshape(B_, nc, Q, H, N).transpose(1, 0, 2, 3, 4)
+
+    h_init = (
+        jnp.zeros((B_, H, N, P), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def step(h, xs):
+        xq, laq, Bq, Cq = xs           # (B,Q,H,P), (B,Q,H), (B,Q,H,N) x2
+        cum = jnp.cumsum(laq, axis=1)  # (B,Q,H) running log-decay in chunk
+        total = cum[:, -1]             # (B,H)
+        # ---- intra-chunk (quadratic, matmul): y_intra[t] = sum_{s<=t} ...
+        # decay(t,s) = exp(cum_t - cum_s) for s <= t
+        dmat = cum[:, :, None, :] - cum[:, None, :, :]            # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        dmat = jnp.where(tri, jnp.exp(dmat), 0.0)
+        g = jnp.einsum("bqhn,bshn->bqsh", Cq, Bq) * dmat          # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", g, xq)
+        # ---- inter-chunk: contribution of the incoming state
+        decay_in = jnp.exp(cum)                                    # (B,Q,H)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", Cq, h) * decay_in[..., None]
+        # ---- state update: h' = exp(total) h + sum_s exp(total-cum_s) B_s x_s^T
+        w = jnp.exp(total[:, None, :] - cum)                       # (B,Q,H)
+        dB = Bq * w[..., None]
+        h_new = jnp.exp(total)[..., None, None] * h + jnp.einsum(
+            "bqhn,bqhp->bhnp", dB, xq
+        )
+        return h_new, y_intra + y_inter
+
+    h_last, yc = jax.lax.scan(step, h_init, (xc, lac, Bc, Cc),
+                              unroll=nc if unroll else 1)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B_, nc * Q, H, P)[:, :S]
+    y = y + x.astype(jnp.float32)[:, :S] * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_step(
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, H, N)
+    Cm: jax.Array,     # (B, H, N)
+    D: jax.Array,      # (H,)
+    h: jax.Array,      # (B, H, N, P) f32
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step of the SSD recurrence."""
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32)[None, :])            # (B,H)
+    xw = x.astype(jnp.float32) * dtf[..., None]                  # (B,H,P)
+    h_new = a[..., None, None] * h + jnp.einsum(
+        "bhn,bhp->bhnp", Bm.astype(jnp.float32), xw
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), h_new)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h_new

@@ -1,0 +1,743 @@
+"""Unified decoder-only LM covering dense / MoE / hybrid (RG-LRU) / SSM / VLM
+families.  One code path, driven by ModelConfig.segments; every segment scans
+over its units so lowered-HLO size and compile time are depth-independent.
+
+Conventions:
+* params: flat dict  "seg{i}/l{j}/<block>/<leaf>" -> (U, ...) stacked arrays
+* cache:  flat dict  "seg{i}/l{j}/<leaf>"          -> (U, B, ...) stacked
+* logical axes per leaf drive sharding (see repro.dist.sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.context import constrain
+from ..layers.attention import AttnSpec, chunked_attention, decode_attention
+from ..layers.common import apply_rope, gated_mlp, layer_norm, mlp, rms_norm
+from ..layers.moe import MoESpec, moe_ffn
+from ..layers.rglru import rglru_scan, rglru_step, short_conv1d
+from ..layers.ssd import ssd_chunked, ssd_step
+from .config import ModelConfig, Segment
+from .params import ParamSpec, Specs
+
+Params = Dict[str, jax.Array]
+Cache = Dict[str, jax.Array]
+
+
+# ===========================================================================
+# Parameter specs
+# ===========================================================================
+
+def _attn_specs(cfg: ModelConfig, u: int, p: str, cross: bool = False) -> Specs:
+    D, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s: Specs = {
+        f"{p}/norm": ParamSpec((u, D), ("layers", "embed"), init="zeros"),
+        f"{p}/wq": ParamSpec((u, D, H, Dh), ("layers", "embed", "heads", None)),
+        f"{p}/wk": ParamSpec((u, D, Hkv, Dh), ("layers", "embed", "kv_heads", None)),
+        f"{p}/wv": ParamSpec((u, D, Hkv, Dh), ("layers", "embed", "kv_heads", None)),
+        f"{p}/wo": ParamSpec((u, H, Dh, D), ("layers", "heads", None, "embed"),
+                             fan_in_axis=1),
+    }
+    if cfg.norm == "ln":
+        s[f"{p}/norm_bias"] = ParamSpec((u, D), ("layers", "embed"), init="zeros")
+    if cfg.bias:
+        s[f"{p}/bq"] = ParamSpec((u, H, Dh), ("layers", "heads", None), init="zeros")
+        s[f"{p}/bk"] = ParamSpec((u, Hkv, Dh), ("layers", "kv_heads", None), init="zeros")
+        s[f"{p}/bv"] = ParamSpec((u, Hkv, Dh), ("layers", "kv_heads", None), init="zeros")
+        s[f"{p}/bo"] = ParamSpec((u, D), ("layers", "embed"), init="zeros")
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, u: int, p: str) -> Specs:
+    D, F = cfg.d_model, cfg.d_ff
+    s: Specs = {
+        f"{p}/norm": ParamSpec((u, D), ("layers", "embed"), init="zeros"),
+    }
+    if cfg.norm == "ln":
+        s[f"{p}/norm_bias"] = ParamSpec((u, D), ("layers", "embed"), init="zeros")
+    if cfg.mlp_gated:
+        s[f"{p}/w_gate"] = ParamSpec((u, D, F), ("layers", "embed", "ffn"))
+        s[f"{p}/w_up"] = ParamSpec((u, D, F), ("layers", "embed", "ffn"))
+        s[f"{p}/w_down"] = ParamSpec((u, F, D), ("layers", "ffn", "embed"))
+    else:
+        s[f"{p}/w_up"] = ParamSpec((u, D, F), ("layers", "embed", "ffn"))
+        s[f"{p}/w_down"] = ParamSpec((u, F, D), ("layers", "ffn", "embed"))
+        if cfg.bias:
+            s[f"{p}/b_up"] = ParamSpec((u, F), ("layers", "ffn"), init="zeros")
+            s[f"{p}/b_down"] = ParamSpec((u, D), ("layers", "embed"), init="zeros")
+    return s
+
+
+def _moe_specs(cfg: ModelConfig, u: int, p: str) -> Specs:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.expert_d_ff or cfg.d_ff
+    return {
+        f"{p}/norm": ParamSpec((u, D), ("layers", "embed"), init="zeros"),
+        f"{p}/router": ParamSpec((u, D, E), ("layers", "embed", None)),
+        f"{p}/w_gate": ParamSpec((u, E, D, F), ("layers", "experts", "embed", "ffn")),
+        f"{p}/w_up": ParamSpec((u, E, D, F), ("layers", "experts", "embed", "ffn")),
+        f"{p}/w_down": ParamSpec((u, E, F, D), ("layers", "experts", "ffn", "embed"),
+                                 fan_in_axis=2),
+    }
+
+
+def _rglru_specs(cfg: ModelConfig, u: int, p: str) -> Specs:
+    D, N, T = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        f"{p}/norm": ParamSpec((u, D), ("layers", "embed"), init="zeros"),
+        f"{p}/w_x": ParamSpec((u, D, N), ("layers", "embed", "rnn")),
+        f"{p}/w_gate": ParamSpec((u, D, N), ("layers", "embed", "rnn")),
+        f"{p}/conv_w": ParamSpec((u, T, N), ("layers", None, "rnn")),
+        f"{p}/w_r": ParamSpec((u, N, N), ("layers", "rnn_in", "rnn")),
+        f"{p}/w_i": ParamSpec((u, N, N), ("layers", "rnn_in", "rnn")),
+        f"{p}/a_param": ParamSpec((u, N), ("layers", "rnn"), init="rglru_a"),
+        f"{p}/w_out": ParamSpec((u, N, D), ("layers", "rnn", "embed")),
+    }
+
+
+def _ssm_specs(cfg: ModelConfig, u: int, p: str) -> Specs:
+    D, Din, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    H, T = cfg.ssm_num_heads, cfg.conv_width
+    return {
+        f"{p}/norm": ParamSpec((u, D), ("layers", "embed"), init="zeros"),
+        f"{p}/w_z": ParamSpec((u, D, Din), ("layers", "embed", "rnn")),
+        f"{p}/w_x": ParamSpec((u, D, Din), ("layers", "embed", "rnn")),
+        f"{p}/w_B": ParamSpec((u, D, N), ("layers", "embed", "state")),
+        f"{p}/w_C": ParamSpec((u, D, N), ("layers", "embed", "state")),
+        f"{p}/w_dt": ParamSpec((u, D, H), ("layers", "embed", None)),
+        f"{p}/dt_bias": ParamSpec((u, H), ("layers", None), init="ssm_dt"),
+        f"{p}/a_log": ParamSpec((u, H), ("layers", None), init="ones"),
+        f"{p}/d_skip": ParamSpec((u, H), ("layers", None), init="ones"),
+        f"{p}/conv_w": ParamSpec((u, T, Din), ("layers", None, "rnn")),
+        f"{p}/gate_norm": ParamSpec((u, Din), ("layers", "rnn"), init="zeros"),
+        f"{p}/w_out": ParamSpec((u, Din, D), ("layers", "rnn", "embed")),
+    }
+
+
+_KIND_SPECS = {
+    "attn": lambda cfg, u, p: {**_attn_specs(cfg, u, f"{p}/attn"),
+                               **_mlp_specs(cfg, u, f"{p}/mlp")},
+    "moe": lambda cfg, u, p: {**_attn_specs(cfg, u, f"{p}/attn"),
+                              **_moe_specs(cfg, u, f"{p}/moe")},
+    "rglru": lambda cfg, u, p: {**_rglru_specs(cfg, u, f"{p}/rglru"),
+                                **_mlp_specs(cfg, u, f"{p}/mlp")},
+    "ssm": lambda cfg, u, p: _ssm_specs(cfg, u, p + "/ssm"),
+    "xattn": lambda cfg, u, p: {**_attn_specs(cfg, u, f"{p}/attn"),
+                                **_attn_specs(cfg, u, f"{p}/xattn"),
+                                **_mlp_specs(cfg, u, f"{p}/mlp")},
+}
+
+
+def build_specs(cfg: ModelConfig) -> Specs:
+    specs: Specs = {
+        "embed/tokens": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed"), fan_in_axis=1),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if cfg.norm == "ln":
+        specs["final_norm_bias"] = ParamSpec((cfg.d_model,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"))
+    for si, seg in enumerate(cfg.segments):
+        for li, kind in enumerate(seg.pattern):
+            specs.update(_KIND_SPECS[kind](cfg, seg.num_units, f"seg{si}/l{li}"))
+    return specs
+
+
+# ===========================================================================
+# Blocks (per-unit application; params already sliced to this unit)
+# ===========================================================================
+
+def _norm(cfg: ModelConfig, x, p, prefix):
+    if cfg.norm == "ln":
+        return layer_norm(x, p[f"{prefix}/norm"], p[f"{prefix}/norm_bias"])
+    return rms_norm(x, p[f"{prefix}/norm"])
+
+
+def _attn_spec(cfg: ModelConfig, causal: bool = True) -> AttnSpec:
+    return AttnSpec(causal=causal, window=cfg.window,
+                    logit_cap=cfg.logit_cap, chunk=cfg.attn_chunk,
+                    unroll=cfg.inner_unroll)
+
+
+def _qkv(cfg, p, prefix, x, positions, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}/wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}/wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}/wv"])
+    if cfg.bias:
+        q = q + p[f"{prefix}/bq"]
+        k = k + p[f"{prefix}/bk"]
+        v = v + p[f"{prefix}/bv"]
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_frac)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_frac)
+    return q, k, v
+
+
+def _attn_out(cfg, p, prefix, o):
+    y = jnp.einsum("bshk,hkd->bsd", o, p[f"{prefix}/wo"])
+    if cfg.bias:
+        y = y + p[f"{prefix}/bo"]
+    return y
+
+
+def _self_attn_block(cfg, p, prefix, x, positions, causal=True):
+    h = _norm(cfg, x, p, prefix)
+    q, k, v = _qkv(cfg, p, prefix, h, positions)
+    if cfg.attn_skip:  # cost-attribution variant: see ModelConfig.attn_skip
+        o = q + 0.0 * (k.sum() + v.sum())
+    else:
+        o = chunked_attention(q, k, v, _attn_spec(cfg, causal))
+    return x + _attn_out(cfg, p, prefix, o), (k, v)
+
+
+def _mlp_block(cfg, p, prefix, x):
+    h = _norm(cfg, x, p, prefix)
+    if cfg.mlp_gated:
+        y = gated_mlp(h, p[f"{prefix}/w_gate"], p[f"{prefix}/w_up"],
+                      p[f"{prefix}/w_down"], cfg.act)
+    else:
+        y = mlp(h, p[f"{prefix}/w_up"], p[f"{prefix}/w_down"],
+                p.get(f"{prefix}/b_up"), p.get(f"{prefix}/b_down"), cfg.act)
+    return x + y
+
+
+def _moe_block(cfg, p, prefix, x):
+    h = _norm(cfg, x, p, prefix)
+    spec = MoESpec(num_experts=cfg.num_experts, top_k=cfg.top_k,
+                   capacity_factor=cfg.capacity_factor, act=cfg.act,
+                   group_size=cfg.moe_group_size)
+    y, aux = moe_ffn(h, p[f"{prefix}/router"], p[f"{prefix}/w_gate"],
+                     p[f"{prefix}/w_up"], p[f"{prefix}/w_down"], spec)
+    return x + y, aux
+
+
+def _rglru_gates(p, prefix, xb):
+    r = jax.nn.sigmoid(jnp.einsum("bsn,nm->bsm", xb, p[f"{prefix}/w_r"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsn,nm->bsm", xb, p[f"{prefix}/w_i"]))
+    return r, i
+
+
+def _rglru_block(cfg, p, prefix, x, conv_state=None, h_state=None):
+    """Griffin recurrent block.  Returns (y, (conv_state, h_state))."""
+    h = _norm(cfg, x, p, prefix)
+    xb = jnp.einsum("bsd,dn->bsn", h, p[f"{prefix}/w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dn->bsn", h, p[f"{prefix}/w_gate"]))
+    xb, conv_state = short_conv1d(xb, p[f"{prefix}/conv_w"], conv_state)
+    r, i = _rglru_gates(p, prefix, xb)
+    y, h_last = rglru_scan(xb, r, i, p[f"{prefix}/a_param"], h_state)
+    y = y * gate
+    return x + jnp.einsum("bsn,nd->bsd", y, p[f"{prefix}/w_out"]), (conv_state, h_last)
+
+
+def _ssm_block(cfg, p, prefix, x, conv_state=None, h_state=None):
+    """Mamba-2 block.  Returns (y, (conv_state, h_state))."""
+    B_, S, D = x.shape
+    Hs, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+    h = _norm(cfg, x, p, prefix)
+    z = jnp.einsum("bsd,dn->bsn", h, p[f"{prefix}/w_z"])
+    xi = jnp.einsum("bsd,dn->bsn", h, p[f"{prefix}/w_x"])
+    xi, conv_state = short_conv1d(xi, p[f"{prefix}/conv_w"], conv_state)
+    xi = jax.nn.silu(xi)
+    Bm = jnp.einsum("bsd,dn->bsn", h, p[f"{prefix}/w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", h, p[f"{prefix}/w_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p[f"{prefix}/w_dt"])
+        + p[f"{prefix}/dt_bias"]
+    )
+    A = -jax.nn.softplus(p[f"{prefix}/a_log"].astype(jnp.float32))
+    xh = xi.reshape(B_, S, Hs, P)
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (B_, S, Hs, cfg.ssm_state))
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (B_, S, Hs, cfg.ssm_state))
+    y, h_last = ssd_chunked(xh, dt, A, Bh, Ch, p[f"{prefix}/d_skip"],
+                            chunk=cfg.ssm_chunk, h0=h_state,
+                            unroll=cfg.inner_unroll)
+    y = y.reshape(B_, S, -1)
+    y = rms_norm(y, p[f"{prefix}/gate_norm"]) * jax.nn.silu(z)
+    return x + jnp.einsum("bsn,nd->bsd", y, p[f"{prefix}/w_out"]), (conv_state, h_last)
+
+
+# ===========================================================================
+# Full forward (train / scoring): scan over units per segment
+# ===========================================================================
+
+def _unit_forward(cfg: ModelConfig, seg: Segment, si: int, x, positions,
+                  unit_params, enc_out=None, key_prefix: str = "seg",
+                  causal: bool = True):
+    """One pattern unit.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    for li, kind in enumerate(seg.pattern):
+        pref = f"{key_prefix}{si}/l{li}"
+        if kind in ("attn", "moe", "xattn"):
+            x, _ = _self_attn_block(cfg, unit_params, f"{pref}/attn", x,
+                                    positions, causal=causal)
+            if kind == "xattn":
+                h = _norm(cfg, x, unit_params, f"{pref}/xattn")
+                q = jnp.einsum("bsd,dhk->bshk", h, unit_params[f"{pref}/xattn/wq"])
+                if cfg.bias:
+                    q = q + unit_params[f"{pref}/xattn/bq"]
+                k = jnp.einsum("bsd,dhk->bshk", enc_out, unit_params[f"{pref}/xattn/wk"])
+                v = jnp.einsum("bsd,dhk->bshk", enc_out, unit_params[f"{pref}/xattn/wv"])
+                if cfg.bias:
+                    k = k + unit_params[f"{pref}/xattn/bk"]
+                    v = v + unit_params[f"{pref}/xattn/bv"]
+                o = chunked_attention(q, k, v, AttnSpec(causal=False, chunk=cfg.attn_chunk, unroll=cfg.inner_unroll))
+                x = x + _attn_out(cfg, unit_params, f"{pref}/xattn", o)
+            if kind == "moe":
+                x, a = _moe_block(cfg, unit_params, f"{pref}/moe", x)
+                aux = aux + a
+            else:
+                x = _mlp_block(cfg, unit_params, f"{pref}/mlp", x)
+        elif kind == "rglru":
+            x, _ = _rglru_block(cfg, unit_params, f"{pref}/rglru", x)
+            x = _mlp_block(cfg, unit_params, f"{pref}/mlp", x)
+        elif kind == "ssm":
+            x, _ = _ssm_block(cfg, unit_params, f"{pref}/ssm", x)
+        else:
+            raise ValueError(kind)
+    return x, aux
+
+
+def _segment_params(params: Params, si: int, key_prefix: str = "seg") -> Params:
+    pref = f"{key_prefix}{si}/"
+    return {k: v for k, v in params.items() if k.startswith(pref)}
+
+
+def backbone(cfg: ModelConfig, params: Params, x: jax.Array,
+             positions: jax.Array, enc_out: Optional[jax.Array] = None,
+             remat: bool = True, segments: Optional[Tuple[Segment, ...]] = None,
+             key_prefix: str = "seg", causal: bool = True
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Apply all segments.  Returns (hidden, total_aux_loss)."""
+    from ..dist.context import constrain_param
+    from .encdec import build_encdec_specs as _enc_specs
+
+    segs = cfg.segments if segments is None else segments
+    total_aux = jnp.zeros((), jnp.float32)
+    all_specs = (_enc_specs(cfg) if cfg.encoder_segments else
+                 build_specs(cfg))
+    for si, seg in enumerate(segs):
+        sp = _segment_params(params, si, key_prefix)
+        axes_map = {k: all_specs[k].axes[1:] for k in sp if k in all_specs}
+
+        def unit(carry, unit_params, seg=seg, si=si, axes_map=axes_map):
+            h, aux = carry
+            # Sequence-parallel layer boundary: the scan carry (the saved
+            # activation in the remat scheme) is stored seq-sharded on the
+            # model axis — 16x less per-chip activation memory.
+            h = constrain(h, "batch", "seq_model", None)
+            # Pin per-unit param slices (=> their cotangents) to the param
+            # sharding; unsharded per-unit weight grads otherwise dominate
+            # temp memory for MoE/large-d archs.
+            unit_params = {k: constrain_param(v, axes_map[k])
+                           if k in axes_map else v
+                           for k, v in unit_params.items()}
+            h, a = _unit_forward(cfg, seg, si, h, positions, unit_params,
+                                 enc_out=enc_out, key_prefix=key_prefix,
+                                 causal=causal)
+            h = constrain(h, "batch", "seq_model", None)
+            return (h, aux + a), None
+
+        if remat:
+            unit = jax.checkpoint(
+                unit, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, total_aux), _ = jax.lax.scan(unit, (x, total_aux), sp)
+    return x, total_aux
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    x = params["embed/tokens"][tokens]
+    return x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+
+def unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "ln":
+        x = layer_norm(x, params["final_norm"], params["final_norm_bias"])
+    else:
+        x = rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed/tokens"])
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token loss.  batch: tokens (B,S) int32, labels (B,S) int32
+    (-1 = masked), optional patches (B,P,D) for VLM."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(x.dtype)  # precomputed stub embeds
+        x = jnp.concatenate([patches, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, aux = backbone(cfg, params, x, positions, remat=remat)
+    if cfg.frontend == "vision":
+        x = x[:, batch["patches"].shape[1]:]
+    loss, metrics = xent_loss(cfg, params, x, batch["labels"])
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux
+    metrics["aux"] = aux
+    return loss, metrics
+
+
+def xent_loss(cfg: ModelConfig, params: Params, hidden: jax.Array,
+              labels: jax.Array, block: int = 1024
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Blockwise sharded next-token cross-entropy.
+
+    The full (B, S, V) f32 logits tensor is ~1 GiB/chip at the assigned
+    train cells and the naive loss keeps tens of copies live (fwd + bwd).
+    Instead the sequence is scanned in blocks: each block computes its
+    logits, lse and label logit, wrapped in jax.checkpoint so the backward
+    recomputes them blockwise too.  Logits stay vocab-sharded on "model";
+    the label logit is a one-hot contraction (partition-friendly — no
+    cross-shard gather)."""
+    hidden = constrain(hidden, "batch", "seq_model", None)
+    B, S, D = hidden.shape
+    nb = max(S // block, 1)
+    while S % nb:
+        nb -= 1
+    blk = S // nb
+    hb = hidden.reshape(B, nb, blk, D).transpose(1, 0, 2, 3)
+    lb = labels.reshape(B, nb, blk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def block_loss(carry, xs):
+        h, lab = xs
+        logits = unembed(cfg, params, h).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "model")
+        mask = (lab >= 0).astype(jnp.float32)
+        lmax = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        shifted = logits - lmax
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+        onehot = jax.nn.one_hot(jnp.maximum(lab, 0), cfg.vocab_size,
+                                dtype=shifted.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", shifted, onehot)
+        nll, cnt = carry
+        nll = nll - ((label_logit - lse) * mask).sum()
+        return (nll, cnt + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        block_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hb, lb), unroll=nb if cfg.inner_unroll else 1)
+    loss = nll / jnp.maximum(cnt, 1.0)
+    return loss, {"xent": loss, "tokens": cnt}
+
+
+# ===========================================================================
+# Serving: prefill + single-token decode with caches
+# ===========================================================================
+
+def cache_shape_specs(cfg: ModelConfig, batch: int, cache_size: int,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the decode cache.  Attention KV caches are
+    bounded by the window size when the arch is windowed (ring buffer) —
+    that is exactly why windowed/SSM archs run the long_500k cell."""
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    dt = dtype
+    attn_S = min(cache_size, cfg.window) if cfg.window > 0 else cache_size
+    for si, seg in enumerate(cfg.segments):
+        U = seg.num_units
+        for li, kind in enumerate(seg.pattern):
+            pref = f"seg{si}/l{li}"
+            if kind in ("attn", "moe", "xattn"):
+                kv = (U, batch, attn_S, cfg.num_kv_heads, cfg.head_dim)
+                out[f"{pref}/k"] = jax.ShapeDtypeStruct(kv, dt)
+                out[f"{pref}/v"] = jax.ShapeDtypeStruct(kv, dt)
+                if kind == "xattn":
+                    xkv = (U, batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+                    out[f"{pref}/xk"] = jax.ShapeDtypeStruct(xkv, dt)
+                    out[f"{pref}/xv"] = jax.ShapeDtypeStruct(xkv, dt)
+            elif kind == "rglru":
+                N, T = cfg.lru_width, cfg.conv_width
+                out[f"{pref}/conv"] = jax.ShapeDtypeStruct((U, batch, T - 1, N), dt)
+                out[f"{pref}/h"] = jax.ShapeDtypeStruct((U, batch, N), jnp.float32)
+            elif kind == "ssm":
+                Din, T = cfg.ssm_d_inner, cfg.conv_width
+                Hs, N, P = cfg.ssm_num_heads, cfg.ssm_state, cfg.ssm_head_dim
+                out[f"{pref}/conv"] = jax.ShapeDtypeStruct((U, batch, T - 1, Din), dt)
+                out[f"{pref}/h"] = jax.ShapeDtypeStruct((U, batch, Hs, N, P), jnp.float32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_size: int,
+               dtype=jnp.bfloat16) -> Cache:
+    return {k: jnp.zeros(s.shape, s.dtype)
+            for k, s in cache_shape_specs(cfg, batch, cache_size, dtype).items()}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                cache_len: jax.Array, tokens: jax.Array,
+                enc_out: Optional[jax.Array] = None) -> Tuple[jax.Array, Cache]:
+    """One decode step.  tokens: (B, 1) int32; cache_len: scalar int32 —
+    number of tokens already in the cache.  Returns (logits (B,1,V), cache).
+
+    Attention caches are ring buffers of size min(cache, window): the write
+    slot is cache_len % size; RoPE is applied at insert with the absolute
+    position so the ring ordering is irrelevant to attention math.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.asarray(cache_len, jnp.int32)[None]  # (1,) absolute
+    if cfg.abs_positions:
+        from ..layers.common import sinusoidal_at
+
+        x = x + sinusoidal_at(positions, cfg.d_model, x.dtype)
+    new_cache: Cache = {}
+
+    for si, seg in enumerate(cfg.segments):
+        sp = _segment_params(params, si)
+        seg_cache = {k[len(f"seg{si}/"):]: v for k, v in cache.items()
+                     if k.startswith(f"seg{si}/")}
+
+        # The cache rides in the scan CARRY and is updated in place with
+        # dynamic_update_index; emitting updated slices as stacked ys would
+        # double-buffer the entire multi-GiB cache in temp memory (observed
+        # +14 GiB on internvl2 decode_32k).
+        def unit(carry, xs, seg=seg, si=si):
+            h, cache_full = carry
+            unit_params, u = xs
+            unit_cache = {k: jax.lax.dynamic_index_in_dim(v, u, 0, False)
+                          for k, v in cache_full.items()}
+            upd: Dict[str, jax.Array] = {}
+            for li, kind in enumerate(seg.pattern):
+                pref = f"seg{si}/l{li}"
+                cpref = f"l{li}"
+                if kind in ("attn", "moe", "xattn"):
+                    hh = _norm(cfg, h, unit_params, f"{pref}/attn")
+                    q, k, v = _qkv(cfg, unit_params, f"{pref}/attn", hh, positions)
+                    kc, vc = unit_cache[f"{cpref}/k"], unit_cache[f"{cpref}/v"]
+                    size = kc.shape[1]
+                    slot = jnp.mod(cache_len, size)
+                    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+                    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+                    upd[f"{cpref}/k"], upd[f"{cpref}/v"] = kc, vc
+                    valid = jnp.minimum(cache_len + 1, size)
+                    o = decode_attention(q, kc, vc, valid,
+                                         AttnSpec(causal=True, window=0,
+                                                  logit_cap=cfg.logit_cap))
+                    h = h + _attn_out(cfg, unit_params, f"{pref}/attn", o)
+                    if kind == "xattn":
+                        hh = _norm(cfg, h, unit_params, f"{pref}/xattn")
+                        q = jnp.einsum("bsd,dhk->bshk", hh,
+                                       unit_params[f"{pref}/xattn/wq"])
+                        if cfg.bias:
+                            q = q + unit_params[f"{pref}/xattn/bq"]
+                        xk, xv = unit_cache[f"{cpref}/xk"], unit_cache[f"{cpref}/xv"]
+                        o = decode_attention(q, xk, xv, xk.shape[1],
+                                             AttnSpec(causal=False))
+                        h = h + _attn_out(cfg, unit_params, f"{pref}/xattn", o)
+                    if kind == "moe":
+                        y, _ = _moe_block(cfg, unit_params, f"{pref}/moe", h)
+                        h = y
+                    else:
+                        h = _mlp_block(cfg, unit_params, f"{pref}/mlp", h)
+                elif kind == "rglru":
+                    hh = _norm(cfg, h, unit_params, f"{pref}/rglru")
+                    xb = jnp.einsum("bsd,dn->bsn", hh, unit_params[f"{pref}/rglru/w_x"])
+                    gate = jax.nn.gelu(jnp.einsum(
+                        "bsd,dn->bsn", hh, unit_params[f"{pref}/rglru/w_gate"]))
+                    xb, conv = short_conv1d(xb, unit_params[f"{pref}/rglru/conv_w"],
+                                            unit_cache[f"{cpref}/conv"])
+                    r, i = _rglru_gates(unit_params, f"{pref}/rglru", xb)
+                    y, hst = rglru_step(xb[:, 0], r[:, 0], i[:, 0],
+                                        unit_params[f"{pref}/rglru/a_param"],
+                                        unit_cache[f"{cpref}/h"])
+                    y = y[:, None] * gate
+                    h = h + jnp.einsum("bsn,nd->bsd", y,
+                                       unit_params[f"{pref}/rglru/w_out"])
+                    upd[f"{cpref}/conv"], upd[f"{cpref}/h"] = conv, hst
+                    h = _mlp_block(cfg, unit_params, f"{pref}/mlp", h)
+                elif kind == "ssm":
+                    hh = _norm(cfg, h, unit_params, f"{pref}/ssm")
+                    pr = f"{pref}/ssm"
+                    z = jnp.einsum("bsd,dn->bsn", hh, unit_params[f"{pr}/w_z"])
+                    xi = jnp.einsum("bsd,dn->bsn", hh, unit_params[f"{pr}/w_x"])
+                    xi, conv = short_conv1d(xi, unit_params[f"{pr}/conv_w"],
+                                            unit_cache[f"{cpref}/conv"])
+                    xi = jax.nn.silu(xi)
+                    Bm = jnp.einsum("bsd,dn->bsn", hh, unit_params[f"{pr}/w_B"])[:, 0]
+                    Cm = jnp.einsum("bsd,dn->bsn", hh, unit_params[f"{pr}/w_C"])[:, 0]
+                    dt = jax.nn.softplus(
+                        jnp.einsum("bsd,dh->bsh", hh, unit_params[f"{pr}/w_dt"])[:, 0]
+                        + unit_params[f"{pr}/dt_bias"])
+                    A = -jax.nn.softplus(unit_params[f"{pr}/a_log"].astype(jnp.float32))
+                    B_, _, Din = xi.shape
+                    Hs, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+                    xh = xi[:, 0].reshape(B_, Hs, P)
+                    Bh = jnp.broadcast_to(Bm[:, None, :], (B_, Hs, cfg.ssm_state))
+                    Ch = jnp.broadcast_to(Cm[:, None, :], (B_, Hs, cfg.ssm_state))
+                    y, hst = ssd_step(xh, dt, A, Bh, Ch,
+                                      unit_params[f"{pr}/d_skip"],
+                                      unit_cache[f"{cpref}/h"])
+                    y = y.reshape(B_, 1, Din)
+                    y = rms_norm(y, unit_params[f"{pr}/gate_norm"]) * jax.nn.silu(z)
+                    h = h + jnp.einsum("bsn,nd->bsd", y, unit_params[f"{pr}/w_out"])
+                    upd[f"{cpref}/conv"], upd[f"{cpref}/h"] = conv, hst
+                else:
+                    raise ValueError(kind)
+            new_full = dict(cache_full)
+            for k, val in upd.items():
+                new_full[k] = jax.lax.dynamic_update_index_in_dim(
+                    cache_full[k], val, u, 0)
+            return (h, new_full), None
+
+        U = next(iter(sp.values())).shape[0]
+        (x, seg_cache), _ = jax.lax.scan(
+            unit, (x, seg_cache), (sp, jnp.arange(U)))
+        for k, v in seg_cache.items():
+            new_cache[f"seg{si}/{k}"] = v
+
+    logits = unembed(cfg, params, x).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache_size: int, patches: Optional[jax.Array] = None,
+            enc_out: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Cache, jax.Array]:
+    """Run the full prompt, build the decode cache.  Returns
+    (last-position logits (B,V), cache, cache_len scalar).
+
+    With cfg.prefill_row_chunks > 1 the batch rows are processed in
+    sequential chunks, each writing its rows of the shared cache in place —
+    bounding prefill activation memory for the 32k cells."""
+    nchunks = max(cfg.prefill_row_chunks, 1)
+    if nchunks > 1 and tokens.shape[0] % nchunks == 0:
+        return _prefill_row_chunked(cfg, params, tokens, cache_size,
+                                    patches, enc_out, nchunks)
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision" and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total)
+    if cfg.abs_positions:
+        from ..layers.common import sinusoidal_at
+
+        x = x + sinusoidal_at(positions, cfg.d_model, x.dtype)
+    cache = init_cache(cfg, B, cache_size, dtype=params["embed/tokens"].dtype)
+    new_cache: Cache = {}
+
+    for si, seg in enumerate(cfg.segments):
+        sp = _segment_params(params, si)
+        seg_cache = {k[len(f"seg{si}/"):]: v for k, v in cache.items()
+                     if k.startswith(f"seg{si}/")}
+
+        def unit(h, xs, seg=seg, si=si):
+            unit_params, unit_cache = xs
+            upd: Dict[str, jax.Array] = {}
+            for li, kind in enumerate(seg.pattern):
+                pref = f"seg{si}/l{li}"
+                cpref = f"l{li}"
+                if kind in ("attn", "moe", "xattn"):
+                    hh = _norm(cfg, h, unit_params, f"{pref}/attn")
+                    q, k, v = _qkv(cfg, unit_params, f"{pref}/attn", hh, positions)
+                    if cfg.attn_skip:  # cost-attribution variant
+                        o = q + 0.0 * (k.sum() + v.sum())
+                    else:
+                        o = chunked_attention(q, k, v, _attn_spec(cfg, True))
+                    h = h + _attn_out(cfg, unit_params, f"{pref}/attn", o)
+                    kc, vc = unit_cache[f"{cpref}/k"], unit_cache[f"{cpref}/v"]
+                    size = kc.shape[1]
+                    ins = min(size, S_total)
+                    if ins < S_total:
+                        # Ring buffer: keep slot t%size = token t so decode's
+                        # write pointer (cache_len % size) evicts the oldest.
+                        slots = jnp.mod(jnp.arange(S_total - ins, S_total), size)
+                        kc = kc.at[:, slots].set(k[:, -ins:])
+                        vc = vc.at[:, slots].set(v[:, -ins:])
+                    else:
+                        kc = jax.lax.dynamic_update_slice(
+                            kc, k[:, -ins:], (0, 0, 0, 0))
+                        vc = jax.lax.dynamic_update_slice(
+                            vc, v[:, -ins:], (0, 0, 0, 0))
+                    upd[f"{cpref}/k"], upd[f"{cpref}/v"] = kc, vc
+                    if kind == "xattn":
+                        hh = _norm(cfg, h, unit_params, f"{pref}/xattn")
+                        q = jnp.einsum("bsd,dhk->bshk", hh,
+                                       unit_params[f"{pref}/xattn/wq"])
+                        xk = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                        unit_params[f"{pref}/xattn/wk"])
+                        xv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                                        unit_params[f"{pref}/xattn/wv"])
+                        if cfg.bias:
+                            q = q + unit_params[f"{pref}/xattn/bq"]
+                            xk = xk + unit_params[f"{pref}/xattn/bk"]
+                            xv = xv + unit_params[f"{pref}/xattn/bv"]
+                        o = chunked_attention(q, xk, xv,
+                                              AttnSpec(causal=False, chunk=cfg.attn_chunk, unroll=cfg.inner_unroll))
+                        h = h + _attn_out(cfg, unit_params, f"{pref}/xattn", o)
+                        upd[f"{cpref}/xk"], upd[f"{cpref}/xv"] = xk, xv
+                    if kind == "moe":
+                        h, _ = _moe_block(cfg, unit_params, f"{pref}/moe", h)
+                    else:
+                        h = _mlp_block(cfg, unit_params, f"{pref}/mlp", h)
+                elif kind == "rglru":
+                    h, (conv, hst) = _rglru_block(
+                        cfg, unit_params, f"{pref}/rglru", h,
+                        conv_state=unit_cache[f"{cpref}/conv"],
+                        h_state=unit_cache[f"{cpref}/h"])
+                    upd[f"{cpref}/conv"], upd[f"{cpref}/h"] = conv, hst
+                    h = _mlp_block(cfg, unit_params, f"{pref}/mlp", h)
+                elif kind == "ssm":
+                    h, (conv, hst) = _ssm_block(
+                        cfg, unit_params, f"{pref}/ssm", h,
+                        conv_state=unit_cache[f"{cpref}/conv"],
+                        h_state=unit_cache[f"{cpref}/h"])
+                    upd[f"{cpref}/conv"], upd[f"{cpref}/h"] = conv, hst
+                else:
+                    raise ValueError(kind)
+            return h, upd
+
+        x, updates = jax.lax.scan(unit, x, (sp, seg_cache))
+        for k, v in updates.items():
+            new_cache[f"seg{si}/{k}"] = v
+
+    logits = unembed(cfg, params, x[:, -1:]).astype(jnp.float32)[:, 0]
+    return logits, new_cache, jnp.asarray(S_total, jnp.int32)
+
+
+def _prefill_row_chunked(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                         cache_size: int, patches, enc_out, nchunks: int):
+    """Sequential batch-row chunks; cache rides the scan carry and each
+    chunk dynamic-updates its rows (dim 1 of every cache leaf)."""
+    import dataclasses as _dc
+
+    B = tokens.shape[0]
+    Bc = B // nchunks
+    inner_cfg = _dc.replace(cfg, prefill_row_chunks=1)
+    cache = init_cache(cfg, B, cache_size,
+                       dtype=params["embed/tokens"].dtype)
+
+    def chunk(carry_cache, idx):
+        tok_c = jax.lax.dynamic_slice_in_dim(tokens, idx * Bc, Bc, 0)
+        pat_c = (jax.lax.dynamic_slice_in_dim(patches, idx * Bc, Bc, 0)
+                 if patches is not None else None)
+        enc_c = (jax.lax.dynamic_slice_in_dim(enc_out, idx * Bc, Bc, 0)
+                 if enc_out is not None else None)
+        logits_c, cache_c, clen = prefill(inner_cfg, params, tok_c,
+                                          cache_size, pat_c, enc_c)
+        new_cache = {
+            k: jax.lax.dynamic_update_slice_in_dim(carry_cache[k],
+                                                   cache_c[k].astype(
+                                                       carry_cache[k].dtype),
+                                                   idx * Bc, 1)
+            for k in carry_cache
+        }
+        return new_cache, logits_c
+
+    cache, logits_chunks = jax.lax.scan(
+        chunk, cache, jnp.arange(nchunks),
+        unroll=nchunks if cfg.inner_unroll else 1)
+    logits = logits_chunks.reshape(B, -1)
+    S_total = tokens.shape[1] + (patches.shape[1] if patches is not None
+                                 and cfg.frontend == "vision" else 0)
+    return logits, cache, jnp.asarray(S_total, jnp.int32)

@@ -1,0 +1,92 @@
+"""Parameter specification system.
+
+Each model family builds a flat ``{path: ParamSpec}`` table once; everything
+else derives from it:
+
+* ``init_params``     — real arrays (smoke tests / examples; small configs only),
+* ``shape_structs``   — ``jax.ShapeDtypeStruct`` stand-ins (dry-run; no alloc),
+* ``partition_specs`` — ``PartitionSpec`` per leaf from logical-axis rules
+                        (``repro.dist.sharding``).
+
+Logical axis names used across the zoo:
+
+  layers   — scanned layer stack (never sharded)
+  embed    — d_model dims           (FSDP -> "data")
+  heads    — attention-head dims    (TP -> "model")
+  kv_heads — KV-head dims           (TP -> "model" when divisible else None)
+  ffn      — feed-forward hidden    (TP -> "model")
+  vocab    — vocabulary             (TP -> "model")
+  experts  — MoE expert dim         (EP -> "model" when divisible)
+  state    — SSM/RG-LRU recurrent state (None)
+  conv     — short-conv taps        (None)
+  frames   — frontend positions     (None)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "rglru_a" | "ssm_dt"
+    fan_in_axis: Optional[int] = None  # for scaled normal init
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: {self.shape} vs {self.axes}")
+
+
+Specs = Dict[str, ParamSpec]
+
+
+def num_params(specs: Specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in specs.values())
+
+
+def shape_structs(specs: Specs) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {k: jax.ShapeDtypeStruct(s.shape, s.dtype) for k, s in specs.items()}
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "rglru_a":
+        # Griffin's a-parameter: softplus-inverse spread so that the gate
+        # a = sigmoid(param)^(c*r) starts near 0.9..0.999 per channel.
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(u / (1 - u)).astype(spec.dtype)
+    if spec.init == "ssm_dt":
+        # Mamba dt bias: log-uniform in [1e-3, 1e-1] through softplus-inverse.
+        u = jax.random.uniform(key, spec.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return jnp.log(jnp.expm1(dt)).astype(spec.dtype)
+    fan_in = (
+        spec.shape[spec.fan_in_axis]
+        if spec.fan_in_axis is not None
+        else (spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+    )
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(specs: Specs, key: jax.Array) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(specs))
+    return {k: _init_leaf(kk, s) for (k, s), kk in zip(sorted(specs.items()), keys)}
+
+
+def count_table(specs: Specs) -> str:
+    rows = [f"{k:60s} {str(s.shape):28s} {int(np.prod(s.shape)):>14,d}"
+            for k, s in sorted(specs.items())]
+    rows.append(f"{'TOTAL':60s} {'':28s} {num_params(specs):>14,d}")
+    return "\n".join(rows)

@@ -1,0 +1,150 @@
+"""Real JAX analytics executor: the paper's intermittent GROUP-BY queries
+running on-device (segagg kernel / jnp fallback), scheduled by repro.core.
+
+Executor model (DESIGN.md §4, executor 2):
+
+* a batch = concatenated record files; one ``process_batch`` call computes
+  the (num_groups, V) partial aggregate on device and SPILLS it to host —
+  device memory is released between batches exactly as the paper stores
+  intermediate results in files between Spark jobs;
+* ``finalize`` = the paper's final aggregation step: combine partials.
+
+``measure_cost_model`` reproduces §6.2: run batches of different sizes,
+time them, fit the piecewise-linear cost model the scheduler consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    CostModelBase,
+    PiecewiseLinearCostModel,
+    Query,
+    Schedule,
+    fit_piecewise_linear,
+    schedule_single,
+)
+from ..data.tpch import AnalyticsQuery, StreamScale
+
+
+@dataclasses.dataclass
+class BatchResult:
+    num_records: int
+    seconds: float
+
+
+class AnalyticsExecutor:
+    """Executes one AnalyticsQuery in intermittent batches."""
+
+    def __init__(self, query: AnalyticsQuery, scale: StreamScale,
+                 use_kernel: bool = False):
+        self.query = query
+        self.scale = scale
+        self.num_groups = query.num_groups(scale)
+        self.use_kernel = use_kernel
+        self.partials: List[np.ndarray] = []
+        self.batch_log: List[BatchResult] = []
+        if use_kernel:
+            from ..kernels.segagg.ops import segagg
+
+            self._agg = lambda k, v: segagg(k, v, self.num_groups, True)
+        else:
+            from ..kernels.segagg.ref import segagg_ref
+
+            self._agg = jax.jit(
+                lambda k, v: segagg_ref(k, v, self.num_groups))
+
+    def process_batch(self, records: Dict[str, np.ndarray]) -> BatchResult:
+        keys = np.asarray(self.query.key_fn(records), np.int32)
+        vals = np.asarray(self.query.value_fn(records), np.float32)
+        t0 = time.perf_counter()
+        part = self._agg(jnp.asarray(keys), jnp.asarray(vals))
+        part = np.asarray(part)  # spill to host; device buffers released
+        dt = time.perf_counter() - t0
+        self.partials.append(part)
+        res = BatchResult(num_records=len(keys), seconds=dt)
+        self.batch_log.append(res)
+        return res
+
+    def finalize(self) -> Tuple[np.ndarray, float]:
+        """Final aggregation step (paper §2.1): combine the partials."""
+        t0 = time.perf_counter()
+        total = np.sum(np.stack(self.partials), axis=0) if self.partials \
+            else np.zeros((self.num_groups, 1), np.float32)
+        return total, time.perf_counter() - t0
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.partials)
+
+
+def concat_files(files: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    keys = files[0].keys()
+    return {k: np.concatenate([f[k] for f in files]) for k in keys}
+
+
+def run_plan(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
+             plan: Schedule, scale: StreamScale,
+             use_kernel: bool = False) -> Tuple[np.ndarray, List[BatchResult], float]:
+    """Execute a scheduler plan (batch sizes in FILES) against real files."""
+    ex = AnalyticsExecutor(query, scale, use_kernel)
+    idx = 0
+    for b in plan.batches:
+        chunk = files[idx: idx + b.num_tuples]
+        idx += b.num_tuples
+        if chunk:
+            ex.process_batch(concat_files(chunk))
+    result, agg_s = ex.finalize()
+    return result, ex.batch_log, agg_s
+
+
+def run_batched(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
+                batch_files: int, scale: StreamScale,
+                use_kernel: bool = False) -> Tuple[np.ndarray, float, int]:
+    """Process in fixed-size batches of ``batch_files``; returns
+    (result, total_seconds incl. final agg, num_batches)."""
+    ex = AnalyticsExecutor(query, scale, use_kernel)
+    for i in range(0, len(files), batch_files):
+        ex.process_batch(concat_files(files[i:i + batch_files]))
+    result, agg_s = ex.finalize()
+    total = sum(b.seconds for b in ex.batch_log) + agg_s
+    return result, total, ex.num_batches
+
+
+def measure_cost_model(query: AnalyticsQuery,
+                       files: Sequence[Dict[str, np.ndarray]],
+                       scale: StreamScale,
+                       batch_sizes: Sequence[int] = (1, 4, 16, 64),
+                       use_kernel: bool = False) -> CostModelBase:
+    """§6.2 calibration: measure execution time vs batch size, fit the
+    piecewise-linear model (file units)."""
+    samples = []
+    agg_samples = [(1, 0.0)]
+    for bs in batch_sizes:
+        bs = min(bs, len(files))
+        # warmup: first call at each padded shape compiles
+        run_batched(query, files[:bs], bs, scale, use_kernel)
+        ex = AnalyticsExecutor(query, scale, use_kernel)
+        reps = max(3, min(8, len(files) // bs))
+        for i in range(reps):
+            lo = (i * bs) % max(len(files) - bs, 1)
+            ex.process_batch(concat_files(files[lo:lo + bs]))
+        secs = sorted(b.seconds for b in ex.batch_log)
+        samples.append((bs, secs[len(secs) // 2]))  # median per-batch cost
+    # final-agg cost vs #batches
+    for nb in (2, 8, 32):
+        per = max(len(files) // nb, 1)
+        ex = AnalyticsExecutor(query, scale, use_kernel)
+        for i in range(nb):
+            ex.process_batch(concat_files(files[i * per: (i + 1) * per] or
+                                          files[:1]))
+        _, agg_s = ex.finalize()
+        agg_samples.append((nb, agg_s))
+    model = fit_piecewise_linear(samples, agg_samples)
+    return model

@@ -1,0 +1,208 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle,
+across shapes and dtypes, plus cross-checks against the model layers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ops import rglru as rglru_kernel
+from repro.kernels.rglru.ref import rglru_rec_ref
+from repro.kernels.rglru.rglru import rglru_pallas
+from repro.kernels.segagg.ops import group_count, segagg
+from repro.kernels.segagg.ref import combine_ref, segagg_ref
+from repro.kernels.ssd.ops import ssd as ssd_kernel
+from repro.kernels.ssd.ref import ssd_rec_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+class TestSegAgg:
+    @pytest.mark.parametrize("n,groups,width", [
+        (100, 7, 1), (1000, 37, 3), (4096, 256, 4), (513, 300, 1),
+        (2048, 1, 2), (64, 1000, 1),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_segment_sum(self, n, groups, width, dtype):
+        key = jax.random.PRNGKey(n + groups)
+        keys = jax.random.randint(key, (n,), 0, groups)
+        vals = jax.random.normal(key, (n, width)).astype(dtype)
+        got = segagg(keys, vals, groups)
+        want = segagg_ref(keys, vals, groups)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_tol(dtype))
+
+    def test_count_and_combine(self):
+        key = jax.random.PRNGKey(0)
+        keys = jax.random.randint(key, (5000,), 0, 64)
+        counts = group_count(keys, 64)
+        assert float(counts.sum()) == 5000.0
+        # partial aggregation over batches == single-batch aggregation
+        parts = jnp.stack([
+            segagg(keys[i * 1000:(i + 1) * 1000],
+                   jnp.ones((1000, 1)), 64) for i in range(5)
+        ])
+        total = combine_ref(parts)
+        np.testing.assert_allclose(np.asarray(total[:, 0]),
+                                   np.asarray(counts), rtol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("shape", [
+        # (B, Sq, Sk, H, Hkv, D)
+        (1, 128, 128, 4, 4, 32),
+        (2, 64, 64, 4, 2, 16),
+        (1, 256, 256, 8, 1, 64),   # MQA
+        (2, 100, 100, 4, 4, 32),   # non-block-multiple seq (padding path)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, shape, dtype, causal):
+        B, Sq, Sk, H, Hkv, D = shape
+        ks = jax.random.split(jax.random.PRNGKey(42), 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, D)).astype(dtype)
+        k = jax.random.normal(ks[1], (B, Sk, Hkv, D)).astype(dtype)
+        v = jax.random.normal(ks[2], (B, Sk, Hkv, D)).astype(dtype)
+        got = flash_attention(q, k, v, causal=causal)
+        want = attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+    @pytest.mark.parametrize("window", [16, 64])
+    def test_sliding_window(self, window):
+        B, S, H, D = 1, 128, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, H, D))
+        v = jax.random.normal(ks[2], (B, S, H, D))
+        got = flash_attention(q, k, v, causal=True, window=window)
+        want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True,
+                             window=window).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_logit_cap(self):
+        B, S, H, D = 1, 64, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = 5.0 * jax.random.normal(ks[0], (B, S, H, D))
+        k = 5.0 * jax.random.normal(ks[1], (B, S, H, D))
+        v = jax.random.normal(ks[2], (B, S, H, D))
+        got = flash_attention(q, k, v, causal=True, logit_cap=50.0)
+        want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True,
+                             logit_cap=50.0).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_model_layer(self):
+        """Kernel vs the jnp chunked_attention used by the models."""
+        from repro.layers.attention import AttnSpec, chunked_attention
+
+        B, S, H, Hkv, D = 2, 96, 4, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        got = flash_attention(q, k, v, causal=True)
+        want = chunked_attention(q, k, v, AttnSpec(causal=True, chunk=32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("shape", [(1, 256, 128), (2, 300, 200),
+                                       (1, 1024, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_recurrence_matches_ref(self, shape, dtype):
+        B, S, N = shape
+        from repro.kernels.rglru.rglru import BLOCK_N, BLOCK_S
+
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        log_a = -jnp.abs(jax.random.normal(ks[0], (B, S, N))) * 0.1
+        u = jax.random.normal(ks[1], (B, S, N)) * 0.1
+        h0 = jnp.zeros((B, N), jnp.float32)
+        pad_s, pad_n = -S % BLOCK_S, -N % BLOCK_N
+        la_p = jnp.pad(log_a, ((0, 0), (0, pad_s), (0, pad_n)))
+        u_p = jnp.pad(u, ((0, 0), (0, pad_s), (0, pad_n)))
+        h0_p = jnp.pad(h0, ((0, 0), (0, pad_n)))
+        y, h_last = rglru_pallas(la_p.astype(dtype), u_p.astype(dtype), h0_p)
+        y_ref, h_ref = rglru_rec_ref(la_p.astype(dtype), u_p.astype(dtype), h0_p)
+        np.testing.assert_allclose(np.asarray(y[:, :S, :N], np.float32),
+                                   np.asarray(y_ref[:, :S, :N], np.float32),
+                                   **_tol(dtype))
+        np.testing.assert_allclose(np.asarray(h_last[:, :N]),
+                                   np.asarray(h_ref[:, :N]),
+                                   **_tol(dtype))
+
+    def test_full_op_matches_model_layer(self):
+        from repro.layers.rglru import rglru_scan
+
+        B, S, N = 2, 160, 96
+        ks = jax.random.split(jax.random.PRNGKey(11), 4)
+        x = jax.random.normal(ks[0], (B, S, N))
+        r = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, N)))
+        i = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, N)))
+        a_param = jax.random.normal(ks[3], (N,))
+        y_k, h_k = rglru_kernel(x, r, i, a_param)
+        y_l, h_l = rglru_scan(x, r, i, a_param)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_l),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_l),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("shape", [
+        # (B, S, H, P, N)
+        (1, 256, 2, 16, 8),
+        (2, 200, 4, 32, 16),
+        (1, 512, 1, 64, 32),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_sequential_ref(self, shape, dtype):
+        B, S, H, P, N = shape
+        ks = jax.random.split(jax.random.PRNGKey(13), 4)
+        x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.abs(jax.random.normal(ks[2], (H,))) - 0.1
+        Bm = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+        Cm = jax.random.normal(ks[0], (B, S, H, N)) * 0.3
+        D = jnp.ones((H,))
+        y_k, h_k = ssd_kernel(x, dt, A, Bm, Cm, D)
+        # oracle: sequential recurrence on dt-weighted inputs + D skip
+        la = dt * A[None, None, :]
+        xw = x.astype(jnp.float32) * dt[..., None]
+        y_r, h_r = ssd_rec_ref(xw, la, Bm, Cm)
+        y_r = y_r.astype(jnp.float32) + x.astype(jnp.float32) * D[None, None, :, None]
+        bf16 = dtype == jnp.bfloat16
+        tol = dict(rtol=3e-2, atol=3e-2) if bf16 else dict(rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                                   rtol=2e-3, atol=5e-3 if bf16 else 2e-3)
+
+    def test_matches_model_layer(self):
+        from repro.layers.ssd import ssd_chunked
+
+        B, S, H, P, N = 1, 256, 2, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(17), 4)
+        x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.abs(jax.random.normal(ks[2], (H,))) - 0.1
+        Bm = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+        Cm = jax.random.normal(ks[0], (B, S, H, N)) * 0.3
+        D = jnp.ones((H,))
+        y_k, h_k = ssd_kernel(x, dt, A, Bm, Cm, D)
+        y_l, h_l = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=64)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_l),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_l),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,157 @@
+"""Dynamic multi-query scheduling (paper §4, Algorithm 2) behaviour tests."""
+import pytest
+
+from repro.core import (
+    ConstantRateArrival,
+    DynamicQuerySpec,
+    LinearCostModel,
+    Query,
+    Strategy,
+    check_schedulability,
+    find_min_batch_size,
+    jittered_trace,
+    schedule_dynamic,
+)
+
+
+def mk_query(qid, wind_start, n, rate, deadline_slack, tuple_cost=0.05,
+             overhead=0.5, agg_per_batch=0.1):
+    arr = ConstantRateArrival(wind_start=wind_start, rate=rate, num_tuples_total=n)
+    cm = LinearCostModel(tuple_cost=tuple_cost, overhead=overhead,
+                         agg_per_batch=agg_per_batch)
+    return Query(
+        query_id=qid,
+        wind_start=wind_start,
+        wind_end=arr.wind_end,
+        deadline=arr.wind_end + cm.cost(n) * deadline_slack,
+        num_tuples_total=n,
+        cost_model=cm,
+        arrival=arr,
+    )
+
+
+class TestMinBatch:
+    def test_rsf_bound_holds(self):
+        # Eq. (9): batched cost <= (1 + delta) * single-batch cost.
+        cm = LinearCostModel(tuple_cost=0.01, overhead=2.0, agg_per_batch=0.5)
+        for delta in (0.1, 0.5, 1.0):
+            x = find_min_batch_size(10_000, cm, delta, c_max=1e9)
+            assert cm.batched_cost(10_000, x) <= (1 + delta) * cm.cost(10_000) + 1e-6
+
+    def test_smaller_delta_larger_batch(self):
+        cm = LinearCostModel(tuple_cost=0.01, overhead=2.0)
+        x10 = find_min_batch_size(10_000, cm, 0.1, c_max=1e9)
+        x100 = find_min_batch_size(10_000, cm, 1.0, c_max=1e9)
+        assert x10 >= x100
+
+    def test_cmax_caps_batch(self):
+        cm = LinearCostModel(tuple_cost=0.01, overhead=2.0)
+        x = find_min_batch_size(10_000, cm, 0.1, c_max=3.0)
+        assert cm.cost(x) <= 3.0 + 1e-9
+
+    def test_group_floor(self):
+        cm = LinearCostModel(tuple_cost=0.001, overhead=0.1)
+        x = find_min_batch_size(100_000, cm, 10.0, c_max=1e9, num_groups=5_000)
+        assert x >= 10_000
+
+
+class TestDynamic:
+    def test_single_query_completes(self):
+        q = mk_query("q0", 0.0, 1000, rate=100.0, deadline_slack=2.0)
+        trace = schedule_dynamic([DynamicQuerySpec(query=q)], Strategy.LLF,
+                                 delta_rsf=0.5, c_max=30.0)
+        out = trace.outcome("q0")
+        assert out.met_deadline
+        assert sum(e.num_tuples for e in trace.executions) == 1000
+
+    @pytest.mark.parametrize("strategy", list(Strategy))
+    def test_all_strategies_complete_all_tuples(self, strategy):
+        qs = [
+            mk_query("a", 0.0, 500, 100.0, 3.0),
+            mk_query("b", 1.0, 800, 200.0, 3.0),
+            mk_query("c", 2.0, 300, 50.0, 3.0),
+        ]
+        trace = schedule_dynamic([DynamicQuerySpec(query=q) for q in qs],
+                                 strategy, delta_rsf=0.5, c_max=30.0)
+        assert len(trace.outcomes) == 3
+        got = {o.query_id for o in trace.outcomes}
+        assert got == {"a", "b", "c"}
+        per_q = {q.query_id: q.num_tuples_total for q in qs}
+        for qid, n in per_q.items():
+            done = sum(e.num_tuples for e in trace.executions if e.query_id == qid)
+            assert done == n, (qid, done, n)
+
+    def test_llf_meets_feasible_deadlines(self):
+        # Deadlines must absorb the delta_RSF-inflated batched cost of the
+        # whole set (total work <= 1.5 * 81.5 ~ 122), as in the paper's §7.4
+        # staggered-deadline generator: slack factor 4x single-batch cost.
+        qs = [
+            mk_query("a", 0.0, 500, 100.0, 4.0),
+            mk_query("b", 0.0, 800, 200.0, 4.0),
+            mk_query("c", 0.0, 300, 50.0, 4.0),
+        ]
+        assert check_schedulability(qs).feasible
+        trace = schedule_dynamic([DynamicQuerySpec(query=q) for q in qs],
+                                 Strategy.LLF, delta_rsf=0.5, c_max=5.0)
+        assert trace.all_met, [(o.query_id, o.completion_time, o.deadline)
+                               for o in trace.outcomes]
+
+    def test_non_idling(self):
+        # NINP: executor never idles while a MinBatch is ready -> with two
+        # always-ready queries, executions are back-to-back.
+        qs = [mk_query("a", 0.0, 2000, 1000.0, 5.0),
+              mk_query("b", 0.0, 2000, 1000.0, 5.0)]
+        trace = schedule_dynamic([DynamicQuerySpec(query=q) for q in qs],
+                                 Strategy.EDF, delta_rsf=0.5, c_max=10.0)
+        ends = sorted((e.start, e.end) for e in trace.executions)
+        for (s0, e0), (s1, e1) in zip(ends, ends[1:]):
+            assert s1 >= e0 - 1e-9  # non-preemptive, no overlap
+
+    def test_query_deletion(self):
+        qs = [mk_query("keep", 0.0, 1000, 100.0, 3.0),
+              mk_query("drop", 0.0, 1000, 100.0, 3.0)]
+        specs = [DynamicQuerySpec(query=qs[0]),
+                 DynamicQuerySpec(query=qs[1], delete_time=1.0)]
+        trace = schedule_dynamic(specs, Strategy.EDF, delta_rsf=0.5, c_max=30.0)
+        assert any(o.query_id == "keep" for o in trace.outcomes)
+        assert not any(o.query_id == "drop" for o in trace.outcomes)
+        dropped = sum(e.num_tuples for e in trace.executions if e.query_id == "drop")
+        assert dropped < 1000
+
+    def test_late_submission_waits_for_batch_end(self):
+        # Non-preemptive: a query submitted mid-batch starts only after the
+        # running batch finishes (§4.2).
+        slow = mk_query("slow", 0.0, 4000, 4000.0, 4.0, tuple_cost=0.01,
+                        overhead=0.0)
+        urgent = mk_query("urgent", 0.0, 100, 1000.0, 1.5)
+        urgent.submit_time = 0.05
+        trace = schedule_dynamic(
+            [DynamicQuerySpec(query=slow), DynamicQuerySpec(query=urgent)],
+            Strategy.LLF, delta_rsf=0.5, c_max=20.0)
+        first_urgent = min(e.start for e in trace.executions
+                           if e.query_id == "urgent")
+        overlapping = [e for e in trace.executions
+                       if e.query_id == "slow" and e.start < 0.05 < e.end]
+        if overlapping:
+            assert first_urgent >= overlapping[0].end - 1e-9
+
+    def test_jittered_arrivals_still_complete(self):
+        q = mk_query("j", 0.0, 1000, 100.0, 3.0)
+        truth = jittered_trace(q.arrival, seed=7, jitter_frac=0.3,
+                               rate_scale=0.9)
+        trace = schedule_dynamic(
+            [DynamicQuerySpec(query=q, truth=truth)], Strategy.LLF,
+            delta_rsf=0.5, c_max=30.0)
+        done = sum(e.num_tuples for e in trace.executions)
+        assert done == truth.num_tuples_total
+
+    def test_unknown_total_estimation(self):
+        q = mk_query("u", 0.0, 1000, 100.0, 3.0)
+        truth = jittered_trace(q.arrival, seed=3, jitter_frac=0.1,
+                               rate_scale=1.2)  # faster than predicted
+        trace = schedule_dynamic(
+            [DynamicQuerySpec(query=q, truth=truth, total_known=False)],
+            Strategy.LLF, delta_rsf=0.5, c_max=30.0)
+        done = sum(e.num_tuples for e in trace.executions)
+        assert done == truth.num_tuples_total
+        assert trace.outcomes  # completion detected without knowing the total

