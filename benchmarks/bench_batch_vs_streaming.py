@@ -14,13 +14,16 @@ import dataclasses
 
 from repro.core import (
     PiecewiseLinearCostModel,
+    Planner,
     micro_batch_trace,
     one_shot_trace,
     plan_cost,
-    schedule_single,
 )
 
+
 from .common import Timer, emit, paper_query, write_result
+
+_plan_single = Planner(policy="single").schedule
 
 # seconds; the paper sweeps 5/10/30/40-minute intervals + default (~asap)
 INTERVALS = {"default_10s": 10.0, "5min": 300.0, "10min": 600.0,
@@ -47,7 +50,7 @@ def main() -> None:
 
         for qid in PAPER_QUERY_IDS:
             q = paper_query(qid)
-            ours = plan_cost(q, schedule_single(q))
+            ours = plan_cost(q, _plan_single(q))
             qs = streaming_query(q)
             for name, iv in INTERVALS.items():
                 tr = micro_batch_trace(qs, iv)

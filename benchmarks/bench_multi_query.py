@@ -13,9 +13,9 @@ from __future__ import annotations
 
 from repro.core import (
     DynamicQuerySpec,
+    Planner,
     Strategy,
     post_window_condition,
-    schedule_dynamic,
     staggered_deadlines,
 )
 
@@ -30,8 +30,8 @@ def run_case(delta: float, strategy: Strategy, delta_rsf: float,
     queries = staggered_deadlines(all_paper_queries(regime=regime), delta,
                                   C_MAX, seed)
     specs = [DynamicQuerySpec(query=q) for q in queries]
-    trace = schedule_dynamic(specs, strategy, delta_rsf=delta_rsf,
-                             c_max=C_MAX)
+    trace = Planner(policy=f"{strategy.value}-dynamic", delta_rsf=delta_rsf,
+                    c_max=C_MAX).run(specs)
     missed = [o.query_id for o in trace.outcomes if not o.met_deadline]
     missed += [s.query.query_id for s in specs
                if not any(o.query_id == s.query.query_id

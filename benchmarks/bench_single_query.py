@@ -14,14 +14,17 @@ from repro.core import (
     ConstantRateArrival,
     InfeasibleDeadline,
     LinearCostModel,
+    Planner,
     Query,
     plan_cost,
-    schedule_single,
     validate_schedule,
 )
+
 from repro.data.tpch import PAPER_QUERY_IDS
 
 from .common import Timer, emit, paper_query, write_result
+
+_plan_single = Planner(policy="single").schedule
 
 DEADLINE_FRACS = [1.0, 0.8, 0.6, 0.4, 0.2, 0.1]
 
@@ -33,7 +36,7 @@ def paper_worked_cases():
     for deadline, want in [(16.0, [10]), (15.0, [10]), (12.0, [6, 4]),
                            (11.0, [4, 4, 2])]:
         q = Query(f"case-d{deadline}", 1.0, 10.0, deadline, 10, cm, arr)
-        plan = schedule_single(q)
+        plan = _plan_single(q)
         validate_schedule(q, plan)
         assert plan.sch_tuples == want, (deadline, plan.sch_tuples)
         out.append({"deadline": deadline, "batches": plan.sch_tuples,
@@ -45,11 +48,11 @@ def deadline_sweep():
     rows = []
     for qid in PAPER_QUERY_IDS:
         base_q = paper_query(qid, deadline_frac=1.0)
-        base_cost = plan_cost(base_q, schedule_single(base_q))
+        base_cost = plan_cost(base_q, _plan_single(base_q))
         for frac in DEADLINE_FRACS:
             q = paper_query(qid, deadline_frac=frac)
             try:
-                plan = schedule_single(q)
+                plan = _plan_single(q)
                 validate_schedule(q, plan)
                 post_window = sum(b.num_tuples for b in plan.batches
                                   if b.sched_time >= q.wind_end - 1e-9)

@@ -2,7 +2,7 @@
 
   1. generate a TPC-H-like record stream (reduced scale),
   2. calibrate the cost model from measured batch runs (paper Section 6.2),
-  3. plan batches with Algorithm 1 against a deadline,
+  3. plan batches with the "single" policy (Algorithm 1) against a deadline,
   4. execute the plan on-device (segagg partial aggregation, host spill),
   5. final aggregation; verify the result equals a one-shot run.
 
@@ -10,10 +10,10 @@
 """
 import numpy as np
 
-from repro.core import Query, TraceArrival, plan_cost, schedule_single
+from repro.core import Planner, Query, TraceArrival, plan_cost
 from repro.data.tpch import PAPER_QUERIES, StreamScale, stream_files
 from repro.serve.analytics import (
-    concat_files, measure_cost_model, run_batched, run_plan,
+    measure_cost_model, run_batched, run_plan,
 )
 
 SCALE = StreamScale(scale=0.01)
@@ -34,7 +34,7 @@ arrival = TraceArrival(timestamps=tuple(times))
 deadline = arrival.wind_end + 0.6 * cost_model.cost(NUM_FILES)
 q = Query("CQ3-deadline", arrival.wind_start, arrival.wind_end, deadline,
           NUM_FILES, cost_model, arrival)
-plan = schedule_single(q)
+plan = Planner(policy="single").schedule(q)
 print(f"deadline {deadline:.2f}s -> plan: {plan.sch_tuples} files per batch "
       f"at t={[round(p, 2) for p in plan.sch_points]} "
       f"(modelled cost {plan_cost(q, plan)*1e3:.1f} ms)")

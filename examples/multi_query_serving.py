@@ -1,8 +1,9 @@
 """Dynamic multi-job deadline serving with REAL model execution:
 
 three concurrent batch-inference jobs (prompt windows with deadlines) are
-time-shared by the paper's Algorithm 2 (LLF) on one reduced-config model;
-every scheduled MinBatch runs actual prefill compute on CPU.
+time-shared by the paper's Algorithm 2 (the registered ``llf-dynamic``
+policy) on one reduced-config model; every scheduled MinBatch runs actual
+prefill compute on CPU through the shared runtime loop.
 
     PYTHONPATH=src python examples/multi_query_serving.py
 """

@@ -1,20 +1,23 @@
-"""Quickstart: the paper's scheduling algorithms in 40 lines.
+"""Quickstart: the paper's scheduling algorithms behind the Planner API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import (
-    ConstantRateArrival, LinearCostModel, Query,
-    schedule_single, schedule_via_constraints, plan_cost, validate_schedule,
+    ConstantRateArrival, LinearCostModel, Planner, Query,
+    list_policies, plan_cost, validate_schedule,
 )
+
+print("registered policies:", ", ".join(list_policies()))
 
 # The paper's running example (Section 3.1): 10 tuples arriving at 1/s over
 # window [1, 10]; processing runs at 2 tuples per time unit.
 arr = ConstantRateArrival(wind_start=1.0, rate=1.0, num_tuples_total=10)
 cm = LinearCostModel(tuple_cost=0.5)
 
+planner = Planner(policy="single")  # Algorithm 1
 for deadline in (16.0, 15.0, 12.0, 11.0):
     q = Query(f"case(deadline={deadline})", 1.0, 10.0, deadline, 10, cm, arr)
-    plan = schedule_single(q)
+    plan = planner.schedule(q)
     validate_schedule(q, plan)
     print(f"deadline {deadline:>5}: batches {plan.sch_tuples} "
           f"@ t={['%.1f' % p for p in plan.sch_points]} "
@@ -22,5 +25,11 @@ for deadline in (16.0, 15.0, 12.0, 11.0):
 
 # The constraint-based formulation (Section 3.2) agrees on linear models:
 q = Query("case-3", 1.0, 10.0, 12.0, 10, cm, arr)
-print("constraint solver:", schedule_via_constraints(q).sch_tuples,
-      "== Algorithm 1:", schedule_single(q).sch_tuples)
+print("constraint solver:", Planner(policy="constraints").schedule(q).sch_tuples,
+      "== Algorithm 1:", planner.schedule(q).sch_tuples)
+
+# End-to-end: plan AND execute on the shared runtime loop (simulated).
+trace = planner.run([q])
+out = trace.outcome("case-3")
+print(f"executed {out.num_batches} batches, finished t={out.completion_time:.1f} "
+      f"(deadline {out.deadline}) -> met={out.met_deadline}")

@@ -1,12 +1,36 @@
-"""repro.core — the paper's contribution: deadline-aware intermittent batch
-scheduling (Saranya & Sudarshan, "Scheduling of Intermittent Query
-Processing", 2023).
+"""repro.core — deadline-aware intermittent batch scheduling (Saranya &
+Sudarshan, "Scheduling of Intermittent Query Processing", 2023), organized
+around three first-class pieces:
 
-Pure-Python/numpy, executor-agnostic.  Consumed by the discrete-event
-simulator (paper experiments), the TPU analytics executor
-(``repro.serve.analytics``) and the model-serving engine
-(``repro.serve.engine``).
+* **SchedulingPolicy** — one scheme of the paper's family, behind a string
+  key: ``single`` (Algorithm 1), ``single-no-agg`` / ``single-agg`` (§3.1
+  components), ``constraints`` / ``brute-force`` (§3.2), ``llf-dynamic`` /
+  ``edf-dynamic`` / ``sjf-dynamic`` / ``rr-dynamic`` (Algorithm 2).  Look up
+  with ``get_policy(name)`` / ``list_policies()``; add your own with
+  ``@register_policy("my-policy")`` — no executor changes needed.
+* **Planner** — the facade: ``Planner(policy="single").plan(queries)``
+  returns a ``Plan``; ``.run(workload, executor)`` executes end to end.
+* **Executor** — the backend protocol (``submit_batch`` / ``finalize`` /
+  ``clock``) implemented by the discrete-event simulator
+  (``runtime.SimulatedExecutor``), the TPU analytics executor
+  (``repro.serve.analytics``) and the model-serving engine
+  (``repro.serve.engine``).  All executors share ONE runtime loop
+  (``repro.core.runtime.run``) that owns deadline checking, C_max straggler
+  re-queue and trace recording.
+
+Pure-Python/numpy and executor-agnostic; the legacy ``schedule_*`` free
+functions remain as deprecation shims (see docs/API.md for the migration
+table).
 """
+from .api import (
+    Executor,
+    Planner,
+    SchedulingEvent,
+    SchedulingPolicy,
+    get_policy,
+    list_policies,
+    register_policy,
+)
 from .arrivals import (
     ArrivalModel,
     ConstantRateArrival,
@@ -31,6 +55,14 @@ from .multi_query import (
     LARGE_NUMBER,
     DynamicQuerySpec,
     schedule_dynamic,
+)
+from .runtime import (
+    BaseExecutor,
+    QueryRuntime,
+    RuntimeState,
+    SimulatedExecutor,
+    execute_plan,
+    run,
 )
 from .schedulability import (
     FeasibilityReport,
@@ -58,6 +90,8 @@ from .types import (
     BatchExecution,
     ExecutionTrace,
     InfeasibleDeadline,
+    Plan,
+    PolicyDecision,
     Query,
     QueryOutcome,
     Schedule,
@@ -66,21 +100,31 @@ from .types import (
 
 __all__ = [
     "ArrivalModel",
+    "BaseExecutor",
     "Batch",
     "BatchExecution",
     "ConstantRateArrival",
     "CostModelBase",
     "DynamicQuerySpec",
     "ExecutionTrace",
+    "Executor",
     "FeasibilityReport",
     "InfeasibleDeadline",
     "LARGE_NUMBER",
     "LinearCostModel",
     "MemoryModel",
     "PiecewiseLinearCostModel",
+    "Plan",
+    "Planner",
+    "PolicyDecision",
     "Query",
     "QueryOutcome",
+    "QueryRuntime",
+    "RuntimeState",
     "Schedule",
+    "SchedulingEvent",
+    "SchedulingPolicy",
+    "SimulatedExecutor",
     "Strategy",
     "SublinearCostModel",
     "TraceArrival",
@@ -88,21 +132,26 @@ __all__ = [
     "batched_cost_curve",
     "brute_force_optimal",
     "check_schedulability",
+    "execute_plan",
     "execute_single",
-    "micro_batch_trace",
-    "one_shot_trace",
-    "staggered_deadlines",
     "feasible_assignment",
     "find_min_batch_size",
     "fit_piecewise_linear",
+    "get_policy",
     "jittered_trace",
+    "list_policies",
+    "micro_batch_trace",
     "min_post_window_work",
+    "one_shot_trace",
     "plan_cost",
     "post_window_condition",
+    "register_policy",
+    "run",
     "schedule_dynamic",
     "schedule_single",
     "schedule_via_constraints",
     "schedule_with_agg_cost",
     "schedule_without_agg_cost",
+    "staggered_deadlines",
     "validate_schedule",
 ]

@@ -1,131 +1,51 @@
-"""Constraint-based scheduling for LINEAR cost models (paper §3.2, Eqs. 5-8).
+"""Legacy constraint-based entry points (paper §3.2, Eqs. 5-8).
 
-The paper formulates batch sizing as mixed-integer constraints and solves them
-with Google OR-Tools, minimizing the number of batches (fewer batches == less
-overhead == less cost under Eq. (1)).  OR-Tools is unavailable offline, so
-this module solves the *same* constraint system exactly:
+The solver moved to ``repro.core.policies.constraint`` (registered as the
+``constraints`` and ``brute-force`` policies); the functions below are thin
+deprecation shims kept for the pre-Planner API.  ``feasible_assignment`` is
+re-exported unchanged (it is the fixed-n feasibility primitive, not a
+scheduling scheme).
 
-    (5)  sum_i x_i                         == N
-    (6)  start_i + dur_i                   <= start_{i+1}        (no overlap)
-    (7)  start_n + dur_n                   <= deadline
-    (8)  rate * start_i                    >= sum_{j<=i} x_j     (availability)
+Migration:
 
-For a fixed batch count ``n`` the system is a feasibility problem over the
-x_i; because cost is affine and arrivals are (piecewise-)linear, the
-*latest-start* assignment is extremal: computing it by backward substitution
-over the constraint chain either yields a witness or proves infeasibility.
-``schedule_via_constraints`` then takes the smallest feasible ``n`` — exactly
-the OR-Tools objective.  A brute-force enumerator over integer compositions is
-provided for cross-validation on small instances (tests assert all three —
-Algorithm 1, this solver, brute force — agree, as §3.2 reports).
+    schedule_via_constraints(q)  -> Planner(policy="constraints").schedule(q)
+    brute_force_optimal(q)       -> Planner(policy="brute-force").schedule(q)
+                                    (or policies.constraint.brute_force_search
+                                    for the raw (n, sizes) tuple)
 """
 from __future__ import annotations
 
-import itertools
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
-from .cost_model import LinearCostModel
-from .types import Batch, InfeasibleDeadline, Query, Schedule
+from ._deprecation import warn_deprecated
+from .policies.constraint import (  # canonical implementations
+    brute_force_search,
+    feasible_assignment,
+    plan_via_constraints,
+)
+from .types import Query, Schedule
 
-_EPS = 1e-9
-
-
-def _check_linear(query: Query) -> LinearCostModel:
-    cm = query.cost_model
-    if not isinstance(cm, LinearCostModel):
-        raise TypeError(
-            "constraint solver supports only LinearCostModel (paper §3.2); "
-            "use Algorithm 1 (schedule_single) for arbitrary models"
-        )
-    return cm
-
-
-def feasible_assignment(
-    query: Query, n: int, deadline: Optional[float] = None
-) -> Optional[Schedule]:
-    """Latest-start witness for the Eq. (5)-(8) system with ``n`` batches,
-    or None if the system is infeasible for this ``n``."""
-    cm = _check_linear(query)
-    arr = query.arrival
-    deadline = query.deadline if deadline is None else deadline
-    if n > 1:
-        deadline = deadline - cm.agg_cost(n)  # Eq. (4) allowance
-    total = query.num_tuples_total
-
-    # Backward substitution: batch i's deadline is start_{i+1} (constraint 6,
-    # with start_{n+1} := deadline per constraint 7).  Constraint (8) says the
-    # cumulative count through batch i — i.e. `pending` at this point of the
-    # backward pass — must have arrived before batch i starts.  Maximizing
-    # each batch's size is extremal for feasibility (exchange argument ==
-    # the paper's §3.1 optimality proof), so greedy-max yields a witness iff
-    # the system is feasible.
-    sizes_rev: List[int] = []
-    starts_rev: List[float] = []
-    time_pt = deadline
-    pending = total
-    for i in range(n, 0, -1):
-        if pending == 0:
-            break
-        avail = arr.input_time(pending)
-        k = min(cm.tuples_processable(time_pt - avail), pending)
-        if i == 1 and k < pending:
-            return None  # the first batch must absorb everything left
-        if k <= 0:
-            return None
-        start = time_pt - cm.cost(k)  # latest start; >= avail by construction
-        if start < avail - _EPS:
-            return None
-        sizes_rev.append(k)
-        starts_rev.append(start)
-        pending -= k
-        time_pt = start
-    if pending > 0:
-        return None
-    batches = tuple(
-        Batch(sched_time=s, num_tuples=x)
-        for s, x in sorted(zip(starts_rev, sizes_rev))
-    )
-    return Schedule(batches=batches)
+__all__ = [
+    "brute_force_optimal",
+    "feasible_assignment",
+    "schedule_via_constraints",
+]
 
 
 def schedule_via_constraints(query: Query, max_batches: int = 512) -> Schedule:
-    """Smallest-``n`` feasible solution of Eqs. (5)-(8) (the OR-Tools objective)."""
-    _check_linear(query)
-    for n in range(1, max_batches + 1):
-        plan = feasible_assignment(query, n)
-        if plan is not None:
-            return plan
-    raise InfeasibleDeadline(
-        f"{query.query_id}: no feasible plan with <= {max_batches} batches"
+    """Deprecated shim for the ``constraints`` policy."""
+    warn_deprecated(
+        "schedule_via_constraints()", 'Planner(policy="constraints")'
     )
+    return plan_via_constraints(query, max_batches)
 
 
 def brute_force_optimal(
     query: Query, max_batches: int = 4
 ) -> Optional[Tuple[int, Tuple[int, ...]]]:
-    """Exhaustive ground truth for SMALL instances (tests only).
-
-    Enumerates integer compositions of N into 1..max_batches parts, checks
-    Eqs. (5)-(8) directly (with latest-feasible starts), and returns
-    (min_num_batches, sizes) or None.
-    """
-    cm = _check_linear(query)
-    arr = query.arrival
-    total = query.num_tuples_total
-    for n in range(1, max_batches + 1):
-        deadline = query.deadline - (cm.agg_cost(n) if n > 1 else 0.0)
-        for cut in itertools.combinations(range(1, total), n - 1):
-            sizes = [b - a for a, b in zip((0,) + cut, cut + (total,))]
-            # Latest-start backward check of (6)-(8); (5) holds by
-            # construction of the composition.  input_time(N) == wind_end, so
-            # the last batch's availability bound is the window end.
-            time_pt, done, ok = deadline, total, True
-            for i in range(n - 1, -1, -1):
-                start = time_pt - cm.cost(sizes[i])
-                if start < arr.input_time(done) - _EPS:
-                    ok = False
-                    break
-                time_pt, done = start, done - sizes[i]
-            if ok:
-                return n, tuple(sizes)
-    return None
+    """Deprecated shim for the ``brute-force`` policy / search."""
+    warn_deprecated(
+        "brute_force_optimal()",
+        'Planner(policy="brute-force") or policies.constraint.brute_force_search()',
+    )
+    return brute_force_search(query, max_batches)

@@ -1,154 +1,27 @@
-"""Dynamic multi-query scheduling (paper §4, Algorithm 2).
+"""Legacy dynamic multi-query entry point (paper §4, Algorithm 2).
 
-Non-idling, non-preemptive (NINP) time-shared executor: whenever the executor
-is free, every active query whose MinBatch is ready (or which is past its
-estimated readiness time — §4.4 jitter handling) competes under the chosen
-strategy (LLF / EDF / SJF / RR); the winner runs ONE MinBatch to completion.
-Batch cost is bounded by C_max at MinBatch-sizing time, which bounds the
-blocking period any newly arrived urgent query can suffer (§4.2-4.3).
+Algorithm 2's event loop moved to ``repro.core.runtime`` (the single runtime
+loop shared by every executor) and the per-strategy decision logic to
+``repro.core.policies.dynamic`` (registered as ``llf-dynamic`` /
+``edf-dynamic`` / ``sjf-dynamic`` / ``rr-dynamic``); ``schedule_dynamic``
+below is a thin deprecation shim kept for the pre-Planner API.
+``DynamicQuerySpec`` (the workload spec) now lives in
+``repro.core.runtime`` and is re-exported here unchanged.
 
-The engine is a discrete-event simulation where cost units == time units
-(exactly how the paper's §7 experiments report "cost").  The same decision
-logic is reused by the real executors in ``repro.serve`` — they supply a
-wall-clock ``now`` and real batch-execution callbacks.
+Migration:
 
-Uncertainty handling (§4.4):
-* rate jitter           — triggers fire on min(count-ready, estimated time);
-* unknown total tuples  — slack uses an estimated total (observed rate x
-                          window) refreshed at every decision instant.
+    schedule_dynamic(specs, Strategy.LLF, delta_rsf=d, c_max=c)
+        -> Planner(policy="llf-dynamic", delta_rsf=d, c_max=c).run(specs)
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence
 
-from .arrivals import ArrivalModel
-from .minbatch import find_min_batch_size
-from .types import (
-    BatchExecution,
-    ExecutionTrace,
-    Query,
-    QueryOutcome,
-    Strategy,
-)
+from ._deprecation import warn_deprecated
+from .runtime import DynamicQuerySpec, LARGE_NUMBER  # noqa: F401  (re-export)
+from .types import BatchExecution, ExecutionTrace, Strategy
 
-LARGE_NUMBER = 1e18  # Algorithm 2's sentinel for "not ready"
-_EPS = 1e-9
-
-
-@dataclasses.dataclass
-class DynamicQuerySpec:
-    """One query as submitted to the dynamic scheduler.
-
-    ``truth`` is the actual arrival process; planners only ever consult
-    ``query.arrival`` (the predicted model).  ``delete_time`` models §4's
-    "queries may be added or removed at any point".
-    """
-
-    query: Query
-    truth: Optional[ArrivalModel] = None
-    delete_time: Optional[float] = None
-    num_groups: int = 0
-    total_known: bool = True
-
-    def __post_init__(self) -> None:
-        if self.truth is None:
-            self.truth = self.query.arrival
-
-
-@dataclasses.dataclass
-class _Runtime:
-    spec: DynamicQuerySpec
-    min_batch: int = 0
-    processed: int = 0
-    batches_done: int = 0
-    admitted: bool = False
-    deleted: bool = False
-    completed: bool = False
-    rr_seq: int = 0  # FIFO ticket for round-robin
-
-    @property
-    def q(self) -> Query:
-        return self.spec.query
-
-    def est_total(self, now: float) -> int:
-        """Total tuples: known, or estimated from the observed rate (§4.4)."""
-        if self.spec.total_known:
-            return self.q.num_tuples_total
-        seen = self.spec.truth.tuples_available(now)
-        span = max(now - self.q.wind_start, _EPS)
-        window = max(self.q.wind_end - self.q.wind_start, _EPS)
-        if now >= self.q.wind_end:
-            return seen
-        return max(seen, int(math.ceil(seen / span * window)))
-
-    def pending(self, now: float) -> int:
-        return max(self.est_total(now) - self.processed, 0)
-
-    def avail(self, now: float) -> int:
-        return max(self.spec.truth.tuples_available(now) - self.processed, 0)
-
-    def remaining_cost(self, now: float) -> float:
-        """FindMinCompCost: pending tuples in MinBatch chunks + final agg."""
-        pend = self.pending(now)
-        if pend == 0:
-            return 0.0
-        cm = self.q.cost_model
-        full, rem = divmod(pend, max(self.min_batch, 1))
-        nb = full + (1 if rem else 0)
-        c = full * cm.cost(self.min_batch) + (cm.cost(rem) if rem else 0.0)
-        total_batches = self.batches_done + nb
-        if total_batches > 1:
-            c += cm.agg_cost(total_batches)
-        return c
-
-    def laxity(self, now: float) -> float:
-        """Eq. (10): deadline - now - remaining cost."""
-        return self.q.deadline - now - self.remaining_cost(now)
-
-    def ready(self, now: float) -> bool:
-        """MinBatch ready, or past the *predicted* readiness instant with
-        something to process, or window over with a tail remainder (§4.4)."""
-        if self.completed or self.deleted or not self.admitted:
-            return False
-        a = self.avail(now)
-        if a <= 0:
-            return False
-        if a >= self.min_batch:
-            return True
-        est_ready = self.q.arrival.input_time(self.processed + self.min_batch)
-        if now >= est_ready - _EPS:
-            return True
-        return now >= self.q.wind_end - _EPS and self.processed + a >= self.est_total(now)
-
-    def next_ready_time(self, now: float) -> float:
-        """Earliest future instant at which ``ready`` can flip true (sim only)."""
-        if self.completed or self.deleted:
-            return math.inf
-        if not self.admitted:
-            return self.q.submit_time
-        truth = self.spec.truth
-        want = self.processed + self.min_batch
-        cands = [self.q.arrival.input_time(want)]  # predicted readiness (§4.4)
-        if want <= truth.num_tuples_total:
-            cands.append(truth.input_time(want))  # actual count-readiness
-        elif truth.tuples_available(truth.wind_end) > self.processed:
-            cands.append(max(self.q.wind_end, truth.input_time(truth.num_tuples_total)))
-        t = min(cands)
-        return t if t > now + _EPS else now + _EPS
-
-
-def _priority(rt: _Runtime, now: float, strategy: Strategy) -> Tuple:
-    if strategy is Strategy.LLF:
-        return (rt.laxity(now), rt.q.deadline, rt.rr_seq)
-    if strategy is Strategy.EDF:
-        return (rt.q.deadline, rt.laxity(now), rt.rr_seq)
-    if strategy is Strategy.SJF:
-        return (rt.remaining_cost(now), rt.q.deadline, rt.rr_seq)
-    if strategy is Strategy.RR:
-        return (rt.rr_seq,)
-    raise ValueError(strategy)
+__all__ = ["DynamicQuerySpec", "LARGE_NUMBER", "schedule_dynamic"]
 
 
 def schedule_dynamic(
@@ -160,105 +33,20 @@ def schedule_dynamic(
     max_steps: int = 1_000_000,
     on_batch: Optional[Callable[[BatchExecution], None]] = None,
 ) -> ExecutionTrace:
-    """Algorithm 2 (generalised over the four strategies of §4.2).
-
-    Returns the full execution trace with per-query outcomes.  ``on_batch``
-    lets a real executor observe/perform each processed batch.
-    """
-    runts: List[_Runtime] = [_Runtime(spec=s) for s in specs]
-    if not runts:
-        return ExecutionTrace()
-    now = (
-        min(r.q.submit_time for r in runts) if start_time is None else start_time
+    """Deprecated shim for the ``<strategy>-dynamic`` policies."""
+    warn_deprecated(
+        "schedule_dynamic()",
+        f'Planner(policy="{strategy.value}-dynamic").run(specs)',
     )
-    trace = ExecutionTrace()
-    rr_counter = 0
+    from .policies.dynamic import policy_for_strategy
+    from .runtime import SimulatedExecutor, run
 
-    for _ in range(max_steps):
-        # -- admissions & deletions happen only between batches (§4.2:
-        #    "the scheduler takes the new query at the end of the batch").
-        for rt in runts:
-            if not rt.admitted and rt.q.submit_time <= now + _EPS:
-                rt.admitted = True
-                rt.rr_seq = rr_counter
-                rr_counter += 1
-                rt.min_batch = find_min_batch_size(
-                    rt.est_total(now) or 1,
-                    rt.q.cost_model,
-                    delta_rsf,
-                    c_max,
-                    rt.spec.num_groups,
-                )
-            if (
-                rt.spec.delete_time is not None
-                and not rt.deleted
-                and rt.spec.delete_time <= now + _EPS
-                and not rt.completed
-            ):
-                rt.deleted = True
-
-        active = [r for r in runts if r.admitted and not (r.completed or r.deleted)]
-        if not active and all(r.admitted or r.deleted for r in runts):
-            break
-
-        ready = [r for r in active if r.ready(now)]
-        if not ready:
-            nxt = min(
-                [r.next_ready_time(now) for r in runts if not (r.completed or r.deleted)],
-                default=math.inf,
-            )
-            if not math.isfinite(nxt):
-                break
-            now = nxt
-            continue
-
-        ready.sort(key=lambda r: _priority(r, now, strategy))
-        rt = ready[0]
-        rt.rr_seq = rr_counter  # rotate to the back for RR fairness
-        rr_counter += 1
-
-        take = min(rt.avail(now), rt.min_batch)
-        cost = rt.q.cost_model.cost(take)
-        ex = BatchExecution(rt.q.query_id, now, now + cost, take)
-        trace.executions.append(ex)
-        if on_batch:
-            on_batch(ex)
-        now += cost
-        rt.processed += take
-        rt.batches_done += 1
-
-        # -- completion: everything that will ever arrive has been processed.
-        done = (
-            rt.processed >= rt.spec.truth.num_tuples_total
-            if rt.spec.total_known
-            else (
-                now >= rt.spec.truth.wind_end - _EPS and rt.avail(now) == 0
-            )
-        )
-        if done:
-            agg = (
-                rt.q.cost_model.agg_cost(rt.batches_done)
-                if rt.batches_done > 1
-                else 0.0
-            )
-            if agg > 0:
-                ex = BatchExecution(rt.q.query_id, now, now + agg, 0, kind="final_agg")
-                trace.executions.append(ex)
-                if on_batch:
-                    on_batch(ex)
-                now += agg
-            rt.completed = True
-            trace.outcomes.append(
-                QueryOutcome(
-                    query_id=rt.q.query_id,
-                    completion_time=now,
-                    deadline=rt.q.deadline,
-                    total_cost=sum(
-                        e.end - e.start
-                        for e in trace.executions
-                        if e.query_id == rt.q.query_id
-                    ),
-                    num_batches=rt.batches_done,
-                )
-            )
-    return trace
+    policy = policy_for_strategy(strategy, delta_rsf=delta_rsf, c_max=c_max)
+    return run(
+        policy,
+        specs,
+        SimulatedExecutor(),
+        start_time=start_time,
+        max_steps=max_steps,
+        on_batch=on_batch,
+    )

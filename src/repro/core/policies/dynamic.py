@@ -1,0 +1,156 @@
+"""Dynamic multi-query scheduling policies (paper §4, Algorithm 2).
+
+Non-idling, non-preemptive (NINP) time-shared executor: whenever the
+executor is free, every active query whose MinBatch is ready (or which is
+past its estimated readiness time — §4.4 jitter handling) competes under the
+chosen strategy (LLF / EDF / SJF / RR); the winner runs ONE MinBatch to
+completion.  Batch cost is bounded by C_max at MinBatch-sizing time, which
+bounds the blocking period any newly arrived urgent query can suffer
+(§4.2-4.3).
+
+The event loop itself lives in ``repro.core.runtime`` (shared with the
+static policies and every executor); these classes contribute exactly the
+paper's per-decision-instant logic: MinBatch sizing at admission (§4.1,
+Eq. 9) and the strategy's priority order (§4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+from ..api import SchedulingEvent, as_queries, register_policy
+from ..cost_model import CostModelBase
+from ..minbatch import find_min_batch_size
+from ..types import Batch, Plan, PolicyDecision, Query, Schedule, Strategy
+
+
+class DynamicPolicy:
+    """Base for Algorithm-2 policies; subclasses fix the strategy order."""
+
+    kind = "dynamic"
+    name = "dynamic"
+    strategy: Strategy
+
+    def __init__(self, delta_rsf: float = 0.5, c_max: float = 30.0):
+        self.delta_rsf = delta_rsf
+        self.c_max = c_max
+
+    # -- runtime hooks ---------------------------------------------------
+    def on_admit(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
+        """FindMinBatchSize at admission (§4.1): Eq.-9 cost bound, C_max
+        blocking cap, GROUP-BY floor."""
+        rt.min_batch = find_min_batch_size(
+            rt.est_total(now) or 1,
+            rt.q.cost_model,
+            self.delta_rsf,
+            self.c_max,
+            rt.spec.num_groups,
+        )
+
+    def priority(self, rt: "QueryRuntime", now: float) -> Tuple:  # noqa: F821
+        """Sort key among ready queries; smallest wins the executor."""
+        raise NotImplementedError
+
+    def replan(self, event: SchedulingEvent, state: "RuntimeState") -> PolicyDecision:  # noqa: F821
+        """Algorithm 2's decision instant: pick the ready winner, or report
+        when readiness can next change, or stop."""
+        now = event.now
+        ready = [r for r in state.active() if r.ready(now)]
+        if not ready:
+            nxt = min(
+                (r.next_ready_time(now) for r in state.unfinished()),
+                default=math.inf,
+            )
+            if not math.isfinite(nxt):
+                return PolicyDecision()  # stop: nothing will ever be ready
+            return PolicyDecision(wake_at=nxt)
+        ready.sort(key=lambda r: self.priority(r, now))
+        rt = ready[0]
+        take = min(rt.avail(now), rt.min_batch)
+        return PolicyDecision(query_id=rt.q.query_id, num_tuples=take)
+
+    # -- static projection ----------------------------------------------
+    def plan(
+        self,
+        queries: Union[Query, Sequence[Query]],
+        cost_model: Optional[CostModelBase] = None,
+        now: float = 0.0,
+    ) -> Plan:
+        """Deterministic projection of the dynamic run under the PREDICTED
+        arrival models: simulate and return the realized batches per query.
+
+        Dynamic scheduling decides at runtime, so a static Plan only exists
+        relative to an arrival assumption — this uses each query's own
+        predicted model (truth == prediction), which is also what parity
+        with the legacy ``schedule_dynamic`` means.
+        """
+        from ..runtime import DynamicQuerySpec, SimulatedExecutor, run
+
+        qs = as_queries(queries)
+        if cost_model is not None:
+            qs = [dataclasses.replace(q, cost_model=cost_model) for q in qs]
+        trace = run(self, [DynamicQuerySpec(query=q) for q in qs],
+                    SimulatedExecutor())
+        schedules = {
+            q.query_id: Schedule(
+                batches=tuple(
+                    Batch(sched_time=e.start, num_tuples=e.num_tuples)
+                    for e in trace.executions
+                    if e.query_id == q.query_id and e.kind == "batch"
+                )
+            )
+            for q in qs
+        }
+        return Plan(schedules=schedules, policy=self.name)
+
+
+@register_policy("llf-dynamic")
+class LLFPolicy(DynamicPolicy):
+    """Least laxity first (Eq. 10) — the paper's preferred strategy."""
+
+    strategy = Strategy.LLF
+
+    def priority(self, rt, now):
+        return (rt.laxity(now), rt.q.deadline, rt.rr_seq)
+
+
+@register_policy("edf-dynamic")
+class EDFPolicy(DynamicPolicy):
+    """Earliest deadline first."""
+
+    strategy = Strategy.EDF
+
+    def priority(self, rt, now):
+        return (rt.q.deadline, rt.laxity(now), rt.rr_seq)
+
+
+@register_policy("sjf-dynamic")
+class SJFPolicy(DynamicPolicy):
+    """Shortest (remaining) job first."""
+
+    strategy = Strategy.SJF
+
+    def priority(self, rt, now):
+        return (rt.remaining_cost(now), rt.q.deadline, rt.rr_seq)
+
+
+@register_policy("rr-dynamic")
+class RRPolicy(DynamicPolicy):
+    """Round-robin over ready queries (FIFO tickets, rotate-on-run)."""
+
+    strategy = Strategy.RR
+
+    def priority(self, rt, now):
+        return (rt.rr_seq,)
+
+
+def policy_for_strategy(
+    strategy: Strategy, delta_rsf: float = 0.5, c_max: float = 30.0
+) -> DynamicPolicy:
+    """The registered dynamic policy implementing ``strategy``."""
+    from ..api import get_policy
+
+    return get_policy(
+        f"{strategy.value}-dynamic", delta_rsf=delta_rsf, c_max=c_max
+    )

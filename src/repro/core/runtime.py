@@ -1,0 +1,595 @@
+"""The ONE runtime loop shared by every executor (simulator, JAX analytics,
+serving engine).
+
+Before this module, the plan->execute->finalize loop existed three times
+with drift: ``core.single_query.execute_single`` (Algorithm 1's trigger
+loop), ``core.multi_query.schedule_dynamic`` (Algorithm 2's NINP loop) and
+ad-hoc copies in ``repro.serve.analytics``/``repro.serve.engine``.  Now:
+
+* ``run(policy, workload, executor)``   — the loop.  Static policies plan up
+  front and execute per query with Algorithm 1's triggers; dynamic policies
+  are consulted at every decision instant (``policy.replan``).  The loop —
+  not the policy, not the executor — owns deadline checking (QueryOutcome
+  recording), C_max straggler re-queue and trace recording.
+* ``execute_plan(query, plan, executor)`` — one query's plan against a
+  (possibly divergent) true arrival process.  ``strict=False`` is
+  Algorithm 1's adaptive while-loop (trigger a batch when its tuple count is
+  ready OR its scheduled instant has passed, then process whatever is
+  there); ``strict=True`` replays the planned batches verbatim (real
+  backends applying a vetted plan to materialized inputs).
+* ``BaseExecutor`` / ``SimulatedExecutor`` — the modelled-clock backend.
+  Real executors subclass ``BaseExecutor`` and override ``_execute`` /
+  ``_finalize`` to do physical work; the MODELLED clock (cost units == time
+  units, §7) stays identical across backends, which is what makes traces
+  comparable across the simulator and real executors.
+
+Time semantics match the paper's experiments exactly: the executor clock is
+the modelled time; real wall seconds are recorded per query on the executor
+(``wall_seconds``) and only feed straggler detection (a real batch slower
+than C_max is re-queued once — idempotent inputs — and flagged in
+``trace.stragglers``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from .api import Executor, SchedulingEvent, SchedulingPolicy
+from .arrivals import ArrivalModel
+from .types import (
+    BatchExecution,
+    ExecutionTrace,
+    Query,
+    QueryOutcome,
+    Schedule,
+)
+
+_EPS = 1e-9
+LARGE_NUMBER = 1e18  # Algorithm 2's sentinel for "not ready"
+
+
+# ---------------------------------------------------------------------------
+# Workload specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DynamicQuerySpec:
+    """One query as submitted to the runtime.
+
+    ``truth`` is the actual arrival process; planners only ever consult
+    ``query.arrival`` (the predicted model).  ``delete_time`` models §4's
+    "queries may be added or removed at any point".
+    """
+
+    query: Query
+    truth: Optional[ArrivalModel] = None
+    delete_time: Optional[float] = None
+    num_groups: int = 0
+    total_known: bool = True
+
+    def __post_init__(self) -> None:
+        if self.truth is None:
+            self.truth = self.query.arrival
+
+
+Workload = Sequence[Union[Query, DynamicQuerySpec]]
+
+
+def as_specs(workload: Union[Query, DynamicQuerySpec, Workload]) -> List[DynamicQuerySpec]:
+    if isinstance(workload, (Query, DynamicQuerySpec)):
+        workload = [workload]
+    return [
+        w if isinstance(w, DynamicQuerySpec) else DynamicQuerySpec(query=w)
+        for w in workload
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Per-query runtime state (Algorithm 2's bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QueryRuntime:
+    spec: DynamicQuerySpec
+    min_batch: int = 0
+    processed: int = 0
+    batches_done: int = 0
+    admitted: bool = False
+    deleted: bool = False
+    completed: bool = False
+    rr_seq: int = 0  # FIFO ticket for round-robin
+
+    @property
+    def q(self) -> Query:
+        return self.spec.query
+
+    def est_total(self, now: float) -> int:
+        """Total tuples: known, or estimated from the observed rate (§4.4)."""
+        if self.spec.total_known:
+            return self.q.num_tuples_total
+        seen = self.spec.truth.tuples_available(now)
+        span = max(now - self.q.wind_start, _EPS)
+        window = max(self.q.wind_end - self.q.wind_start, _EPS)
+        if now >= self.q.wind_end:
+            return seen
+        return max(seen, int(math.ceil(seen / span * window)))
+
+    def pending(self, now: float) -> int:
+        return max(self.est_total(now) - self.processed, 0)
+
+    def avail(self, now: float) -> int:
+        return max(self.spec.truth.tuples_available(now) - self.processed, 0)
+
+    def remaining_cost(self, now: float) -> float:
+        """FindMinCompCost: pending tuples in MinBatch chunks + final agg."""
+        pend = self.pending(now)
+        if pend == 0:
+            return 0.0
+        cm = self.q.cost_model
+        full, rem = divmod(pend, max(self.min_batch, 1))
+        nb = full + (1 if rem else 0)
+        c = full * cm.cost(self.min_batch) + (cm.cost(rem) if rem else 0.0)
+        total_batches = self.batches_done + nb
+        if total_batches > 1:
+            c += cm.agg_cost(total_batches)
+        return c
+
+    def laxity(self, now: float) -> float:
+        """Eq. (10): deadline - now - remaining cost."""
+        return self.q.deadline - now - self.remaining_cost(now)
+
+    def ready(self, now: float) -> bool:
+        """MinBatch ready, or past the *predicted* readiness instant with
+        something to process, or window over with a tail remainder (§4.4)."""
+        if self.completed or self.deleted or not self.admitted:
+            return False
+        a = self.avail(now)
+        if a <= 0:
+            return False
+        if a >= self.min_batch:
+            return True
+        est_ready = self.q.arrival.input_time(self.processed + self.min_batch)
+        if now >= est_ready - _EPS:
+            return True
+        return now >= self.q.wind_end - _EPS and self.processed + a >= self.est_total(now)
+
+    def next_ready_time(self, now: float) -> float:
+        """Earliest future instant at which ``ready`` can flip true (sim only)."""
+        if self.completed or self.deleted:
+            return math.inf
+        if not self.admitted:
+            return self.q.submit_time
+        truth = self.spec.truth
+        want = self.processed + self.min_batch
+        cands = [self.q.arrival.input_time(want)]  # predicted readiness (§4.4)
+        if want <= truth.num_tuples_total:
+            cands.append(truth.input_time(want))  # actual count-readiness
+        elif truth.tuples_available(truth.wind_end) > self.processed:
+            cands.append(max(self.q.wind_end, truth.input_time(truth.num_tuples_total)))
+        t = min(cands)
+        return t if t > now + _EPS else now + _EPS
+
+    def done(self, now: float) -> bool:
+        """Everything that will ever arrive has been processed."""
+        if self.spec.total_known:
+            return self.processed >= self.spec.truth.num_tuples_total
+        return now >= self.spec.truth.wind_end - _EPS and self.avail(now) == 0
+
+
+@dataclasses.dataclass
+class RuntimeState:
+    """What a dynamic policy sees at a decision instant."""
+
+    runtimes: List[QueryRuntime]
+    trace: ExecutionTrace
+    rr_counter: int = 0
+
+    def by_id(self, query_id: str) -> QueryRuntime:
+        for rt in self.runtimes:
+            if rt.q.query_id == query_id:
+                return rt
+        raise KeyError(query_id)
+
+    def active(self) -> List[QueryRuntime]:
+        return [
+            r for r in self.runtimes
+            if r.admitted and not (r.completed or r.deleted)
+        ]
+
+    def unfinished(self) -> List[QueryRuntime]:
+        return [r for r in self.runtimes if not (r.completed or r.deleted)]
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+
+class BaseExecutor:
+    """Modelled-clock implementation of the ``Executor`` protocol.
+
+    Subclasses override ``_execute``/``_finalize`` to do REAL work and return
+    measured wall seconds (or None); the modelled clock advances by cost-model
+    time either way, so all backends produce comparable traces.
+    """
+
+    def __init__(self) -> None:
+        self._now = 0.0
+        self.wall_seconds: Dict[str, float] = {}
+        self.last_batch_wall: Optional[float] = None
+
+    # -- protocol --------------------------------------------------------
+    def clock(self) -> float:
+        return self._now
+
+    def advance(self, t: float) -> None:
+        if t > self._now:
+            self._now = t
+
+    def reset(self, t: float) -> None:
+        """Rewind/initialize the modelled clock (start of a run/timeline)."""
+        self._now = t
+
+    def submit_batch(self, query: Query, num_tuples: int, offset: int) -> float:
+        dur = query.cost_model.cost(num_tuples)
+        self.last_batch_wall = self._execute(query, num_tuples, offset)
+        if self.last_batch_wall is not None:
+            self.wall_seconds[query.query_id] = (
+                self.wall_seconds.get(query.query_id, 0.0) + self.last_batch_wall
+            )
+        self._now += dur
+        return dur
+
+    def finalize(self, query: Query, num_batches: int) -> float:
+        agg = (
+            query.cost_model.agg_cost(num_batches) if num_batches > 1 else 0.0
+        )
+        wall = self._finalize(query, num_batches)
+        if wall is not None:
+            self.wall_seconds[query.query_id] = (
+                self.wall_seconds.get(query.query_id, 0.0) + wall
+            )
+        self._now += agg
+        return agg
+
+    def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
+        """Straggler re-dispatch: redo the REAL work of an idempotent batch
+        without touching the modelled clock."""
+        wall = self._execute(query, num_tuples, offset)
+        if wall is not None:
+            self.wall_seconds[query.query_id] = (
+                self.wall_seconds.get(query.query_id, 0.0) + wall
+            )
+
+    # -- backend hooks ---------------------------------------------------
+    def _execute(
+        self, query: Query, num_tuples: int, offset: int
+    ) -> Optional[float]:
+        """Physically process tuples [offset, offset+num_tuples); return wall
+        seconds, or None when there is no physical work (simulation)."""
+        return None
+
+    def _finalize(self, query: Query, num_batches: int) -> Optional[float]:
+        return None
+
+
+class SimulatedExecutor(BaseExecutor):
+    """Pure discrete-event backend: the paper's §7 experiment harness."""
+
+
+# ---------------------------------------------------------------------------
+# Trace recording helpers (the loop owns these, not the executors)
+# ---------------------------------------------------------------------------
+
+
+def _record_batch(
+    trace: ExecutionTrace,
+    executor: Executor,
+    query: Query,
+    num_tuples: int,
+    offset: int,
+    on_batch: Optional[Callable[[BatchExecution], None]],
+    c_max: Optional[float],
+) -> BatchExecution:
+    start = executor.clock()
+    dur = executor.submit_batch(query, num_tuples, offset)
+    ex = BatchExecution(query.query_id, start, start + dur, num_tuples)
+    trace.executions.append(ex)
+    if on_batch:
+        on_batch(ex)
+    wall = getattr(executor, "last_batch_wall", None)
+    if c_max is not None and wall is not None and wall > c_max:
+        # C_max straggler: the batch's REAL execution blew the blocking
+        # bound of §4.2-4.3.  Re-dispatch the (idempotent) batch once and
+        # flag the event; modelled time is unaffected.
+        trace.stragglers.append(query.query_id)
+        requeue = getattr(executor, "requeue_batch", None)
+        if requeue is not None:
+            requeue(query, num_tuples, offset)
+    return ex
+
+
+def _record_final_agg(
+    trace: ExecutionTrace,
+    executor: Executor,
+    query: Query,
+    num_batches: int,
+    on_batch: Optional[Callable[[BatchExecution], None]],
+) -> float:
+    start = executor.clock()
+    agg = executor.finalize(query, num_batches)
+    if agg > 0:
+        ex = BatchExecution(query.query_id, start, start + agg, 0, kind="final_agg")
+        trace.executions.append(ex)
+        if on_batch:
+            on_batch(ex)
+    return agg
+
+
+def _record_outcome(
+    trace: ExecutionTrace, query: Query, num_batches: int, completion: float
+) -> QueryOutcome:
+    out = QueryOutcome(
+        query_id=query.query_id,
+        completion_time=completion,
+        deadline=query.deadline,
+        total_cost=sum(
+            e.end - e.start
+            for e in trace.executions
+            if e.query_id == query.query_id
+        ),
+        num_batches=num_batches,
+    )
+    trace.outcomes.append(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan execution (Algorithm 1's while-loop — the single static-path copy)
+# ---------------------------------------------------------------------------
+
+
+def execute_plan(
+    query: Query,
+    plan: Schedule,
+    executor: Optional[Executor] = None,
+    truth: Optional[ArrivalModel] = None,
+    *,
+    strict: bool = False,
+    trace: Optional[ExecutionTrace] = None,
+    on_batch: Optional[Callable[[BatchExecution], None]] = None,
+    c_max: Optional[float] = None,
+) -> ExecutionTrace:
+    """Execute one query's plan on ``executor`` (simulated by default).
+
+    ``strict=False``: Algorithm 1's adaptive loop — trigger a batch when
+    EITHER its planned tuple count is available OR its planned time point is
+    reached, then process whatever is there (absorbs input-rate
+    mispredictions against the ``truth`` arrival process).
+
+    ``strict=True``: replay the planned batches verbatim (sizes and order) at
+    ``max(clock, sched_time)`` — the mode real backends use to apply a vetted
+    plan to fully materialized inputs.
+    """
+    executor = SimulatedExecutor() if executor is None else executor
+    trace = ExecutionTrace() if trace is None else trace
+    executor.reset(query.submit_time)  # each query gets its own timeline
+
+    n_batches = 0
+    if strict:
+        offset = 0
+        for b in plan.batches:
+            if b.num_tuples <= 0:
+                continue
+            executor.advance(b.sched_time)
+            _record_batch(
+                trace, executor, query, b.num_tuples, offset,
+                on_batch=on_batch, c_max=c_max,
+            )
+            offset += b.num_tuples
+            n_batches += 1
+    else:
+        if not plan.batches and query.num_tuples_total > 0:
+            raise ValueError(
+                f"{query.query_id}: empty plan for {query.num_tuples_total} "
+                "tuples — plan the query first (Planner.plan)"
+            )
+        arr = truth if truth is not None else query.arrival
+        pending = query.num_tuples_total
+        processed = 0
+        ptr = 0
+        required = plan.batches[0].num_tuples if plan.batches else 0
+        while pending > 0:
+            now = executor.clock()
+            avail = arr.tuples_available(now) - processed
+            point = plan.batches[min(ptr, plan.num_batches - 1)].sched_time
+            # Algorithm 1 trigger: enough tuples ready, OR the planned
+            # instant passed (then "Process the Available Tuples").
+            if (avail >= required or now >= point - _EPS) and avail > 0:
+                take = min(avail, pending)
+                _record_batch(
+                    trace, executor, query, take, processed,
+                    on_batch=on_batch, c_max=c_max,
+                )
+                processed += take
+                pending -= take
+                n_batches += 1
+                required -= take
+                if ptr < plan.num_batches - 1 and required <= 0:
+                    ptr += 1
+                    required += plan.batches[ptr].num_tuples
+                required = max(required, 0)
+            else:
+                # Discrete-event jump: earliest instant at which the trigger
+                # can fire — the `required`-th outstanding tuple arriving, or
+                # the planned time point, whichever first.
+                want = processed + max(required, 1)
+                next_arrival = (
+                    arr.input_time(want)
+                    if want <= arr.num_tuples_total
+                    else arr.input_time(arr.num_tuples_total)
+                )
+                nxt = min(next_arrival, max(point, arr.input_time(processed + 1)))
+                if nxt <= now + _EPS:  # stream exhausted: nothing will arrive
+                    break
+                executor.advance(nxt)
+
+    _record_final_agg(trace, executor, query, n_batches, on_batch)
+    _record_outcome(trace, query, n_batches, executor.clock())
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# The shared runtime loop
+# ---------------------------------------------------------------------------
+
+
+def run(
+    policy: SchedulingPolicy,
+    workload: Union[Query, DynamicQuerySpec, Workload],
+    executor: Optional[Executor] = None,
+    *,
+    start_time: Optional[float] = None,
+    max_steps: Optional[int] = None,
+    strict: bool = False,
+    on_batch: Optional[Callable[[BatchExecution], None]] = None,
+    c_max: Optional[float] = None,
+) -> ExecutionTrace:
+    """Run ``workload`` under ``policy`` on ``executor`` (simulated when
+    omitted) and return the full ExecutionTrace with per-query outcomes.
+
+    ``c_max`` bounds the REAL per-batch execution time for straggler
+    detection; it defaults to the policy's own C_max (dynamic policies carry
+    one; static policies don't, so pass it explicitly to enable straggler
+    re-queue on static runs).  ``strict`` applies only to static policies
+    (replay plans verbatim); ``start_time``/``max_steps`` only to dynamic
+    ones — passing an inapplicable argument raises."""
+    specs = as_specs(workload)
+    executor = SimulatedExecutor() if executor is None else executor
+    if c_max is None:
+        c_max = getattr(policy, "c_max", None)
+    if getattr(policy, "kind", "static") == "dynamic":
+        if strict:
+            raise ValueError(
+                "strict= applies to static policies only (dynamic policies "
+                "have no up-front plan to replay)"
+            )
+        return _run_dynamic(
+            policy, executor, specs,
+            start_time=start_time,
+            max_steps=1_000_000 if max_steps is None else max_steps,
+            on_batch=on_batch, c_max=c_max,
+        )
+    if start_time is not None or max_steps is not None:
+        raise ValueError(
+            "start_time=/max_steps= apply to dynamic policies only (static "
+            "runs give each query its own timeline from submit_time)"
+        )
+    return _run_static(
+        policy, executor, specs, strict=strict, on_batch=on_batch, c_max=c_max,
+    )
+
+
+def _run_static(
+    policy: SchedulingPolicy,
+    executor: Executor,
+    specs: List[DynamicQuerySpec],
+    *,
+    strict: bool,
+    on_batch: Optional[Callable[[BatchExecution], None]],
+    c_max: Optional[float],
+) -> ExecutionTrace:
+    """Static policies: plan each query up front, execute independently.
+
+    Each query runs on its own timeline (the paper's single-query scenarios
+    assume a dedicated executor per query; §3)."""
+    trace = ExecutionTrace()
+    for spec in specs:
+        plan = policy.plan(spec.query)[spec.query.query_id]
+        execute_plan(
+            spec.query, plan, executor,
+            truth=spec.truth, strict=strict, trace=trace,
+            on_batch=on_batch, c_max=c_max,
+        )
+    return trace
+
+
+def _run_dynamic(
+    policy: SchedulingPolicy,
+    executor: Executor,
+    specs: List[DynamicQuerySpec],
+    *,
+    start_time: Optional[float],
+    max_steps: int,
+    on_batch: Optional[Callable[[BatchExecution], None]],
+    c_max: Optional[float],
+) -> ExecutionTrace:
+    """Algorithm 2's NINP loop, generalized over dynamic policies.
+
+    Admissions/deletions happen only between batches (§4.2: "the scheduler
+    takes the new query at the end of the batch"); the policy picks the
+    winner at each decision instant; the executor performs the batch."""
+    runts = [QueryRuntime(spec=s) for s in specs]
+    trace = ExecutionTrace()
+    if not runts:
+        return trace
+    start = (
+        min(r.q.submit_time for r in runts) if start_time is None else start_time
+    )
+    executor.reset(start)
+    state = RuntimeState(runtimes=runts, trace=trace)
+    event_kind = "start"
+
+    for _ in range(max_steps):
+        now = executor.clock()
+        # -- admissions & deletions (between batches only, §4.2) ----------
+        for rt in runts:
+            if not rt.admitted and rt.q.submit_time <= now + _EPS:
+                rt.admitted = True
+                rt.rr_seq = state.rr_counter
+                state.rr_counter += 1
+                on_admit = getattr(policy, "on_admit", None)
+                if on_admit is not None:
+                    on_admit(rt, now)
+                elif rt.min_batch <= 0:
+                    rt.min_batch = 1  # protocol-minimal policy: no sizing hook
+            if (
+                rt.spec.delete_time is not None
+                and not rt.deleted
+                and rt.spec.delete_time <= now + _EPS
+                and not rt.completed
+            ):
+                rt.deleted = True
+
+        if not state.active() and all(r.admitted or r.deleted for r in runts):
+            break
+
+        decision = policy.replan(SchedulingEvent(event_kind, now), state)
+        if decision.is_stop:
+            break
+        if decision.is_wait:
+            executor.advance(decision.wake_at)
+            event_kind = "wake"
+            continue
+
+        rt = state.by_id(decision.query_id)
+        rt.rr_seq = state.rr_counter  # rotate to the back for RR fairness
+        state.rr_counter += 1
+
+        _record_batch(
+            trace, executor, rt.q, decision.num_tuples, rt.processed,
+            on_batch=on_batch, c_max=c_max,
+        )
+        rt.processed += decision.num_tuples
+        rt.batches_done += 1
+        event_kind = "batch_end"
+
+        # -- completion: all that will ever arrive has been processed -----
+        if rt.done(executor.clock()):
+            _record_final_agg(trace, executor, rt.q, rt.batches_done, on_batch)
+            rt.completed = True
+            _record_outcome(trace, rt.q, rt.batches_done, executor.clock())
+    return trace

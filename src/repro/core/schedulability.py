@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
-from .single_query import schedule_single, schedule_without_agg_cost
+from .policies.single import plan_single, plan_without_agg_cost
 from .types import InfeasibleDeadline, Query
 
 
@@ -40,7 +40,7 @@ def max_prewindow_tuples(q: Query) -> int:
             deadline=q.wind_end,
         )
         try:
-            schedule_without_agg_cost(qk, q.wind_end)
+            plan_without_agg_cost(qk, q.wind_end)
             return True
         except InfeasibleDeadline:
             return False
@@ -97,7 +97,7 @@ def single_query_condition(queries: Sequence[Query]) -> FeasibilityReport:
     reasons: List[str] = []
     for q in queries:
         try:
-            schedule_single(q)
+            plan_single(q)
         except InfeasibleDeadline as e:
             reasons.append(f"{q.query_id}: infeasible alone ({e})")
     return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))

@@ -1,123 +1,53 @@
-"""Single-query scheduling under static scenarios (paper §3, Algorithm 1).
+"""Legacy single-query entry points (paper §3, Algorithm 1).
 
-Plan construction (``schedule_single``) is separated from plan execution
-(``execute_single`` — Algorithm 1's while-loop, which triggers each batch when
-its tuple count is ready OR its scheduled time has passed, absorbing
-input-rate mispredictions).
+The algorithms moved to ``repro.core.policies.single`` (registered as the
+``single`` / ``single-no-agg`` / ``single-agg`` policies) and the execution
+loop to ``repro.core.runtime.execute_plan``; the ``schedule_*`` /
+``execute_single`` functions below are thin deprecation shims kept for the
+pre-Planner API.  ``plan_cost`` and ``validate_schedule`` remain canonical
+here (they are plan utilities, not scheduling schemes).
 
-Backward construction (function ``ScheduleWithoutAggCost`` in the paper):
+Migration:
 
-    last batch:   fills [windEnd, deadline'] — capacity there decides how many
-                  tuples can wait for the end of the window.
-    earlier ones: pending tuples get deadline = start of the batch scheduled
-                  after them; input availability (InputTime) lower-bounds each
-                  batch's start; recurse until all tuples are placed.
-
-``ScheduleWithAggCost`` iterates the assumed batch count until the final-
-aggregation allowance is consistent with the produced plan (Eq. (4)).
-
-Works for ANY monotone cost model (closing remark of §3.1) — only
-``cost``/``tuples_processable``/``agg_cost`` are used.
+    schedule_single(q)            -> Planner(policy="single").schedule(q)
+    schedule_with_agg_cost(q)     -> Planner(policy="single-agg").schedule(q)
+    schedule_without_agg_cost(q,d)-> Planner(policy="single-no-agg",
+                                             deadline=d).schedule(q)
+    execute_single(q, plan, truth)-> runtime.execute_plan(q, plan, truth=truth)
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Optional
 
-from .types import Batch, InfeasibleDeadline, Query, Schedule
+from ._deprecation import warn_deprecated
+from .policies.single import (  # canonical implementations
+    plan_single,
+    plan_with_agg_cost,
+    plan_without_agg_cost,
+)
+from .types import ExecutionTrace, Query, Schedule
 
-_MAX_BATCHES = 10_000  # guard against degenerate cost models
 _EPS = 1e-9
 
 
 def schedule_without_agg_cost(query: Query, deadline: float) -> Schedule:
-    """Backward-greedy optimal plan ignoring final-aggregation cost.
-
-    Returns batches sorted by sched_time (earliest first).
-    Raises InfeasibleDeadline if no plan exists under the cost/arrival models.
-    """
-    cm, arr = query.cost_model, query.arrival
-    total = query.num_tuples_total
-    if total == 0:
-        return Schedule(batches=())
-
-    # Uniform backward recursion.  The first iteration is the paper's "last
-    # batch" (its availability bound input_time(N) IS the window end); later
-    # iterations are the pre-window batches.  One deliberate repair over the
-    # paper's §3.1 prose: every batch — including the last — starts AS LATE AS
-    # POSSIBLE (time_pt - cost(k)), the same principle as the paper's Eq. (3)
-    # for the single-batch case.  Anchoring the last batch at windowEnd, as
-    # the prose states, discards the slack between windEnd + cost(k_last) and
-    # the deadline; with per-batch overheads that slack can buy the
-    # predecessor batch more room, and hypothesis found instances where the
-    # as-stated greedy needs one batch more than the paper's own §3.2
-    # constraint solver.  With late starts the two methods agree everywhere
-    # we test (as the paper reports for its experiments).  The paper's worked
-    # Cases 1-4 are unchanged: their last-batch capacity binds exactly.
-    batches_rev: List[Batch] = []
-    pending = total
-    time_pt = deadline
-    while pending > 0:
-        if len(batches_rev) >= _MAX_BATCHES:
-            raise InfeasibleDeadline(
-                f"{query.query_id}: exceeded {_MAX_BATCHES} batches"
-            )
-        ip_avail = arr.input_time(pending)  # when the last pending tuple lands
-        dur = time_pt - ip_avail
-        n_proc = min(cm.tuples_processable(dur), pending)
-        if n_proc <= 0:
-            raise InfeasibleDeadline(
-                f"{query.query_id}: cannot place {pending} tuples before "
-                f"t={time_pt:.6g} (available only from t={ip_avail:.6g})"
-            )
-        # Run as late as possible: start = time_pt - cost(n_proc) >= ip_avail.
-        start = time_pt - cm.cost(n_proc)
-        batches_rev.append(Batch(sched_time=start, num_tuples=n_proc))
-        pending -= n_proc
-        time_pt = start
-
-    return Schedule(batches=tuple(reversed(batches_rev)))
+    """Deprecated shim for the ``single-no-agg`` policy."""
+    warn_deprecated(
+        "schedule_without_agg_cost()", 'Planner(policy="single-no-agg")'
+    )
+    return plan_without_agg_cost(query, deadline)
 
 
 def schedule_with_agg_cost(query: Query) -> Schedule:
-    """Fix the (#batches <-> agg-cost) circularity (paper function
-    ScheduleWithAggCost, Eq. (4)).
-
-    Assume ``i`` batches, shift the effective deadline earlier by
-    ``agg_cost(i)``, plan, and repeat with a larger allowance while the plan
-    needs more batches than assumed.
-    """
-    cm = query.cost_model
-    i = 1
-    while i <= _MAX_BATCHES:
-        eff_deadline = query.deadline - cm.agg_cost(i)
-        plan = schedule_without_agg_cost(query, eff_deadline)
-        if plan.num_batches <= i:
-            if plan.num_batches < i:
-                # Tighten: fewer batches need less agg allowance; replanning
-                # with the exact count can only extend the last-batch window.
-                tight = schedule_without_agg_cost(
-                    query, query.deadline - cm.agg_cost(plan.num_batches)
-                )
-                if tight.num_batches <= plan.num_batches:
-                    return tight
-            return plan
-        i = max(i + 1, plan.num_batches)
-    raise InfeasibleDeadline(f"{query.query_id}: agg-cost iteration diverged")
+    """Deprecated shim for the ``single-agg`` policy."""
+    warn_deprecated("schedule_with_agg_cost()", 'Planner(policy="single-agg")')
+    return plan_with_agg_cost(query)
 
 
 def schedule_single(query: Query) -> Schedule:
-    """Algorithm 1's planning phase (ScheduleSingleMain, lines 1-8)."""
-    if query.slack_time >= -_EPS:
-        # Cases 1-2: one batch, started as late as completion-by-deadline allows.
-        return Schedule(
-            batches=(
-                Batch(
-                    sched_time=query.deadline - query.min_comp_cost,
-                    num_tuples=query.num_tuples_total,
-                ),
-            )
-        )
-    return schedule_with_agg_cost(query)
+    """Deprecated shim for the ``single`` policy (Algorithm 1)."""
+    warn_deprecated("schedule_single()", 'Planner(policy="single")')
+    return plan_single(query)
 
 
 def plan_cost(query: Query, plan: Schedule) -> float:
@@ -159,71 +89,12 @@ def validate_schedule(query: Query, plan: Schedule) -> None:
         raise AssertionError(f"finish {finish} > deadline {query.deadline}")
 
 
-def execute_single(query: Query, plan: Schedule, truth: "ArrivalModel" = None):
-    """Algorithm 1's execution loop against a (possibly divergent) true
-    arrival process: trigger a batch when EITHER its planned tuple count is
-    available OR its planned time point is reached (process what is there).
+def execute_single(
+    query: Query, plan: Schedule, truth: Optional["ArrivalModel"] = None  # noqa: F821
+) -> ExecutionTrace:
+    """Deprecated shim for ``repro.core.runtime.execute_plan`` (Algorithm 1's
+    execution loop, now shared by every executor)."""
+    warn_deprecated("execute_single()", "repro.core.runtime.execute_plan()")
+    from .runtime import execute_plan
 
-    Returns an ExecutionTrace.  ``truth`` defaults to the planning model.
-    """
-    from .types import BatchExecution, ExecutionTrace, QueryOutcome
-
-    arr = truth if truth is not None else query.arrival
-    cm = query.cost_model
-    trace = ExecutionTrace()
-    now = query.submit_time
-    pending = query.num_tuples_total
-    processed = 0
-    ptr = 0
-    required = plan.batches[0].num_tuples if plan.batches else 0
-    n_batches = 0
-    while pending > 0:
-        avail = arr.tuples_available(now) - processed
-        point = plan.batches[min(ptr, plan.num_batches - 1)].sched_time
-        # Algorithm 1 trigger: enough tuples ready, OR the planned instant
-        # passed (then "Process the Available Tuples" — whatever is there).
-        if (avail >= required or now >= point - _EPS) and avail > 0:
-            take = min(avail, pending)
-            c = cm.cost(take)
-            trace.executions.append(
-                BatchExecution(query.query_id, now, now + c, take)
-            )
-            now += c
-            processed += take
-            pending -= take
-            n_batches += 1
-            required -= take
-            if ptr < plan.num_batches - 1 and required <= 0:
-                ptr += 1
-                required += plan.batches[ptr].num_tuples
-            required = max(required, 0)
-        else:
-            # Discrete-event jump: earliest instant at which the trigger can
-            # fire — the `required`-th outstanding tuple arriving, or the
-            # planned time point (if a tuple exists then), whichever first.
-            want = processed + max(required, 1)
-            next_arrival = (
-                arr.input_time(want)
-                if want <= arr.num_tuples_total
-                else arr.input_time(arr.num_tuples_total)
-            )
-            nxt = min(next_arrival, max(point, arr.input_time(processed + 1)))
-            if nxt <= now + _EPS:  # nothing will ever arrive: stream exhausted
-                break
-            now = nxt
-    agg = cm.agg_cost(n_batches) if n_batches > 1 else 0.0
-    if agg:
-        trace.executions.append(
-            BatchExecution(query.query_id, now, now + agg, 0, kind="final_agg")
-        )
-        now += agg
-    trace.outcomes.append(
-        QueryOutcome(
-            query_id=query.query_id,
-            completion_time=now,
-            deadline=query.deadline,
-            total_cost=trace.total_cost,
-            num_batches=n_batches,
-        )
-    )
-    return trace
+    return execute_plan(query, plan, truth=truth)

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 class InfeasibleDeadline(Exception):
@@ -96,6 +96,62 @@ class Query:
 
 
 @dataclasses.dataclass(frozen=True)
+class Plan:
+    """Output of ``SchedulingPolicy.plan``: one static Schedule per query.
+
+    For static policies this is the Algorithm-1/constraint plan verbatim; for
+    dynamic policies it is the REALIZED batch sequence of a simulated run
+    (dynamic scheduling decides at runtime — the Plan is its deterministic
+    projection under the predicted arrival model).
+    """
+
+    schedules: Dict[str, Schedule]
+    policy: str = ""
+
+    def __getitem__(self, query_id: str) -> Schedule:
+        return self.schedules[query_id]
+
+    def __contains__(self, query_id: str) -> bool:
+        return query_id in self.schedules
+
+    @property
+    def query_ids(self) -> List[str]:
+        return list(self.schedules)
+
+    @property
+    def num_batches(self) -> int:
+        return sum(s.num_batches for s in self.schedules.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDecision:
+    """One dispatch decision of a dynamic policy (Algorithm 2's winner).
+
+    Exactly one of the three forms:
+
+    * run   — ``query_id`` set: run ``num_tuples`` of that query now;
+    * wait  — ``wake_at`` set: nothing ready, idle until that instant;
+    * stop  — neither set: no admissible work will ever become ready.
+    """
+
+    query_id: Optional[str] = None
+    num_tuples: int = 0
+    wake_at: Optional[float] = None
+
+    @property
+    def is_run(self) -> bool:
+        return self.query_id is not None
+
+    @property
+    def is_wait(self) -> bool:
+        return self.query_id is None and self.wake_at is not None
+
+    @property
+    def is_stop(self) -> bool:
+        return self.query_id is None and self.wake_at is None
+
+
+@dataclasses.dataclass(frozen=True)
 class BatchExecution:
     """One executed batch in a trace (simulator / real executor)."""
 
@@ -124,6 +180,10 @@ class QueryOutcome:
 class ExecutionTrace:
     executions: List[BatchExecution] = dataclasses.field(default_factory=list)
     outcomes: List[QueryOutcome] = dataclasses.field(default_factory=list)
+    # query_ids of batches whose REAL execution exceeded C_max (straggler
+    # re-queue events recorded by the shared runtime loop; empty in pure
+    # simulation, where modelled batch costs respect C_max by construction).
+    stragglers: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def total_cost(self) -> float:

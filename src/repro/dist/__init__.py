@@ -1,0 +1,46 @@
+"""repro.dist — logical-axis sharding and roofline utilities.
+
+Three small modules consumed across the model zoo and launch tooling:
+
+* ``context``  — ``constrain``/``constrain_param``: logical-axis sharding
+                 constraints that are no-ops outside a mesh context, so the
+                 same model code runs on a laptop CPU and a multi-pod mesh.
+* ``sharding`` — PartitionSpec derivation from the logical axis names of
+                 ``repro.models.params.ParamSpec`` (FSDP on "data", TP on
+                 "model", DP for inputs/caches).
+* ``roofline`` — compute/memory/collective roofline record + HLO collective
+                 parser used by ``repro.launch.dryrun``.
+"""
+from .context import (
+    ACT_AXIS_RULES,
+    PARAM_AXIS_RULES,
+    active_mesh,
+    constrain,
+    constrain_param,
+    mesh_context,
+)
+from .roofline import CollectiveStats, Roofline, parse_collectives
+from .sharding import (
+    batch_spec,
+    cache_pspecs,
+    input_pspecs,
+    param_pspecs,
+    param_shardings,
+)
+
+__all__ = [
+    "ACT_AXIS_RULES",
+    "CollectiveStats",
+    "PARAM_AXIS_RULES",
+    "Roofline",
+    "active_mesh",
+    "batch_spec",
+    "cache_pspecs",
+    "constrain",
+    "constrain_param",
+    "input_pspecs",
+    "mesh_context",
+    "param_pspecs",
+    "param_shardings",
+    "parse_collectives",
+]

@@ -1,0 +1,154 @@
+"""Logical-axis sharding constraints (model-code side of repro.dist).
+
+Model code never names mesh axes directly; it names LOGICAL axes —
+``constrain(h, "batch", "seq_model", None)`` — and this module resolves them
+against the active mesh:
+
+* activations (``constrain``):
+    "batch"     -> the data-parallel axes ("pod", "data")
+    "seq_model" -> sequence dim stored sharded on "model" (sequence-parallel
+                   layer boundaries / remat saves)
+    "model"     -> tensor-parallel dim ("model")
+    None        -> replicated
+
+* parameters (``constrain_param``): the ParamSpec logical names of
+  ``repro.models.params`` ("embed" -> FSDP on "data", "heads"/"ffn"/"vocab"
+  -> TP on "model", ...), used to pin per-unit scan slices (and therefore
+  their cotangents) to the parameter sharding.
+
+Outside any mesh context — CPU tests, single-device examples — both are
+identity functions, so model code is mesh-agnostic.  A mesh is "active"
+inside ``with mesh:`` (the jax.sharding.Mesh context manager, as used by
+``repro.launch.steps``) or inside ``with mesh_context(mesh):``.
+
+A mesh axis is only applied when the corresponding dim is divisible by the
+axis size (XLA requires even sharding for constraints we emit) and when the
+axis has not already been consumed by an earlier dim of the same tensor.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical activation axis -> mesh axes (tried in order, kept if present).
+ACT_AXIS_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq_model": ("model",),
+    "model": ("model",),
+}
+
+# Logical parameter axis -> mesh axes (see repro.models.params docstring).
+PARAM_AXIS_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "frames": (),
+}
+
+_local = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    """Explicitly activate ``mesh`` for ``constrain``/``constrain_param``."""
+    prev = getattr(_local, "mesh", None)
+    _local.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _local.mesh = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh constraints resolve against, or None (constraints no-op).
+
+    Checks the explicit ``mesh_context`` first, then jax's thread-local
+    physical mesh (set by ``with mesh:``).
+    """
+    mesh = getattr(_local, "mesh", None)
+    if mesh is not None and not mesh.empty:
+        return mesh
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def _resolve(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    rules: Dict[str, Tuple[str, ...]],
+    mesh: Mesh,
+) -> Optional[P]:
+    """PartitionSpec for ``shape`` under ``rules``; None if fully replicated."""
+    used: set = set()
+    entries: list = []
+    any_sharded = False
+    for dim, name in zip(shape, logical_axes):
+        axes: Tuple[str, ...] = ()
+        if name is not None:
+            want = rules.get(name, ())
+            picked = []
+            size = 1
+            for ax in want:
+                if ax in mesh.axis_names and ax not in used:
+                    picked.append(ax)
+                    size *= mesh.shape[ax]
+            if picked and size > 0 and dim % size == 0:
+                axes = tuple(picked)
+        if axes:
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+            any_sharded = True
+        else:
+            entries.append(None)
+    if not any_sharded:
+        return None
+    return P(*entries)
+
+
+def _constrain_with(
+    x: jax.Array,
+    logical_axes: Sequence[Optional[str]],
+    rules: Dict[str, Tuple[str, ...]],
+) -> jax.Array:
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"rank mismatch: {len(logical_axes)} logical axes for shape {x.shape}"
+        )
+    spec = _resolve(x.shape, logical_axes, rules, mesh)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Pin an ACTIVATION to the sharding implied by its logical axes.
+
+    Identity when no mesh is active (CPU tests / single device)."""
+    return _constrain_with(x, logical_axes, ACT_AXIS_RULES)
+
+
+def constrain_param(
+    x: jax.Array, axes: Union[Sequence[Optional[str]], Tuple[Optional[str], ...]]
+) -> jax.Array:
+    """Pin a PARAMETER (or its per-unit scan slice) to its spec sharding."""
+    return _constrain_with(x, tuple(axes), PARAM_AXIS_RULES)

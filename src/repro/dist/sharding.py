@@ -1,0 +1,87 @@
+"""PartitionSpec derivation from logical axis names (launch-side of
+repro.dist).
+
+``repro.models.params.ParamSpec`` carries a logical axis name per dim
+("embed", "heads", "ffn", ...); these helpers turn a whole spec table into
+PartitionSpecs / NamedShardings for one mesh:
+
+* parameters — FSDP on "data" over the embed dim, tensor-parallel on "model"
+  over heads/ffn/vocab/experts dims (first eligible dim wins an axis);
+* inputs     — batch dim (dim 0) sharded over the data-parallel axes
+  ("pod" x "data" on the multi-pod mesh);
+* caches     — decode caches are (layer_units, batch, ...): batch dim (dim 1)
+  sharded over the data-parallel axes.
+
+A mesh axis is applied to a dim only when the dim size is divisible by the
+axis size — otherwise the dim stays replicated (correct, just less sharded),
+which keeps reduced-config CPU tests working on 1-device meshes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .context import PARAM_AXIS_RULES, _resolve
+
+Structs = Dict[str, jax.ShapeDtypeStruct]
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel mesh axes, outermost first."""
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+
+
+def _dp_entry(mesh: Mesh, dim: int):
+    """Spec entry for a batch-like dim: the DP axes if evenly divisible."""
+    axes = _dp_axes(mesh)
+    size = 1
+    for ax in axes:
+        size *= mesh.shape[ax]
+    if not axes or size <= 0 or dim % size:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_pspecs(specs: Dict[str, "ParamSpec"], mesh: Mesh) -> Dict[str, P]:  # noqa: F821
+    """PartitionSpec per parameter leaf from its logical axes."""
+    out: Dict[str, P] = {}
+    for name, spec in specs.items():
+        resolved = _resolve(spec.shape, spec.axes, PARAM_AXIS_RULES, mesh)
+        out[name] = resolved if resolved is not None else P()
+    return out
+
+
+def param_shardings(
+    specs: Dict[str, "ParamSpec"], mesh: Mesh  # noqa: F821
+) -> Dict[str, NamedSharding]:
+    return {k: NamedSharding(mesh, s) for k, s in param_pspecs(specs, mesh).items()}
+
+
+def batch_spec(mesh: Mesh, batch_rows: int, ndim: int) -> Tuple[Optional[object], ...]:
+    """Spec entries for an (batch_rows, ...) array of rank ``ndim``: DP axes
+    on dim 0 (when divisible), replicated elsewhere.  Callers may prepend
+    extra ``None`` entries for leading dims (e.g. a microbatch dim)."""
+    return (_dp_entry(mesh, batch_rows),) + (None,) * (ndim - 1)
+
+
+def input_pspecs(structs: Structs, mesh: Mesh) -> Dict[str, P]:
+    """Batch-shard model inputs over the data-parallel axes (dim 0)."""
+    return {
+        k: P(*batch_spec(mesh, s.shape[0], len(s.shape)))
+        for k, s in structs.items()
+    }
+
+
+def cache_pspecs(cfg, structs: Structs, mesh: Mesh) -> Dict[str, P]:
+    """Decode-cache shardings: caches are (layer_units, batch, ...) — shard
+    the batch dim (dim 1) over the data-parallel axes."""
+    out: Dict[str, P] = {}
+    for k, s in structs.items():
+        if len(s.shape) >= 2:
+            out[k] = P(None, _dp_entry(mesh, s.shape[1]),
+                       *(None,) * (len(s.shape) - 2))
+        else:
+            out[k] = P(*(None,) * len(s.shape))
+    return out

@@ -9,6 +9,14 @@ Executor model (DESIGN.md §4, executor 2):
   intermediate results in files between Spark jobs;
 * ``finalize`` = the paper's final aggregation step: combine partials.
 
+``AnalyticsRuntimeExecutor`` adapts this to the ``repro.core.api.Executor``
+protocol (``submit_batch``/``finalize``/``clock``), so the SAME runtime loop
+that drives the discrete-event simulator and the serving engine drives real
+segagg batches: ``run_plan`` is now a thin wrapper over
+``repro.core.runtime.execute_plan``.  Partials are keyed by tuple offset, so
+a C_max straggler re-queue (the loop re-dispatching an idempotent batch)
+overwrites rather than double-counts.
+
 ``measure_cost_model`` reproduces §6.2: run batches of different sizes,
 time them, fit the piecewise-linear cost model the scheduler consumes.
 """
@@ -24,12 +32,13 @@ import numpy as np
 
 from ..core import (
     CostModelBase,
-    PiecewiseLinearCostModel,
+    LinearCostModel,
     Query,
     Schedule,
+    TraceArrival,
     fit_piecewise_linear,
-    schedule_single,
 )
+from ..core.runtime import BaseExecutor, execute_plan
 from ..data.tpch import AnalyticsQuery, StreamScale
 
 
@@ -48,7 +57,9 @@ class AnalyticsExecutor:
         self.scale = scale
         self.num_groups = query.num_groups(scale)
         self.use_kernel = use_kernel
-        self.partials: List[np.ndarray] = []
+        # Partials keyed by slot (tuple offset when driven by the runtime
+        # loop): re-queued stragglers overwrite instead of double-counting.
+        self.partials: Dict[int, np.ndarray] = {}
         self.batch_log: List[BatchResult] = []
         if use_kernel:
             from ..kernels.segagg.ops import segagg
@@ -60,14 +71,19 @@ class AnalyticsExecutor:
             self._agg = jax.jit(
                 lambda k, v: segagg_ref(k, v, self.num_groups))
 
-    def process_batch(self, records: Dict[str, np.ndarray]) -> BatchResult:
+    def process_batch(self, records: Dict[str, np.ndarray],
+                      slot: Optional[int] = None) -> BatchResult:
         keys = np.asarray(self.query.key_fn(records), np.int32)
         vals = np.asarray(self.query.value_fn(records), np.float32)
         t0 = time.perf_counter()
         part = self._agg(jnp.asarray(keys), jnp.asarray(vals))
         part = np.asarray(part)  # spill to host; device buffers released
         dt = time.perf_counter() - t0
-        self.partials.append(part)
+        if slot is None:  # sequential mode: next free key, never clobber
+            slot = len(self.partials)
+            while slot in self.partials:
+                slot += 1
+        self.partials[slot] = part
         res = BatchResult(num_records=len(keys), seconds=dt)
         self.batch_log.append(res)
         return res
@@ -75,8 +91,11 @@ class AnalyticsExecutor:
     def finalize(self) -> Tuple[np.ndarray, float]:
         """Final aggregation step (paper §2.1): combine the partials."""
         t0 = time.perf_counter()
-        total = np.sum(np.stack(self.partials), axis=0) if self.partials \
+        total = (
+            np.sum(np.stack(list(self.partials.values())), axis=0)
+            if self.partials
             else np.zeros((self.num_groups, 1), np.float32)
+        )
         return total, time.perf_counter() - t0
 
     @property
@@ -89,19 +108,75 @@ def concat_files(files: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray
     return {k: np.concatenate([f[k] for f in files]) for k in keys}
 
 
+class AnalyticsRuntimeExecutor(BaseExecutor):
+    """``repro.core.api.Executor`` over real segagg analytics jobs.
+
+    ``jobs`` maps a scheduler query_id to its (AnalyticsQuery, files); batch
+    tuple units are FILES (exactly the paper's setup).  The modelled clock
+    advances by cost-model time; measured wall seconds are recorded per
+    query (``wall_seconds``) and final results land in ``results``.
+    """
+
+    def __init__(
+        self,
+        jobs: Dict[str, Tuple[AnalyticsQuery, Sequence[Dict[str, np.ndarray]]]],
+        scale: StreamScale,
+        use_kernel: bool = False,
+    ):
+        super().__init__()
+        self._jobs = {
+            qid: (AnalyticsExecutor(aq, scale, use_kernel), files)
+            for qid, (aq, files) in jobs.items()
+        }
+        self.results: Dict[str, np.ndarray] = {}
+        self.agg_seconds: Dict[str, float] = {}
+
+    def physical(self, query_id: str) -> AnalyticsExecutor:
+        return self._jobs[query_id][0]
+
+    def _execute(self, query: Query, num_tuples: int, offset: int) -> Optional[float]:
+        ex, files = self._jobs[query.query_id]
+        chunk = files[offset: offset + num_tuples]
+        if not chunk:
+            return None
+        return ex.process_batch(concat_files(chunk), slot=offset).seconds
+
+    def _finalize(self, query: Query, num_batches: int) -> Optional[float]:
+        ex, _ = self._jobs[query.query_id]
+        total, agg_s = ex.finalize()
+        self.results[query.query_id] = total
+        self.agg_seconds[query.query_id] = agg_s
+        return agg_s
+
+
+def _plan_query(query_id: str, num_files: int) -> Query:
+    """Untimed stand-in Query for replaying a vetted plan over materialized
+    files (all inputs present; modelled costs zero)."""
+    return Query(
+        query_id=query_id,
+        wind_start=0.0,
+        wind_end=0.0,
+        deadline=float("inf"),
+        num_tuples_total=num_files,
+        cost_model=LinearCostModel(tuple_cost=0.0),
+        arrival=TraceArrival(timestamps=(0.0,) * max(num_files, 1)),
+    )
+
+
 def run_plan(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
              plan: Schedule, scale: StreamScale,
              use_kernel: bool = False) -> Tuple[np.ndarray, List[BatchResult], float]:
-    """Execute a scheduler plan (batch sizes in FILES) against real files."""
-    ex = AnalyticsExecutor(query, scale, use_kernel)
-    idx = 0
-    for b in plan.batches:
-        chunk = files[idx: idx + b.num_tuples]
-        idx += b.num_tuples
-        if chunk:
-            ex.process_batch(concat_files(chunk))
-    result, agg_s = ex.finalize()
-    return result, ex.batch_log, agg_s
+    """Execute a scheduler plan (batch sizes in FILES) against real files
+    through the shared runtime loop (strict mode: replay the plan verbatim)."""
+    rex = AnalyticsRuntimeExecutor({query.query_id: (query, files)}, scale,
+                                   use_kernel)
+    q = _plan_query(query.query_id, len(files))
+    execute_plan(q, plan, rex, strict=True)
+    return (
+        rex.results[query.query_id],
+        rex.physical(query.query_id).batch_log,
+        rex.agg_seconds[query.query_id],
+    )
 
 
 def run_batched(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],

@@ -5,18 +5,24 @@ A ``WindowJob`` is the serving analogue of the paper's intermittent query:
 requests (prompts to score/prefill) arrive over a window and the aggregate
 result (all logits / all scores) is due at a deadline.  Instead of running
 every request eagerly (per-request dispatch overhead, the "streaming" mode),
-the engine plans batch points with Algorithm 1 — or time-shares several jobs
-with Algorithm 2 / LLF — and executes real JAX prefill batches.
+the engine plans batch points with the ``single`` policy — or time-shares
+several jobs under a ``*-dynamic`` policy — and executes real JAX prefill
+batches.
 
-C_max doubles as the straggler bound: a batch exceeding it is flagged and
-re-queued (its requests are idempotent), bounding the blocking period
-exactly as §4.2-4.3 requires.
+``ServingExecutor`` implements the ``repro.core.api.Executor`` protocol
+(``submit_batch``/``finalize``/``clock``) over a ``PrefillExecutor``, so the
+engine runs on the SAME runtime loop as the discrete-event simulator and the
+analytics executor.  The loop owns C_max straggler handling: a batch whose
+REAL execution exceeds C_max is flagged in ``trace.stragglers`` and
+re-queued once (its requests are idempotent; results are keyed by request
+offset so the retry overwrites), bounding the blocking period exactly as
+§4.2-4.3 requires.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,13 +32,13 @@ from ..core import (
     ArrivalModel,
     CostModelBase,
     DynamicQuerySpec,
-    LinearCostModel,
+    Planner,
     Query,
     Strategy,
     fit_piecewise_linear,
-    schedule_dynamic,
-    schedule_single,
 )
+from ..core.policies.dynamic import policy_for_strategy
+from ..core.runtime import BaseExecutor, execute_plan, run
 from ..models import lm
 from ..models.config import ModelConfig
 
@@ -51,6 +57,18 @@ class WindowJob:
     @property
     def num_requests(self) -> int:
         return self.prompts.shape[0]
+
+    def as_query(self, cost_model: CostModelBase) -> Query:
+        """The scheduler's view of this job (request units)."""
+        return Query(
+            query_id=self.job_id,
+            wind_start=self.arrival.wind_start,
+            wind_end=self.arrival.wind_end,
+            deadline=self.deadline,
+            num_tuples_total=self.num_requests,
+            cost_model=cost_model,
+            arrival=self.arrival,
+        )
 
 
 class PrefillExecutor:
@@ -94,43 +112,68 @@ class PrefillExecutor:
         return fit_piecewise_linear(samples)
 
 
+class ServingExecutor(BaseExecutor):
+    """``repro.core.api.Executor`` over real prefill batches.
+
+    Time is modelled from the cost model (the container has no live
+    traffic), but every submitted batch runs real prefill compute; measured
+    wall time accumulates in ``wall_seconds`` and feeds the runtime loop's
+    C_max straggler detection.  Logits are keyed by request offset so a
+    re-queued straggler batch overwrites its own results (idempotent).
+    """
+
+    def __init__(self, prefill: PrefillExecutor, jobs: Sequence[WindowJob]):
+        super().__init__()
+        self.prefill = prefill
+        self._jobs: Dict[str, WindowJob] = {j.job_id: j for j in jobs}
+        self._logits: Dict[str, Dict[int, np.ndarray]] = {
+            j.job_id: {} for j in jobs
+        }
+
+    def _execute(self, query: Query, num_tuples: int, offset: int) -> Optional[float]:
+        job = self._jobs[query.query_id]
+        chunk = job.prompts[offset: offset + num_tuples]
+        if len(chunk) == 0:
+            return None
+        logits, dt = self.prefill.run_batch(chunk)
+        self._logits[job.job_id][offset] = logits
+        job.processed = sum(
+            len(v) for v in self._logits[job.job_id].values()
+        )
+        return dt
+
+    def _finalize(self, query: Query, num_batches: int) -> Optional[float]:
+        job = self._jobs[query.query_id]
+        job.results = [
+            self._logits[job.job_id][off]
+            for off in sorted(self._logits[job.job_id])
+        ]
+        return None
+
+
 def serve_single_job(job: WindowJob, executor: PrefillExecutor,
                      cost_model: CostModelBase,
-                     now_fn: Optional[Callable[[], float]] = None
-                     ) -> Dict[str, float]:
-    """Algorithm 1 end-to-end on one job with REAL batch execution.
+                     policy: str = "single",
+                     c_max: Optional[float] = None) -> Dict[str, float]:
+    """One job end-to-end: plan with a static policy, execute the plan with
+    REAL batch compute through the shared runtime loop (strict mode: the
+    vetted plan is replayed verbatim against fully materialized prompts).
 
-    Time is simulated from the arrival model (the container has no live
-    traffic), but every scheduled batch runs real prefill compute; the
-    executed cost is the measured wall time.
-    """
-    q = Query(
-        query_id=job.job_id,
-        wind_start=job.arrival.wind_start,
-        wind_end=job.arrival.wind_end,
-        deadline=job.deadline,
-        num_tuples_total=job.num_requests,
-        cost_model=cost_model,
-        arrival=job.arrival,
-    )
-    plan = schedule_single(q)
-    sim_now = job.arrival.wind_start
-    total_exec = 0.0
-    for b in plan.batches:
-        sim_now = max(sim_now, b.sched_time)
-        chunk = job.prompts[job.processed: job.processed + b.num_tuples]
-        logits, dt = executor.run_batch(chunk)
-        job.results.append(logits)
-        job.processed += len(chunk)
-        total_exec += dt
-        sim_now += cost_model.cost(len(chunk))
+    ``c_max`` (wall seconds) enables the loop's straggler flag/re-queue on
+    this static path; static policies carry no C_max of their own."""
+    q = job.as_query(cost_model)
+    plan = Planner(policy=policy).schedule(q)
+    serving = ServingExecutor(executor, [job])
+    trace = execute_plan(q, plan, serving, strict=True, c_max=c_max)
+    out = trace.outcome(job.job_id)
     return {
-        "num_batches": plan.num_batches,
-        "modelled_finish": sim_now,
+        "num_batches": out.num_batches,
+        "modelled_finish": out.completion_time,
         "deadline": job.deadline,
-        "met_modelled": sim_now <= job.deadline + 1e-9,
-        "wall_exec_seconds": total_exec,
+        "met_modelled": out.met_deadline,
+        "wall_exec_seconds": serving.wall_seconds.get(job.job_id, 0.0),
         "processed": job.processed,
+        "straggler_events": trace.stragglers.count(job.job_id),
     }
 
 
@@ -139,49 +182,23 @@ def serve_multi_jobs(jobs: Sequence[WindowJob], executor: PrefillExecutor,
                      strategy: Strategy = Strategy.LLF,
                      delta_rsf: float = 0.5, c_max: float = 30.0
                      ) -> Dict[str, Dict]:
-    """Algorithm 2 (LLF default) across concurrent jobs, executing each
-    scheduled MinBatch for real via the ``on_batch`` hook."""
+    """Algorithm 2 (LLF default) across concurrent jobs: the ``*-dynamic``
+    policy decides, the shared runtime loop drives, ``ServingExecutor``
+    performs each scheduled MinBatch for real."""
+    serving = ServingExecutor(executor, jobs)
+    specs = [DynamicQuerySpec(query=j.as_query(cost_model)) for j in jobs]
+    policy = policy_for_strategy(strategy, delta_rsf=delta_rsf, c_max=c_max)
+    trace = run(policy, specs, serving)
     by_id = {j.job_id: j for j in jobs}
-    wall = {j.job_id: 0.0 for j in jobs}
-    stragglers: List[str] = []
-
-    def on_batch(ex):
-        job = by_id[ex.query_id]
-        if ex.kind != "batch" or ex.num_tuples == 0:
-            return
-        chunk = job.prompts[job.processed: job.processed + ex.num_tuples]
-        logits, dt = executor.run_batch(chunk)
-        job.results.append(logits)
-        job.processed += len(chunk)
-        wall[job.job_id] += dt
-        if dt > c_max:
-            stragglers.append(job.job_id)  # re-dispatch on a real pod
-
-    specs = [
-        DynamicQuerySpec(
-            query=Query(
-                query_id=j.job_id,
-                wind_start=j.arrival.wind_start,
-                wind_end=j.arrival.wind_end,
-                deadline=j.deadline,
-                num_tuples_total=j.num_requests,
-                cost_model=cost_model,
-                arrival=j.arrival,
-            )
-        )
-        for j in jobs
-    ]
-    trace = schedule_dynamic(specs, strategy, delta_rsf=delta_rsf,
-                             c_max=c_max, on_batch=on_batch)
     return {
         o.query_id: {
             "met_modelled": o.met_deadline,
             "completion": o.completion_time,
             "deadline": o.deadline,
             "num_batches": o.num_batches,
-            "wall_exec_seconds": wall[o.query_id],
+            "wall_exec_seconds": serving.wall_seconds.get(o.query_id, 0.0),
             "processed": by_id[o.query_id].processed,
-            "straggler_events": stragglers.count(o.query_id),
+            "straggler_events": trace.stragglers.count(o.query_id),
         }
         for o in trace.outcomes
     }

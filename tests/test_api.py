@@ -1,0 +1,257 @@
+"""Planner / SchedulingPolicy / registry API tests.
+
+* registry round-trip: every registered name instantiates via get_policy;
+* parity: each policy returns byte-identical schedules to the legacy
+  ``schedule_*`` function it subsumes — on the §3.1 worked example AND the
+  TPC-H benchmark configs (paper §7.1 cost models);
+* every legacy shim emits a DeprecationWarning, exactly once per call site.
+"""
+import contextlib
+import warnings
+
+import pytest
+
+from repro.core import (
+    ConstantRateArrival,
+    DynamicQuerySpec,
+    LinearCostModel,
+    Plan,
+    Planner,
+    Query,
+    SimulatedExecutor,
+    Strategy,
+    execute_single,
+    get_policy,
+    list_policies,
+    register_policy,
+    run,
+    schedule_dynamic,
+    schedule_single,
+    schedule_via_constraints,
+    schedule_with_agg_cost,
+    schedule_without_agg_cost,
+    brute_force_optimal,
+    validate_schedule,
+)
+from repro.core.policies.constraint import brute_force_search
+from repro.core.policies.single import StaticPolicy
+from repro.data.tpch import paper_cost_model
+
+EXPECTED_POLICIES = {
+    "single", "single-no-agg", "single-agg",
+    "constraints", "brute-force",
+    "llf-dynamic", "edf-dynamic", "sjf-dynamic", "rr-dynamic",
+}
+
+
+def paper_31_query(deadline: float) -> Query:
+    """§3.1 worked example: 10 tuples at 1/s over [1, 10], 2 tuples/unit."""
+    arr = ConstantRateArrival(wind_start=1.0, rate=1.0, num_tuples_total=10)
+    return Query(f"p{deadline}", 1.0, 10.0, deadline, 10,
+                 LinearCostModel(tuple_cost=0.5), arr)
+
+
+def tpch_query(qid: str, num_files: int = 4500, deadline_frac: float = 0.5,
+               cost_model=None) -> Query:
+    """One of the paper's §7.1 queries over the 1 file/s stream."""
+    cm = cost_model if cost_model is not None else paper_cost_model(qid)
+    arr = ConstantRateArrival(wind_start=0.0, rate=1.0,
+                              num_tuples_total=num_files)
+    return Query(qid, 0.0, arr.wind_end,
+                 arr.wind_end + deadline_frac * cm.cost(num_files),
+                 num_files, cm, arr)
+
+
+def tpch_linear(qid: str, **kw) -> Query:
+    """Linearized TPC-H cost model (the §3.2 solver requires Eq. (1))."""
+    cm = paper_cost_model(qid)
+    lin = LinearCostModel(tuple_cost=(cm.cost(4500) - cm.cost(1)) / 4499,
+                          overhead=cm.cost(1), agg_per_batch=0.05)
+    return tpch_query(qid, cost_model=lin, **kw)
+
+
+class TestRegistry:
+    def test_round_trip_every_name(self):
+        names = list_policies()
+        assert set(names) == EXPECTED_POLICIES
+        for name in names:
+            pol = get_policy(name)
+            assert pol.name == name
+            assert pol.kind in ("static", "dynamic")
+
+    def test_unknown_name_lists_known(self):
+        with pytest.raises(KeyError, match="llf-dynamic"):
+            get_policy("no-such-policy")
+
+    def test_register_custom_policy(self):
+        @register_policy("test-custom")
+        class CustomPolicy(StaticPolicy):
+            def plan_query(self, query):
+                from repro.core.policies.single import plan_single
+                return plan_single(query)
+
+        try:
+            pol = get_policy("test-custom")
+            assert pol.name == "test-custom"
+            q = paper_31_query(12.0)
+            assert pol.plan(q)[q.query_id] == plan_via_planner(q, "single")
+        finally:
+            from repro.core import api as _api
+            _api._REGISTRY.pop("test-custom", None)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            @register_policy("single")
+            class Clash(StaticPolicy):  # pragma: no cover
+                pass
+
+    def test_planner_facade(self):
+        planner = Planner(policy="single")
+        assert planner.name == "single"
+        plan = planner.plan([paper_31_query(12.0), paper_31_query(16.0)])
+        assert isinstance(plan, Plan)
+        assert plan.policy == "single"
+        assert len(plan.query_ids) == 2
+
+    def test_planner_accepts_instance(self):
+        pol = get_policy("constraints", max_batches=16)
+        assert Planner(policy=pol).name == "constraints"
+        with pytest.raises(TypeError):
+            Planner(policy=pol, max_batches=16)
+
+
+def plan_via_planner(q: Query, policy: str, **kw):
+    return Planner(policy=policy, **kw).schedule(q)
+
+
+@contextlib.contextmanager
+def _silence():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        yield
+
+
+class TestParity:
+    """Each policy == the legacy function it subsumes, byte-identical."""
+
+    @pytest.mark.parametrize("deadline", [16.0, 15.0, 12.0, 11.0])
+    def test_single_paper_cases(self, deadline):
+        q = paper_31_query(deadline)
+        with _silence():
+            legacy = schedule_single(q)
+        assert plan_via_planner(q, "single") == legacy
+
+    @pytest.mark.parametrize("qid", ["CQ1", "CQ2", "CQ3", "CQ4", "TPC-Q10"])
+    @pytest.mark.parametrize("frac", [0.1, 0.5, 2.0])
+    def test_single_tpch(self, qid, frac):
+        q = tpch_query(qid, deadline_frac=frac)
+        with _silence():
+            legacy = schedule_single(q)
+        plan = plan_via_planner(q, "single")
+        assert plan == legacy
+        validate_schedule(q, plan)
+
+    def test_single_no_agg_tpch(self):
+        q = tpch_query("CQ3", deadline_frac=1.0)
+        with _silence():
+            legacy = schedule_without_agg_cost(q, q.deadline)
+        assert plan_via_planner(q, "single-no-agg") == legacy
+
+    def test_single_agg_tpch(self):
+        q = tpch_query("CQ2", deadline_frac=0.2)
+        with _silence():
+            legacy = schedule_with_agg_cost(q)
+        assert plan_via_planner(q, "single-agg") == legacy
+
+    @pytest.mark.parametrize("qid", ["CQ1", "CQ2", "CQ3", "CQ4"])
+    def test_constraints_tpch(self, qid):
+        q = tpch_linear(qid, deadline_frac=0.3)
+        with _silence():
+            legacy = schedule_via_constraints(q)
+        assert plan_via_planner(q, "constraints") == legacy
+
+    def test_brute_force_small(self):
+        q = paper_31_query(11.0)
+        with _silence():
+            n, sizes = brute_force_optimal(q)
+        plan = plan_via_planner(q, "brute-force")
+        assert plan.num_batches == n
+        assert tuple(plan.sch_tuples) == sizes
+        assert brute_force_search(q) == (n, sizes)
+
+    @pytest.mark.parametrize("strategy", list(Strategy))
+    def test_dynamic_tpch(self, strategy):
+        def specs():
+            return [
+                DynamicQuerySpec(query=tpch_query(qid, num_files=900,
+                                                  deadline_frac=4.0))
+                for qid in ("CQ1", "CQ2", "CQ3")
+            ]
+
+        with _silence():
+            legacy = schedule_dynamic(specs(), strategy,
+                                      delta_rsf=0.5, c_max=30.0)
+        policy = get_policy(f"{strategy.value}-dynamic",
+                            delta_rsf=0.5, c_max=30.0)
+        trace = run(policy, specs(), SimulatedExecutor())
+        assert trace.executions == legacy.executions
+        assert trace.outcomes == legacy.outcomes
+
+    def test_dynamic_plan_projection_matches_trace(self):
+        q = tpch_query("CQ2", num_files=600, deadline_frac=4.0)
+        policy = get_policy("llf-dynamic")
+        trace = run(policy, [DynamicQuerySpec(query=q)], SimulatedExecutor())
+        plan = policy.plan(q)
+        realized = [(e.start, e.num_tuples) for e in trace.executions
+                    if e.kind == "batch"]
+        assert [(b.sched_time, b.num_tuples)
+                for b in plan[q.query_id].batches] == realized
+
+    def test_cost_model_override(self):
+        q = paper_31_query(16.0)
+        fast = LinearCostModel(tuple_cost=0.1)
+        plan = Planner(policy="single").plan(q, cost_model=fast)
+        assert plan[q.query_id].batches[0].sched_time == pytest.approx(15.0)
+
+
+class TestDeprecationShims:
+    def test_each_shim_warns(self):
+        q = paper_31_query(12.0)
+        lin = tpch_linear("CQ1", deadline_frac=0.3)
+        with pytest.warns(DeprecationWarning, match="schedule_single"):
+            plan = schedule_single(q)
+        with pytest.warns(DeprecationWarning, match="schedule_with_agg_cost"):
+            schedule_with_agg_cost(q)
+        with pytest.warns(DeprecationWarning, match="schedule_without_agg_cost"):
+            schedule_without_agg_cost(q, q.deadline)
+        with pytest.warns(DeprecationWarning, match="schedule_via_constraints"):
+            schedule_via_constraints(lin)
+        with pytest.warns(DeprecationWarning, match="brute_force_optimal"):
+            brute_force_optimal(q)
+        with pytest.warns(DeprecationWarning, match="execute_single"):
+            execute_single(q, plan)
+        with pytest.warns(DeprecationWarning, match="schedule_dynamic"):
+            schedule_dynamic([DynamicQuerySpec(query=q)])
+
+    def test_warns_exactly_once_per_call_site(self):
+        q = paper_31_query(16.0)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("default")
+            for _ in range(3):
+                schedule_single(q)  # ONE call site, three calls
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1, [str(w.message) for w in dep]
+
+    def test_distinct_call_sites_each_warn(self):
+        q = paper_31_query(16.0)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("default")
+            schedule_single(q)  # call site A
+            schedule_single(q)  # call site B
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 2
+
+    def test_shim_results_identical_to_policy(self):
+        q = paper_31_query(11.0)
+        with _silence():
+            assert schedule_single(q) == get_policy("single").plan(q)[q.query_id]

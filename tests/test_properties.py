@@ -1,7 +1,12 @@
 """Property-based tests (hypothesis) for the scheduler's invariants."""
 import math
 
-from hypothesis import assume, given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment"
+)
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     ConstantRateArrival,

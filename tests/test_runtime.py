@@ -1,0 +1,192 @@
+"""Shared runtime-loop tests.
+
+The headline property of the Executor protocol: the discrete-event
+simulator, the JAX analytics executor and the serving engine produce the
+SAME ExecutionTrace on a fixed arrival trace — the modelled clock is
+backend-independent, only the physical work differs.
+
+Plus: C_max straggler detection/re-queue, and execute_plan strict/adaptive
+behaviour.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DynamicQuerySpec,
+    ExecutionTrace,
+    LinearCostModel,
+    Planner,
+    Query,
+    SimulatedExecutor,
+    TraceArrival,
+    get_policy,
+    run,
+)
+from repro.core.runtime import BaseExecutor, execute_plan
+
+N_TUPLES = 8
+TIMESTAMPS = tuple(float(i) for i in range(N_TUPLES))  # 1 tuple/s from t=0
+
+
+def fixed_query(qid: str = "q0", deadline_slack: float = 3.0) -> Query:
+    arr = TraceArrival(timestamps=TIMESTAMPS)
+    cm = LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2)
+    return Query(
+        query_id=qid,
+        wind_start=arr.wind_start,
+        wind_end=arr.wind_end,
+        deadline=arr.wind_end + deadline_slack * cm.cost(N_TUPLES),
+        num_tuples_total=N_TUPLES,
+        cost_model=cm,
+        arrival=arr,
+    )
+
+
+def _analytics_executor(qid: str):
+    from repro.data.tpch import PAPER_QUERIES, StreamScale, stream_files
+    from repro.serve.analytics import AnalyticsRuntimeExecutor
+
+    scale = StreamScale(scale=0.005)
+    aq = PAPER_QUERIES[1]  # CQ2: 5 groups
+    files = [l if aq.stream == "lineitem" else o
+             for _, o, l in stream_files(seed=5, num_files=N_TUPLES, sc=scale)]
+    return AnalyticsRuntimeExecutor({qid: (aq, files)}, scale)
+
+
+def _serving_executor(qid: str):
+    import jax
+
+    from repro.models.base import get_config
+    from repro.models.lm import build_specs
+    from repro.models.params import init_params
+    from repro.serve.engine import PrefillExecutor, ServingExecutor, WindowJob
+
+    cfg = dataclasses.replace(get_config("yi_6b").reduced(), vocab_size=128)
+    params = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+    prefill = PrefillExecutor(cfg, params, buckets=(1, 2, 4, 8))
+    rng = np.random.default_rng(0)
+    job = WindowJob(
+        job_id=qid,
+        prompts=rng.integers(0, cfg.vocab_size, (N_TUPLES, 8)).astype(np.int32),
+        arrival=TraceArrival(timestamps=TIMESTAMPS),
+        deadline=fixed_query(qid).deadline,
+    )
+    return ServingExecutor(prefill, [job])
+
+
+def _traces_equal(a: ExecutionTrace, b: ExecutionTrace) -> bool:
+    return a.executions == b.executions and a.outcomes == b.outcomes
+
+
+class TestExecutorEquivalence:
+    """All three executors: identical ExecutionTrace on a fixed arrival."""
+
+    @pytest.fixture(scope="class")
+    def traces(self):
+        out = {}
+        for policy_name in ("llf-dynamic", "single"):
+            policy = get_policy(policy_name) if policy_name != "llf-dynamic" \
+                else get_policy(policy_name, delta_rsf=0.5, c_max=30.0)
+            per_exec = {}
+            for backend in ("simulated", "analytics", "serving"):
+                q = fixed_query()
+                executor = {
+                    "simulated": lambda: SimulatedExecutor(),
+                    "analytics": lambda: _analytics_executor(q.query_id),
+                    "serving": lambda: _serving_executor(q.query_id),
+                }[backend]()
+                per_exec[backend] = run(
+                    policy, [DynamicQuerySpec(query=q)], executor
+                )
+            out[policy_name] = per_exec
+        return out
+
+    @pytest.mark.parametrize("policy_name", ["llf-dynamic", "single"])
+    def test_all_backends_identical(self, traces, policy_name):
+        per_exec = traces[policy_name]
+        sim = per_exec["simulated"]
+        assert sim.executions, "simulated trace must not be empty"
+        assert _traces_equal(sim, per_exec["analytics"])
+        assert _traces_equal(sim, per_exec["serving"])
+
+    def test_all_tuples_processed(self, traces):
+        for per_exec in traces.values():
+            for trace in per_exec.values():
+                done = sum(e.num_tuples for e in trace.executions
+                           if e.kind == "batch")
+                assert done == N_TUPLES
+
+
+class TestStragglerRequeue:
+    class SlowExecutor(BaseExecutor):
+        """Every real batch takes 10 wall-seconds; records re-dispatches."""
+
+        def __init__(self):
+            super().__init__()
+            self.executed = []
+
+        def _execute(self, query, num_tuples, offset):
+            self.executed.append((query.query_id, offset, num_tuples))
+            return 10.0
+
+    def test_stragglers_flagged_and_requeued(self):
+        q = fixed_query(deadline_slack=5.0)
+        ex = self.SlowExecutor()
+        policy = get_policy("llf-dynamic", delta_rsf=0.5, c_max=1.0)
+        trace = run(policy, [DynamicQuerySpec(query=q)], ex)
+        n_batches = sum(1 for e in trace.executions if e.kind == "batch")
+        assert n_batches > 0
+        assert trace.stragglers.count(q.query_id) == n_batches
+        # every straggler batch was re-dispatched exactly once (idempotent)
+        assert len(ex.executed) == 2 * n_batches
+
+    def test_fast_executor_no_stragglers(self):
+        q = fixed_query()
+        policy = get_policy("llf-dynamic", delta_rsf=0.5, c_max=30.0)
+        trace = run(policy, [DynamicQuerySpec(query=q)], SimulatedExecutor())
+        assert trace.stragglers == []
+
+
+class TestExecutePlan:
+    def test_strict_replays_plan_verbatim(self):
+        q = fixed_query(deadline_slack=0.6)  # forces multiple batches
+        plan = Planner(policy="single").schedule(q)
+        assert plan.num_batches > 1
+        trace = execute_plan(q, plan, strict=True)
+        got = [(e.start, e.num_tuples) for e in trace.executions
+               if e.kind == "batch"]
+        assert got == [(b.sched_time, b.num_tuples) for b in plan.batches]
+
+    def test_adaptive_absorbs_faster_arrivals(self):
+        # Truth arrives 2x faster than predicted: the adaptive loop finishes
+        # earlier than the plan's last point, never later.
+        q = fixed_query(deadline_slack=0.6)
+        plan = Planner(policy="single").schedule(q)
+        truth = TraceArrival(timestamps=tuple(t / 2 for t in TIMESTAMPS))
+        trace = execute_plan(q, plan, truth=truth)
+        assert sum(e.num_tuples for e in trace.executions) == N_TUPLES
+        assert trace.outcomes[0].completion_time <= q.deadline + 1e-9
+
+    def test_outcome_and_deadline_recorded(self):
+        q = fixed_query()
+        trace = Planner(policy="single").run([q])
+        out = trace.outcome(q.query_id)
+        assert out.met_deadline
+        assert out.num_batches >= 1
+
+    def test_empty_plan_with_tuples_rejected(self):
+        from repro.core import Schedule
+
+        q = fixed_query()
+        with pytest.raises(ValueError, match="empty plan"):
+            execute_plan(q, Schedule(batches=()))
+
+    def test_static_path_straggler_via_explicit_c_max(self):
+        # Static policies carry no C_max; run(..., c_max=...) enables the
+        # loop's straggler flagging on the static path too.
+        q = fixed_query()
+        ex = TestStragglerRequeue.SlowExecutor()
+        trace = run(get_policy("single"), [q], ex, c_max=1.0)
+        assert trace.stragglers.count(q.query_id) > 0
