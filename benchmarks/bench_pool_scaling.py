@@ -1,0 +1,95 @@
+"""Makespan vs worker count W — the repo's first scale-out curve.
+
+The paper's Custom Query Scheduler runs on a Spark CLUSTER; everything up
+to now modelled exactly one executor.  This bench runs the §7.1 multi-query
+set (all 13 queries over one shared stream) under ``llf-dynamic`` on a
+simulated ``ExecutorPool`` of W workers, in three traffic regimes:
+
+* ``steady``    — the paper's 1 file/s stream, Fig-4 cost models: arrival-
+                  bound, so W mainly parallelizes the post-window tail;
+* ``spark``     — same stream, §7.4 spark-regime cost models (heavy
+                  per-batch overheads): W=1 misses deadlines that W>=2
+                  meets;
+* ``burst100x`` — the whole stream arrives at 100 files/s (the ROADMAP's
+                  heavy-traffic regime): compute-bound, near-linear
+                  makespan speedup with W.
+
+Reported per row: makespan (max completion), met deadlines, total modelled
+cost (stays ~constant — the pool adds workers, not work — so speedup =
+makespan(1)/makespan(W) is honest).  One extra row repeats burst W=4 with
+``shard_across=4`` (MinBatches split into per-worker shards via
+``repro.dist.sharding.batch_shard_extents``).
+"""
+from __future__ import annotations
+
+from repro.core import DynamicQuerySpec, Planner
+
+from .common import Timer, all_paper_queries, emit, write_result
+
+WORKER_COUNTS = (1, 2, 4, 8)
+SCENARIOS = {
+    # name -> (cost-model regime, arrival rate files/s)
+    "steady": ("fig4", 1.0),
+    "spark": ("spark", 1.0),
+    "burst100x": ("fig4", 100.0),
+}
+DEADLINE_FRAC = 2.0
+C_MAX = 30.0
+
+
+def run_case(scenario: str, workers: int, shard_across: int = 1) -> dict:
+    regime, rate = SCENARIOS[scenario]
+    queries = all_paper_queries(deadline_frac=DEADLINE_FRAC, regime=regime,
+                                rate=rate)
+    specs = [DynamicQuerySpec(query=q) for q in queries]
+    planner = Planner(policy="llf-dynamic", delta_rsf=0.5, c_max=C_MAX,
+                      shard_across=shard_across)
+    with Timer() as t:
+        trace = planner.run(specs, workers=workers)
+    return {
+        "scenario": scenario,
+        "workers": workers,
+        "shard_across": shard_across,
+        "makespan": max(o.completion_time for o in trace.outcomes),
+        "total_cost": trace.total_cost,
+        "num_batches": sum(1 for e in trace.executions if e.kind == "batch"),
+        "met_deadlines": sum(1 for o in trace.outcomes if o.met_deadline),
+        "num_queries": len(queries),
+        "harness_seconds": t.seconds,
+    }
+
+
+def main() -> None:
+    rows = []
+    for scenario in SCENARIOS:
+        base = None
+        for w in WORKER_COUNTS:
+            row = run_case(scenario, w)
+            base = row["makespan"] if base is None else base
+            row["speedup"] = base / row["makespan"]
+            rows.append(row)
+    sharded = run_case("burst100x", 4, shard_across=4)
+    base = next(r["makespan"] for r in rows
+                if r["scenario"] == "burst100x" and r["workers"] == 1)
+    sharded["speedup"] = base / sharded["makespan"]
+    rows.append(sharded)
+
+    write_result("pool_scaling", {
+        "policy": "llf-dynamic",
+        "deadline_frac": DEADLINE_FRAC,
+        "c_max": C_MAX,
+        "scenarios": {k: {"regime": v[0], "rate": v[1]}
+                      for k, v in SCENARIOS.items()},
+        "rows": rows,
+    })
+    for r in rows:
+        tag = (f"pool_scaling_{r['scenario']}_w{r['workers']}"
+               + (f"_shard{r['shard_across']}" if r["shard_across"] > 1
+                  else ""))
+        emit(tag, r["harness_seconds"] * 1e6,
+             f"makespan={r['makespan']:.1f};speedup={r['speedup']:.2f};"
+             f"met={r['met_deadlines']}/{r['num_queries']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,11 +13,13 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
 def paper_query(qid: str, deadline_frac: float = 2.0,
-                num_files: int = NUM_FILES, regime: str = "fig4") -> Query:
+                num_files: int = NUM_FILES, regime: str = "fig4",
+                rate: float = 1.0) -> Query:
     """One of the paper's 13 queries as a scheduler Query over the §7.1
-    stream (1 file/s, window [0, num_files])."""
+    stream (``rate`` files/s — 1.0 is the paper's stream; higher rates model
+    the heavy-traffic regime where work outruns one executor)."""
     cm = paper_cost_model(qid, regime)
-    arr = ConstantRateArrival(wind_start=0.0, rate=1.0,
+    arr = ConstantRateArrival(wind_start=0.0, rate=rate,
                               num_tuples_total=num_files)
     base = cm.cost(num_files)
     return Query(
@@ -33,8 +35,9 @@ def paper_query(qid: str, deadline_frac: float = 2.0,
 
 def all_paper_queries(deadline_frac: float = 2.0,
                       num_files: int = NUM_FILES,
-                      regime: str = "fig4") -> List[Query]:
-    return [paper_query(q, deadline_frac, num_files, regime)
+                      regime: str = "fig4",
+                      rate: float = 1.0) -> List[Query]:
+    return [paper_query(q, deadline_frac, num_files, regime, rate)
             for q in PAPER_QUERY_IDS]
 
 

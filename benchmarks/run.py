@@ -17,7 +17,8 @@ import time
 import traceback
 
 
-def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int) -> int:
+def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int,
+                     workers: int = 1) -> int:
     from repro.core import InfeasibleDeadline, Planner
 
     from .common import all_paper_queries, emit, write_result
@@ -26,6 +27,10 @@ def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int) -> 
         planner = Planner(policy=policy_name)
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    if workers > 1 and getattr(planner.policy, "kind", "static") != "dynamic":
+        print("error: --workers applies to dynamic policies only (static "
+              "runs give each query its own timeline)", file=sys.stderr)
         return 2
     queries = all_paper_queries(deadline_frac=deadline_frac,
                                 num_files=num_files)
@@ -54,7 +59,7 @@ def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int) -> 
             trace = ExecutionTrace()
     else:
         t0 = time.perf_counter()
-        trace = planner.run(queries)
+        trace = planner.run(queries, workers=workers if workers > 1 else None)
         dt = time.perf_counter() - t0
 
     rows = []
@@ -85,10 +90,15 @@ def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int) -> 
     met = sum(1 for r in rows if r["met_deadline"])
     emit(f"policy_{policy_name}_summary", dt * 1e6,
          f"met={met}/{len(rows)};policy={policy_name}")
-    write_result(f"policy_{policy_name}", {
+    # workers>1 gets its own results file so a pool run never clobbers the
+    # single-worker baseline record.
+    result_name = f"policy_{policy_name}" + (
+        f"_w{workers}" if workers > 1 else "")
+    write_result(result_name, {
         "policy": policy_name,
         "deadline_frac": deadline_frac,
         "num_files": num_files,
+        "workers": workers,
         "outcomes": rows,
         "stragglers": trace.stragglers,
         "wall_seconds": dt,
@@ -108,6 +118,9 @@ def main() -> None:
                     help="deadline slack as a fraction of single-batch cost")
     ap.add_argument("--num-files", type=int, default=900,
                     help="stream length in files (paper full scale: 4500)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="ExecutorPool width for --policy runs (dynamic "
+                         "policies only; 1 = bare executor)")
     ap.add_argument("--list-policies", action="store_true",
                     help="print registered policy names and exit")
     args = ap.parse_args()
@@ -121,13 +134,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     if args.policy:
         sys.exit(run_policy_bench(args.policy, args.deadline_frac,
-                                  args.num_files))
+                                  args.num_files, args.workers))
 
     from . import (
         bench_single_query,      # Fig 2 + Fig 6
         bench_cost_vs_batches,   # Fig 4
         bench_batch_vs_streaming,# Fig 5
         bench_multi_query,       # Fig 7 (both calibration regimes)
+        bench_pool_scaling,      # makespan vs W (ExecutorPool scale-out)
         bench_input_modes,       # Table 2 analogue (real executor)
         bench_memory,            # §7.2 OOM analysis
         bench_kernels,           # kernel micro-benches
@@ -137,8 +151,8 @@ def main() -> None:
     failures = 0
     for mod in (bench_single_query, bench_cost_vs_batches,
                 bench_batch_vs_streaming, bench_multi_query,
-                bench_input_modes, bench_memory, bench_kernels,
-                bench_roofline):
+                bench_pool_scaling, bench_input_modes, bench_memory,
+                bench_kernels, bench_roofline):
         try:
             mod.main()
         except Exception:

@@ -16,7 +16,9 @@ around three first-class pieces:
   (``repro.serve.analytics``) and the model-serving engine
   (``repro.serve.engine``).  All executors share ONE runtime loop
   (``repro.core.runtime.run``) that owns deadline checking, C_max straggler
-  re-queue and trace recording.
+  re-queue and trace recording.  Any backend scales out via
+  ``ExecutorPool`` — W workers with independent modelled clocks over one
+  physical backend; ``workers=1`` is trace-identical to the bare executor.
 
 Pure-Python/numpy and executor-agnostic; the legacy ``schedule_*`` free
 functions remain as deprecation shims (see docs/API.md for the migration
@@ -58,6 +60,7 @@ from .multi_query import (
 )
 from .runtime import (
     BaseExecutor,
+    ExecutorPool,
     QueryRuntime,
     RuntimeState,
     SimulatedExecutor,
@@ -88,6 +91,7 @@ from .single_query import (
 from .types import (
     Batch,
     BatchExecution,
+    BatchShard,
     ExecutionTrace,
     InfeasibleDeadline,
     Plan,
@@ -103,11 +107,13 @@ __all__ = [
     "BaseExecutor",
     "Batch",
     "BatchExecution",
+    "BatchShard",
     "ConstantRateArrival",
     "CostModelBase",
     "DynamicQuerySpec",
     "ExecutionTrace",
     "Executor",
+    "ExecutorPool",
     "FeasibilityReport",
     "InfeasibleDeadline",
     "LARGE_NUMBER",

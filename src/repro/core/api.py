@@ -20,7 +20,11 @@ executor.  This module makes that structure first-class:
   (``repro.serve.analytics.AnalyticsRuntimeExecutor``) and the model-serving
   engine (``repro.serve.engine.ServingExecutor``).  All three share ONE
   runtime loop (``repro.core.runtime.run``), which owns deadline checking,
-  C_max straggler re-queue and trace recording.
+  C_max straggler re-queue and trace recording.  Any backend scales out by
+  wrapping it in ``repro.core.runtime.ExecutorPool`` (W workers with
+  independent modelled clocks over one physical backend); decisions may
+  target a named worker or split into per-worker shards
+  (``PolicyDecision.worker`` / ``PolicyDecision.shards``).
 
 Scheduling state/decision events flow::
 
@@ -243,12 +247,19 @@ class Planner:
         self,
         workload,
         executor: Optional[Executor] = None,
+        *,
+        workers: Optional[int] = None,
         **runtime_kw,
     ) -> ExecutionTrace:
         """Execute ``workload`` (Queries or DynamicQuerySpecs) end to end
-        through the shared runtime loop; simulates when no executor given."""
-        from .runtime import run as _run
+        through the shared runtime loop; simulates when no executor given.
 
+        ``workers=W`` wraps ``executor`` in an ``ExecutorPool`` of W workers
+        (``workers=4`` with no executor: a 4-way simulated pool)."""
+        from .runtime import ExecutorPool, run as _run
+
+        if workers is not None:
+            executor = ExecutorPool(backend=executor, workers=workers)
         return _run(self.policy, workload, executor=executor, **runtime_kw)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety

@@ -13,6 +13,12 @@ A cost model answers three questions the planners need:
 
 All models must be monotone non-decreasing in ``n``; the Algorithm-1 planner
 works for ANY such model (§3.1 closing remark), which we exercise in tests.
+
+Zero-batch convention (shared by every model): ``cost(0)`` is the fixed
+per-batch overhead — the n->0 limit of the model, i.e. what dispatching an
+empty batch would cost.  ``tuples_processable`` relies on it: a duration
+below ``cost(0)`` cannot pay the overhead, so no tuples fit.  Negative
+``n`` is not a batch; ``cost(n < 0)`` returns 0.0.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ class CostModelBase:
     """Interface; see module docstring."""
 
     def cost(self, num_tuples: int) -> float:
+        """Cost of one batch of ``num_tuples``; ``cost(0)`` is the per-batch
+        overhead (see the module docstring's zero-batch convention)."""
         raise NotImplementedError
 
     def agg_cost(self, num_batches: int) -> float:
@@ -114,12 +122,26 @@ class PiecewiseLinearCostModel(CostModelBase):
     agg_points: Tuple[Tuple[float, float], ...] = ((1, 0.0),)
 
     def __post_init__(self) -> None:
-        xs = [p[0] for p in self.points]
-        if xs != sorted(xs) or len(xs) < 2:
-            raise ValueError("points must be >=2 knots sorted by num_tuples")
-        cs = [p[1] for p in self.points]
+        self._validate("points", self.points, min_knots=2)
+        # agg_points feed the same ``bisect``-based interpolation: unsorted
+        # or non-monotone agg knots silently mis-interpolate, so they get
+        # the same validation (a single (1, 0.0) knot — "no agg cost" — is
+        # the legitimate minimal form).
+        self._validate("agg_points", self.agg_points, min_knots=1)
+
+    @staticmethod
+    def _validate(
+        label: str, points: Sequence[Tuple[float, float]], min_knots: int
+    ) -> None:
+        xs = [p[0] for p in points]
+        if xs != sorted(xs) or len(set(xs)) != len(xs) or len(xs) < min_knots:
+            raise ValueError(
+                f"{label} must be >={min_knots} knots strictly sorted by x, "
+                f"got {tuple(points)!r}"
+            )
+        cs = [p[1] for p in points]
         if any(b < a - 1e-12 for a, b in zip(cs, cs[1:])):
-            raise ValueError("cost must be monotone non-decreasing")
+            raise ValueError(f"{label} cost must be monotone non-decreasing")
 
     @staticmethod
     def _interp(points: Sequence[Tuple[float, float]], x: float) -> float:
@@ -141,8 +163,13 @@ class PiecewiseLinearCostModel(CostModelBase):
         return y0 + t * (y1 - y0)
 
     def cost(self, num_tuples: int) -> float:
-        if num_tuples <= 0:
+        if num_tuples < 0:
             return 0.0
+        if num_tuples == 0:
+            # Zero-batch convention: the fitted model's per-batch overhead is
+            # the first segment extrapolated to n=0 (clamped — measured knots
+            # can extrapolate below zero).
+            return max(0.0, self._interp(self.points, 0.0))
         return max(0.0, self._interp(self.points, float(num_tuples)))
 
     def agg_cost(self, num_batches: int) -> float:
@@ -163,8 +190,10 @@ class SublinearCostModel(CostModelBase):
     agg_per_batch: float = 0.0
 
     def cost(self, num_tuples: int) -> float:
-        if num_tuples <= 0:
+        if num_tuples < 0:
             return 0.0
+        if num_tuples == 0:
+            return self.overhead  # zero-batch convention: n->0 limit
         return self.scale * float(num_tuples) ** self.exponent + self.overhead
 
     def agg_cost(self, num_batches: int) -> float:
@@ -173,23 +202,37 @@ class SublinearCostModel(CostModelBase):
         return num_batches * self.agg_per_batch
 
 
+def _isotonic(samples: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """Sort, dedupe (max y per x — repeated measurements of one size), and
+    make costs monotone by cumulative max: measurement noise can otherwise
+    produce a locally decreasing cost, which the planners' inversion logic
+    and the knot validation reject."""
+    by_x: dict = {}
+    for x, y in samples:
+        x, y = float(x), float(y)
+        by_x[x] = max(y, by_x.get(x, y))
+    mono: List[Tuple[float, float]] = []
+    running = 0.0
+    for x in sorted(by_x):
+        running = max(running, by_x[x])
+        mono.append((x, running))
+    return mono
+
+
 def fit_piecewise_linear(
     samples: Sequence[Tuple[float, float]],
     agg_samples: Sequence[Tuple[float, float]] = ((1, 0.0),),
 ) -> PiecewiseLinearCostModel:
     """§6.2 cost modelling: fit measured (batch_size, time) samples.
 
-    We keep the measured points as knots after isotonic cleanup (costs made
-    monotone by cumulative max — measurement noise can otherwise produce a
-    locally decreasing cost, which the planners' inversion logic rejects).
+    We keep the measured points as knots after isotonic cleanup — applied to
+    BOTH the per-batch samples and the final-aggregation samples, which feed
+    the same interpolation.
     """
-    pts = sorted((float(x), float(y)) for x, y in samples)
-    mono: List[Tuple[float, float]] = []
-    running = 0.0
-    for x, y in pts:
-        running = max(running, y)
-        mono.append((x, running))
+    mono = _isotonic(samples)
     if len(mono) == 1:
         x, y = mono[0]
         mono.append((x + 1.0, y))
-    return PiecewiseLinearCostModel(points=tuple(mono), agg_points=tuple(agg_samples))
+    return PiecewiseLinearCostModel(
+        points=tuple(mono), agg_points=tuple(_isotonic(agg_samples))
+    )

@@ -22,19 +22,46 @@ from typing import Optional, Sequence, Tuple, Union
 from ..api import SchedulingEvent, as_queries, register_policy
 from ..cost_model import CostModelBase
 from ..minbatch import find_min_batch_size
-from ..types import Batch, Plan, PolicyDecision, Query, Schedule, Strategy
+from ..types import (
+    Batch,
+    BatchShard,
+    Plan,
+    PolicyDecision,
+    Query,
+    Schedule,
+    Strategy,
+)
 
 
 class DynamicPolicy:
-    """Base for Algorithm-2 policies; subclasses fix the strategy order."""
+    """Base for Algorithm-2 policies; subclasses fix the strategy order.
+
+    ``shard_across=k`` (pool runs only) splits each winner's MinBatch into
+    up to ``k`` per-worker shards (balanced via
+    ``repro.dist.sharding.batch_shard_extents``), trading the extra
+    per-batch overhead and final-aggregation partials for parallel wall
+    time.  Only workers actually FREE at the decision instant
+    (``state.free_workers(now)``) count toward the split — sharding onto a
+    busy worker would serialize behind its running batch and finish LATER
+    than not sharding.  With one (free) worker — or ``shard_across=1``, the
+    default — decisions are exactly Algorithm 2's.
+    """
 
     kind = "dynamic"
     name = "dynamic"
     strategy: Strategy
 
-    def __init__(self, delta_rsf: float = 0.5, c_max: float = 30.0):
+    def __init__(
+        self,
+        delta_rsf: float = 0.5,
+        c_max: float = 30.0,
+        shard_across: int = 1,
+    ):
+        if shard_across < 1:
+            raise ValueError(f"shard_across must be >= 1, got {shard_across}")
         self.delta_rsf = delta_rsf
         self.c_max = c_max
+        self.shard_across = shard_across
 
     # -- runtime hooks ---------------------------------------------------
     def on_admit(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
@@ -68,6 +95,17 @@ class DynamicPolicy:
         ready.sort(key=lambda r: self.priority(r, now))
         rt = ready[0]
         take = min(rt.avail(now), rt.min_batch)
+        ways = min(self.shard_across, state.free_workers(now), take)
+        if ways > 1:
+            from ...dist.sharding import batch_shard_extents
+
+            shards = tuple(
+                BatchShard(num_tuples=size)
+                for _, size in batch_shard_extents(take, ways)
+            )
+            return PolicyDecision(
+                query_id=rt.q.query_id, num_tuples=take, shards=shards
+            )
         return PolicyDecision(query_id=rt.q.query_id, num_tuples=take)
 
     # -- static projection ----------------------------------------------

@@ -22,6 +22,14 @@ ad-hoc copies in ``repro.serve.analytics``/``repro.serve.engine``.  Now:
   ``_finalize`` to do physical work; the MODELLED clock (cost units == time
   units, §7) stays identical across backends, which is what makes traces
   comparable across the simulator and real executors.
+* ``ExecutorPool`` — W parallel workers over ONE physical backend.  Each
+  worker keeps its own modelled clock (the instant it next frees); the
+  pool's ``clock()`` is the earliest-free instant, so decision instants
+  fire whenever ANY worker frees and the NINP invariant (one running batch,
+  never preempted) holds PER WORKER.  Physical work still flows through the
+  single backend, whose offset-keyed partials/results make shard dispatch
+  and straggler re-queue idempotent regardless of worker placement.  With
+  ``workers=1`` the pool is trace-identical to the bare executor.
 
 Time semantics match the paper's experiments exactly: the executor clock is
 the modelled time; real wall seconds are recorded per query on the executor
@@ -33,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .api import Executor, SchedulingEvent, SchedulingPolicy
 from .arrivals import ArrivalModel
@@ -181,11 +189,30 @@ class QueryRuntime:
 
 @dataclasses.dataclass
 class RuntimeState:
-    """What a dynamic policy sees at a decision instant."""
+    """What a dynamic policy sees at a decision instant.
+
+    ``num_workers``/``worker_names``/``worker_clocks`` describe the executor
+    pool (1 / ``()`` / ``()`` outside a pool), so policies can emit
+    worker-targeted or sharded decisions only when the capacity actually
+    exists.  ``worker_clocks`` aligns with ``worker_names`` and is refreshed
+    by the loop before every ``replan`` call: each entry is the instant that
+    worker next frees, so a policy can tell free workers (clock <= now) from
+    busy ones instead of assuming the whole pool is idle.
+    """
 
     runtimes: List[QueryRuntime]
     trace: ExecutionTrace
     rr_counter: int = 0
+    num_workers: int = 1
+    worker_names: Tuple[str, ...] = ()
+    worker_clocks: Tuple[float, ...] = ()
+
+    def free_workers(self, now: float) -> int:
+        """Workers free to start a batch at ``now`` (>= 1: the decision
+        instant IS some worker freeing; 1 outside a pool)."""
+        if not self.worker_clocks:
+            return 1
+        return max(1, sum(1 for c in self.worker_clocks if c <= now + _EPS))
 
     def by_id(self, query_id: str) -> QueryRuntime:
         for rt in self.runtimes:
@@ -280,6 +307,170 @@ class SimulatedExecutor(BaseExecutor):
     """Pure discrete-event backend: the paper's §7 experiment harness."""
 
 
+@dataclasses.dataclass(frozen=True)
+class Dispatch:
+    """Where/when the pool placed the last batch (read by the loop's trace
+    recording, which must use the WORKER timeline, not the pool minimum)."""
+
+    worker: str
+    start: float
+    end: float
+
+
+class ExecutorPool:
+    """W parallel workers with independent modelled clocks over one backend.
+
+    The pool implements the ``Executor`` protocol so the shared runtime loop
+    and trace helpers drive it unchanged:
+
+    * ``clock()``  — the earliest-free worker's clock: the next decision
+      instant (Algorithm 2's "executor is free" generalizes to "SOME worker
+      is free").
+    * ``advance``  — idle every worker forward (busy workers, whose clocks
+      are already past ``t``, are unaffected).
+    * ``submit_batch`` — dispatch to the named worker, or to the
+      earliest-free one; the batch occupies [worker clock, worker clock +
+      modelled cost) on that worker only.
+    * ``finalize`` — final aggregation runs on the worker that can start it
+      earliest WITHOUT preceding the query's last batch end (partials from
+      all workers must exist first, exactly like combining segagg partials).
+
+    Physical work (``_execute``/``_finalize``) runs on the single shared
+    ``backend``, so offset-keyed results combine across workers and
+    straggler re-queue stays idempotent.  ``workers=1`` is trace-identical
+    to running the bare backend.
+    """
+
+    is_pool = True
+
+    def __init__(
+        self,
+        backend: Optional[Executor] = None,
+        workers: int = 1,
+        names: Optional[Sequence[str]] = None,
+    ):
+        if getattr(backend, "is_pool", False):
+            raise TypeError("cannot nest ExecutorPools")
+        self.backend: Executor = SimulatedExecutor() if backend is None else backend
+        if names is not None:
+            names = tuple(names)
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate worker names: {names}")
+            if not names:
+                raise ValueError("names must be non-empty")
+            if workers not in (1, len(names)):
+                # workers=1 is the constructor default, i.e. "unspecified".
+                raise ValueError(
+                    f"workers={workers} conflicts with {len(names)} names"
+                )
+        else:
+            if workers < 1:
+                raise ValueError(f"need at least one worker, got {workers}")
+            names = tuple(f"w{i}" for i in range(workers))
+        self.worker_names: Tuple[str, ...] = names
+        self._clocks: Dict[str, float] = {n: 0.0 for n in names}
+        # query_id -> (end, worker) of the query's LAST-ENDING batch so far:
+        # its final aggregation cannot start before ``end``.
+        self._q_last: Dict[str, Tuple[float, str]] = {}
+        self.last_dispatch: Optional[Dispatch] = None
+
+    # -- pool introspection ----------------------------------------------
+    @property
+    def num_workers(self) -> int:
+        return len(self.worker_names)
+
+    def worker_clock(self, name: str) -> float:
+        return self._clocks[name]
+
+    def earliest_free(self, exclude: Sequence[str] = ()) -> str:
+        """Name of the earliest-free worker (ties: declaration order).
+        ``exclude`` skips workers already claimed by sibling shards — unless
+        that would leave none, in which case shards may share a worker."""
+        pool = [n for n in self.worker_names if n not in exclude]
+        if not pool:
+            pool = list(self.worker_names)
+        return min(pool, key=lambda n: (self._clocks[n], self.worker_names.index(n)))
+
+    # -- Executor protocol -----------------------------------------------
+    def clock(self) -> float:
+        return min(self._clocks.values())
+
+    def advance(self, t: float) -> None:
+        for n, c in self._clocks.items():
+            if t > c:
+                self._clocks[n] = t
+
+    def reset(self, t: float) -> None:
+        for n in self._clocks:
+            self._clocks[n] = t
+        self._q_last.clear()
+        self.last_dispatch = None
+        self.backend.reset(t)
+
+    def submit_batch(
+        self,
+        query: Query,
+        num_tuples: int,
+        offset: int,
+        worker: Optional[str] = None,
+    ) -> float:
+        name = self.earliest_free() if worker is None else worker
+        if name not in self._clocks:
+            raise KeyError(
+                f"unknown worker {name!r}; pool workers: {self.worker_names}"
+            )
+        start = self._clocks[name]
+        dur = self.backend.submit_batch(query, num_tuples, offset)
+        end = start + dur
+        self._clocks[name] = end
+        prev = self._q_last.get(query.query_id)
+        if prev is None or end >= prev[0]:
+            self._q_last[query.query_id] = (end, name)
+        self.last_dispatch = Dispatch(worker=name, start=start, end=end)
+        return dur
+
+    def finalize(self, query: Query, num_batches: int) -> float:
+        barrier = self._q_last.get(query.query_id, (self.clock(), None))[0]
+        # Earliest admissible start: max(worker free, last partial ready).
+        name = min(
+            self.worker_names,
+            key=lambda n: (
+                max(self._clocks[n], barrier),
+                self.worker_names.index(n),
+            ),
+        )
+        start = max(self._clocks[name], barrier)
+        agg = self.backend.finalize(query, num_batches)
+        if agg > 0:
+            self._clocks[name] = start + agg
+            self.last_dispatch = Dispatch(worker=name, start=start, end=start + agg)
+        else:
+            # No aggregation work: the result is ready the instant the last
+            # partial lands; no worker is occupied.
+            self.last_dispatch = Dispatch(worker=name, start=barrier, end=barrier)
+        return agg
+
+    # -- optional loop members, proxied to the backend -------------------
+    @property
+    def last_batch_wall(self) -> Optional[float]:
+        return getattr(self.backend, "last_batch_wall", None)
+
+    @property
+    def wall_seconds(self) -> Dict[str, float]:
+        return getattr(self.backend, "wall_seconds", {})
+
+    def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
+        requeue = getattr(self.backend, "requeue_batch", None)
+        if requeue is not None:
+            requeue(query, num_tuples, offset)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (
+            f"ExecutorPool(workers={self.num_workers}, "
+            f"backend={type(self.backend).__name__})"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Trace recording helpers (the loop owns these, not the executors)
 # ---------------------------------------------------------------------------
@@ -293,10 +484,22 @@ def _record_batch(
     offset: int,
     on_batch: Optional[Callable[[BatchExecution], None]],
     c_max: Optional[float],
+    worker: Optional[str] = None,
 ) -> BatchExecution:
     start = executor.clock()
-    dur = executor.submit_batch(query, num_tuples, offset)
-    ex = BatchExecution(query.query_id, start, start + dur, num_tuples)
+    if worker is None:
+        dur = executor.submit_batch(query, num_tuples, offset)
+    else:
+        dur = executor.submit_batch(query, num_tuples, offset, worker=worker)
+    disp = getattr(executor, "last_dispatch", None)
+    if disp is not None:
+        # Pool dispatch: record on the WORKER timeline (its start can be
+        # later than the pool minimum when a named worker was requested).
+        ex = BatchExecution(
+            query.query_id, disp.start, disp.end, num_tuples, worker=disp.worker
+        )
+    else:
+        ex = BatchExecution(query.query_id, start, start + dur, num_tuples)
     trace.executions.append(ex)
     if on_batch:
         on_batch(ex)
@@ -319,14 +522,23 @@ def _record_final_agg(
     num_batches: int,
     on_batch: Optional[Callable[[BatchExecution], None]],
 ) -> float:
+    """Run the final aggregation and return the query's COMPLETION instant
+    (end of the aggregation on whichever timeline ran it)."""
     start = executor.clock()
     agg = executor.finalize(query, num_batches)
+    disp = getattr(executor, "last_dispatch", None)
+    if disp is not None:
+        start, end, worker = disp.start, disp.end, disp.worker
+    else:
+        end, worker = start + agg, ""
     if agg > 0:
-        ex = BatchExecution(query.query_id, start, start + agg, 0, kind="final_agg")
+        ex = BatchExecution(
+            query.query_id, start, end, 0, kind="final_agg", worker=worker
+        )
         trace.executions.append(ex)
         if on_batch:
             on_batch(ex)
-    return agg
+    return end
 
 
 def _record_outcome(
@@ -373,6 +585,11 @@ def execute_plan(
     ``strict=True``: replay the planned batches verbatim (sizes and order) at
     ``max(clock, sched_time)`` — the mode real backends use to apply a vetted
     plan to fully materialized inputs.
+
+    With an ``ExecutorPool`` both modes dispatch each triggered batch to the
+    earliest-free worker (``pool.clock()`` IS the earliest-free instant), so
+    consecutive batches of one query overlap across workers; the final
+    aggregation waits for the last partial.
     """
     executor = SimulatedExecutor() if executor is None else executor
     trace = ExecutionTrace() if trace is None else trace
@@ -425,20 +642,25 @@ def execute_plan(
             else:
                 # Discrete-event jump: earliest instant at which the trigger
                 # can fire — the `required`-th outstanding tuple arriving, or
-                # the planned time point, whichever first.
+                # the planned time point, whichever first.  When the truth
+                # stream ends before the plan's next full batch, no further
+                # arrival helps, but Algorithm 1's "planned instant passed ->
+                # process the available tuples" path must still fire at the
+                # time point for the arrived tail.
                 want = processed + max(required, 1)
                 next_arrival = (
                     arr.input_time(want)
                     if want <= arr.num_tuples_total
-                    else arr.input_time(arr.num_tuples_total)
+                    else math.inf
                 )
-                nxt = min(next_arrival, max(point, arr.input_time(processed + 1)))
-                if nxt <= now + _EPS:  # stream exhausted: nothing will arrive
-                    break
+                wait_for = min(processed + 1, arr.num_tuples_total)
+                nxt = min(next_arrival, max(point, arr.input_time(wait_for)))
+                if not math.isfinite(nxt) or nxt <= now + _EPS:
+                    break  # nothing further will arrive or trigger
                 executor.advance(nxt)
 
-    _record_final_agg(trace, executor, query, n_batches, on_batch)
-    _record_outcome(trace, query, n_batches, executor.clock())
+    completion = _record_final_agg(trace, executor, query, n_batches, on_batch)
+    _record_outcome(trace, query, n_batches, completion)
     return trace
 
 
@@ -540,7 +762,13 @@ def _run_dynamic(
         min(r.q.submit_time for r in runts) if start_time is None else start_time
     )
     executor.reset(start)
-    state = RuntimeState(runtimes=runts, trace=trace)
+    is_pool = getattr(executor, "is_pool", False)
+    state = RuntimeState(
+        runtimes=runts,
+        trace=trace,
+        num_workers=getattr(executor, "num_workers", 1),
+        worker_names=tuple(getattr(executor, "worker_names", ())),
+    )
     event_kind = "start"
 
     for _ in range(max_steps):
@@ -567,6 +795,10 @@ def _run_dynamic(
         if not state.active() and all(r.admitted or r.deleted for r in runts):
             break
 
+        if is_pool:
+            state.worker_clocks = tuple(
+                executor.worker_clock(n) for n in state.worker_names
+            )
         decision = policy.replan(SchedulingEvent(event_kind, now), state)
         if decision.is_stop:
             break
@@ -579,17 +811,42 @@ def _run_dynamic(
         rt.rr_seq = state.rr_counter  # rotate to the back for RR fairness
         state.rr_counter += 1
 
-        _record_batch(
-            trace, executor, rt.q, decision.num_tuples, rt.processed,
-            on_batch=on_batch, c_max=c_max,
-        )
-        rt.processed += decision.num_tuples
-        rt.batches_done += 1
+        if (decision.worker is not None or decision.shards) and not is_pool:
+            raise ValueError(
+                f"policy {getattr(policy, 'name', policy)!r} emitted a "
+                "worker-targeted decision but the executor is not an "
+                "ExecutorPool"
+            )
+        if decision.shards:
+            # One logical batch split across workers: each shard becomes its
+            # own offset-keyed partial (combined in finalize), dispatched to
+            # its named worker or the next unclaimed earliest-free one.
+            claimed: List[str] = []
+            for shard in decision.shards:
+                name = shard.worker
+                if name is None:
+                    name = executor.earliest_free(exclude=claimed)
+                claimed.append(name)
+                _record_batch(
+                    trace, executor, rt.q, shard.num_tuples, rt.processed,
+                    on_batch=on_batch, c_max=c_max, worker=name,
+                )
+                rt.processed += shard.num_tuples
+                rt.batches_done += 1
+        else:
+            _record_batch(
+                trace, executor, rt.q, decision.num_tuples, rt.processed,
+                on_batch=on_batch, c_max=c_max, worker=decision.worker,
+            )
+            rt.processed += decision.num_tuples
+            rt.batches_done += 1
         event_kind = "batch_end"
 
         # -- completion: all that will ever arrive has been processed -----
         if rt.done(executor.clock()):
-            _record_final_agg(trace, executor, rt.q, rt.batches_done, on_batch)
+            completion = _record_final_agg(
+                trace, executor, rt.q, rt.batches_done, on_batch
+            )
             rt.completed = True
-            _record_outcome(trace, rt.q, rt.batches_done, executor.clock())
+            _record_outcome(trace, rt.q, rt.batches_done, completion)
     return trace

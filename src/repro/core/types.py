@@ -124,6 +124,22 @@ class Plan:
 
 
 @dataclasses.dataclass(frozen=True)
+class BatchShard:
+    """One shard of a logical batch, bound for one pool worker.
+
+    ``worker`` names the target worker; ``None`` means "next earliest-free
+    worker not yet claimed by an earlier shard of the same decision".
+    """
+
+    num_tuples: int
+    worker: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.num_tuples <= 0:
+            raise ValueError(f"shard size must be positive, got {self.num_tuples}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PolicyDecision:
     """One dispatch decision of a dynamic policy (Algorithm 2's winner).
 
@@ -132,11 +148,34 @@ class PolicyDecision:
     * run   — ``query_id`` set: run ``num_tuples`` of that query now;
     * wait  — ``wake_at`` set: nothing ready, idle until that instant;
     * stop  — neither set: no admissible work will ever become ready.
+
+    Pool extensions (ignored by single-executor runs):
+
+    * ``worker`` — dispatch the batch to this named ``ExecutorPool`` worker
+      instead of the earliest-free one;
+    * ``shards`` — split the logical batch into per-worker shards (sizes must
+      sum to ``num_tuples``); each shard lands on its own worker and becomes
+      its own offset-keyed partial, combined in ``finalize`` exactly like
+      segagg partials.  Use ``repro.dist.sharding.batch_shard_extents`` to
+      derive balanced shard sizes.
     """
 
     query_id: Optional[str] = None
     num_tuples: int = 0
     wake_at: Optional[float] = None
+    worker: Optional[str] = None
+    shards: Optional[Tuple[BatchShard, ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.shards is not None:
+            if self.worker is not None:
+                raise ValueError("worker= and shards= are mutually exclusive")
+            total = sum(s.num_tuples for s in self.shards)
+            if total != self.num_tuples:
+                raise ValueError(
+                    f"shards sum to {total}, decision num_tuples is "
+                    f"{self.num_tuples}"
+                )
 
     @property
     def is_run(self) -> bool:
@@ -153,13 +192,19 @@ class PolicyDecision:
 
 @dataclasses.dataclass(frozen=True)
 class BatchExecution:
-    """One executed batch in a trace (simulator / real executor)."""
+    """One executed batch in a trace (simulator / real executor).
+
+    ``worker`` is the pool worker that ran the batch ("" outside a pool).
+    It is excluded from equality: worker placement is an execution detail,
+    so single-executor traces and W=1 pool traces compare identical.
+    """
 
     query_id: str
     start: float
     end: float
     num_tuples: int
     kind: str = "batch"  # "batch" | "final_agg"
+    worker: str = dataclasses.field(default="", compare=False)
 
 
 @dataclasses.dataclass

@@ -21,6 +21,7 @@ from .context import (
 )
 from .roofline import CollectiveStats, Roofline, parse_collectives
 from .sharding import (
+    batch_shard_extents,
     batch_spec,
     cache_pspecs,
     input_pspecs,
@@ -34,6 +35,7 @@ __all__ = [
     "PARAM_AXIS_RULES",
     "Roofline",
     "active_mesh",
+    "batch_shard_extents",
     "batch_spec",
     "cache_pspecs",
     "constrain",

@@ -74,6 +74,34 @@ def input_pspecs(structs: Structs, mesh: Mesh) -> Dict[str, P]:
     }
 
 
+def batch_shard_extents(
+    num_tuples: int, num_shards: int
+) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous (offset, size) extents splitting one logical batch across
+    ``num_shards`` pool workers — the 1-D scheduling analogue of
+    ``batch_spec``'s batch-dim sharding: tuples spread as evenly as
+    possible, the remainder going to the earliest shards, empty shards
+    dropped (``num_tuples < num_shards`` yields fewer extents, never
+    zero-sized ones).  Offsets are relative to the logical batch start, so
+    callers add their own base offset; the resulting per-shard partials are
+    offset-keyed and combine in ``finalize`` like segagg partials.
+    """
+    if num_tuples < 0:
+        raise ValueError(f"negative num_tuples {num_tuples}")
+    if num_shards <= 0:
+        raise ValueError(f"need at least one shard, got {num_shards}")
+    base, rem = divmod(num_tuples, num_shards)
+    extents = []
+    offset = 0
+    for i in range(num_shards):
+        size = base + (1 if i < rem else 0)
+        if size == 0:
+            break
+        extents.append((offset, size))
+        offset += size
+    return tuple(extents)
+
+
 def cache_pspecs(cfg, structs: Structs, mesh: Mesh) -> Dict[str, P]:
     """Decode-cache shardings: caches are (layer_units, batch, ...) — shard
     the batch dim (dim 1) over the data-parallel axes."""

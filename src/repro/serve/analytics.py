@@ -23,6 +23,7 @@ time them, fit the piecewise-linear cost model the scheduler consumes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -48,6 +49,18 @@ class BatchResult:
     seconds: float
 
 
+@functools.partial(jax.jit, static_argnames="num_groups")
+def _segagg_ref_jit(keys, values, num_groups: int):
+    """Module-level jit so the compile cache is shared across ALL
+    ``AnalyticsExecutor`` instances: one compile per (num_groups, batch
+    shape), not one per executor.  (A per-instance ``jax.jit(lambda ...)``
+    defeats the cache — every fresh lambda is a new callable, and
+    ``measure_cost_model`` alone builds ~8 executors.)"""
+    from ..kernels.segagg.ref import segagg_ref
+
+    return segagg_ref(keys, values, num_groups)
+
+
 class AnalyticsExecutor:
     """Executes one AnalyticsQuery in intermittent batches."""
 
@@ -66,10 +79,7 @@ class AnalyticsExecutor:
 
             self._agg = lambda k, v: segagg(k, v, self.num_groups, True)
         else:
-            from ..kernels.segagg.ref import segagg_ref
-
-            self._agg = jax.jit(
-                lambda k, v: segagg_ref(k, v, self.num_groups))
+            self._agg = lambda k, v: _segagg_ref_jit(k, v, self.num_groups)
 
     def process_batch(self, records: Dict[str, np.ndarray],
                       slot: Optional[int] = None) -> BatchResult:

@@ -38,7 +38,7 @@ from ..core import (
     fit_piecewise_linear,
 )
 from ..core.policies.dynamic import policy_for_strategy
-from ..core.runtime import BaseExecutor, execute_plan, run
+from ..core.runtime import BaseExecutor, ExecutorPool, execute_plan, run
 from ..models import lm
 from ..models.config import ModelConfig
 
@@ -90,8 +90,23 @@ class PrefillExecutor:
         return self.buckets[-1]
 
     def run_batch(self, prompts: np.ndarray) -> Tuple[np.ndarray, float]:
-        """Returns (last-token logits (n, V), wall seconds)."""
+        """Returns (last-token logits (n, V), wall seconds).
+
+        Requests beyond the largest bucket are split into bucket-sized
+        sub-batches (wall times summed, logits concatenated in order) —
+        ``_bucket`` clamps to the largest bucket, so a single padded buffer
+        cannot hold them.
+        """
         n = prompts.shape[0]
+        cap = self.buckets[-1]
+        if n > cap:
+            outs: List[np.ndarray] = []
+            total = 0.0
+            for lo in range(0, n, cap):
+                out, dt = self.run_batch(prompts[lo:lo + cap])
+                outs.append(out)
+                total += dt
+            return np.concatenate(outs, axis=0), total
         b = self._bucket(n)
         padded = np.zeros((b, prompts.shape[1]), np.int32)
         padded[:n] = prompts
@@ -180,15 +195,21 @@ def serve_single_job(job: WindowJob, executor: PrefillExecutor,
 def serve_multi_jobs(jobs: Sequence[WindowJob], executor: PrefillExecutor,
                      cost_model: CostModelBase,
                      strategy: Strategy = Strategy.LLF,
-                     delta_rsf: float = 0.5, c_max: float = 30.0
-                     ) -> Dict[str, Dict]:
+                     delta_rsf: float = 0.5, c_max: float = 30.0,
+                     workers: int = 1) -> Dict[str, Dict]:
     """Algorithm 2 (LLF default) across concurrent jobs: the ``*-dynamic``
     policy decides, the shared runtime loop drives, ``ServingExecutor``
-    performs each scheduled MinBatch for real."""
+    performs each scheduled MinBatch for real.
+
+    ``workers=W`` time-shares the jobs across a W-way ``ExecutorPool``
+    (modelled clocks; prefill compute still runs through the one
+    ``PrefillExecutor``, whose buckets bound per-worker batch shapes)."""
     serving = ServingExecutor(executor, jobs)
     specs = [DynamicQuerySpec(query=j.as_query(cost_model)) for j in jobs]
     policy = policy_for_strategy(strategy, delta_rsf=delta_rsf, c_max=c_max)
-    trace = run(policy, specs, serving)
+    pool = ExecutorPool(backend=serving, workers=workers) if workers > 1 \
+        else serving
+    trace = run(policy, specs, pool)
     by_id = {j.job_id: j for j in jobs}
     return {
         o.query_id: {

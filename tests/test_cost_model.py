@@ -1,0 +1,115 @@
+"""Cost-model contract tests: knot validation (points AND agg_points feed
+the same bisect interpolation), isotonic cleanup in fit_piecewise_linear,
+and the shared zero-batch convention (cost(0) == per-batch overhead, so the
+``tuples_processable`` overhead guard trips for every model)."""
+import pytest
+
+from repro.core import (
+    LinearCostModel,
+    PiecewiseLinearCostModel,
+    SublinearCostModel,
+    fit_piecewise_linear,
+)
+
+ALL_MODELS = [
+    LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2),
+    PiecewiseLinearCostModel(points=((1.0, 0.7), (10.0, 4.3)),
+                             agg_points=((1.0, 0.0), (4.0, 0.8))),
+    SublinearCostModel(scale=0.5, exponent=0.85, overhead=0.3,
+                       agg_per_batch=0.1),
+    fit_piecewise_linear([(1, 0.7), (4, 1.9), (16, 6.7)],
+                         [(1, 0.0), (2, 0.2), (8, 1.0)]),
+]
+
+
+class TestKnotValidation:
+    def test_unsorted_points_rejected(self):
+        with pytest.raises(ValueError, match="points"):
+            PiecewiseLinearCostModel(points=((4.0, 2.0), (1.0, 1.0)))
+
+    def test_non_monotone_points_rejected(self):
+        with pytest.raises(ValueError, match="monotone"):
+            PiecewiseLinearCostModel(points=((1.0, 2.0), (4.0, 1.0)))
+
+    def test_unsorted_agg_points_rejected(self):
+        with pytest.raises(ValueError, match="agg_points"):
+            PiecewiseLinearCostModel(points=((1.0, 1.0), (4.0, 2.0)),
+                                     agg_points=((8.0, 1.0), (2.0, 0.5)))
+
+    def test_non_monotone_agg_points_rejected(self):
+        with pytest.raises(ValueError, match="agg_points"):
+            PiecewiseLinearCostModel(points=((1.0, 1.0), (4.0, 2.0)),
+                                     agg_points=((2.0, 1.0), (8.0, 0.1)))
+
+    def test_duplicate_knots_rejected(self):
+        with pytest.raises(ValueError, match="points"):
+            PiecewiseLinearCostModel(points=((1.0, 1.0), (1.0, 2.0),
+                                             (4.0, 3.0)))
+
+    def test_minimal_agg_points_accepted(self):
+        m = PiecewiseLinearCostModel(points=((1.0, 1.0), (4.0, 2.0)))
+        assert m.agg_cost(10) == 0.0
+
+
+class TestFitCleanup:
+    def test_noisy_cost_samples_made_monotone(self):
+        m = fit_piecewise_linear([(1, 1.0), (2, 0.8), (4, 1.5)])
+        assert m.cost(2) >= m.cost(1)
+
+    def test_noisy_agg_samples_made_monotone(self):
+        # Measurement noise: agg cost dips at 8 batches; the fitted model
+        # must still be monotone (bisect interpolation requires it).
+        m = fit_piecewise_linear([(1, 1.0), (4, 2.0)],
+                                 [(1, 0.0), (2, 0.5), (8, 0.3), (32, 0.9)])
+        assert m.agg_cost(8) >= m.agg_cost(2)
+        assert m.agg_cost(32) >= m.agg_cost(8)
+
+    def test_duplicate_sample_sizes_deduped(self):
+        # measure_cost_model clamps batch sizes to len(files), producing
+        # repeated sizes; the fit keeps the max measurement per size.
+        m = fit_piecewise_linear([(1, 0.5), (8, 2.0), (8, 2.4)])
+        assert m.cost(8) == pytest.approx(2.4)
+
+    def test_unsorted_agg_samples_sorted(self):
+        m = fit_piecewise_linear([(1, 1.0), (4, 2.0)],
+                                 [(8, 0.8), (1, 0.0), (2, 0.4)])
+        assert m.agg_cost(2) == pytest.approx(0.4)
+        assert m.agg_cost(8) == pytest.approx(0.8)
+
+
+class TestZeroBatchConvention:
+    """cost(0) is the per-batch overhead for EVERY model, so the
+    ``cost(0) > duration`` guard in tuples_processable is meaningful for
+    fitted models too (it used to return 0.0 for piecewise models, making
+    the guard dead code there)."""
+
+    @pytest.mark.parametrize("cm", ALL_MODELS, ids=lambda m: type(m).__name__)
+    def test_cost0_between_zero_and_cost1(self, cm):
+        assert 0.0 <= cm.cost(0) <= cm.cost(1)
+
+    @pytest.mark.parametrize("cm", ALL_MODELS, ids=lambda m: type(m).__name__)
+    def test_overhead_guard_trips(self, cm):
+        over = cm.cost(0)
+        assert over > 0.0, "fixture models all carry overhead"
+        assert cm.tuples_processable(over / 2) == 0
+
+    @pytest.mark.parametrize("cm", ALL_MODELS, ids=lambda m: type(m).__name__)
+    def test_monotone_and_processable_consistent(self, cm):
+        for n in range(0, 12):
+            assert cm.cost(n + 1) >= cm.cost(n) - 1e-12
+        for d in (0.0, 0.5, 1.0, 3.0, 10.0):
+            n = cm.tuples_processable(d)
+            assert cm.cost(n) <= d + 1e-9 or n == 0
+            assert cm.cost(n + 1) > d - 1e-9
+
+    @pytest.mark.parametrize("cm", ALL_MODELS, ids=lambda m: type(m).__name__)
+    def test_negative_n_is_not_a_batch(self, cm):
+        assert cm.cost(-3) == 0.0
+
+    def test_fitted_paper_models_have_positive_overhead(self):
+        from repro.data.tpch import PAPER_QUERY_IDS, paper_cost_model
+
+        for qid in PAPER_QUERY_IDS:
+            cm = paper_cost_model(qid)
+            assert cm.cost(0) > 0.0
+            assert cm.tuples_processable(cm.cost(0) / 2) == 0

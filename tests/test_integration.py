@@ -61,6 +61,58 @@ class TestAnalyticsExecutor:
         assert sum(b.num_records for b in log) == sum(
             len(f["ts"]) for f in files)
 
+    def test_jit_cache_shared_across_executors(self):
+        """Regression: a per-instance ``jax.jit(lambda ...)`` recompiled the
+        segagg kernel for EVERY AnalyticsExecutor; the module-level jitted
+        function must compile once per (num_groups, shape)."""
+        from repro.serve.analytics import _segagg_ref_jit
+
+        query = PAPER_QUERIES[1]  # CQ2: 5 groups
+        files, _ = _files(query.stream, 6)
+        batch = concat_files(files[:2])
+        before = _segagg_ref_jit._cache_size()
+        for _ in range(3):
+            ex = AnalyticsExecutor(query, SCALE)
+            ex.process_batch(batch)
+            ex.process_batch(batch)
+        after = _segagg_ref_jit._cache_size()
+        assert after - before <= 1  # ONE new entry at most, not one per executor
+
+    def test_straggler_requeue_real_backend(self):
+        """C_max straggler re-queue on a REAL backend: a slow ``_execute``
+        gets every batch flagged + re-dispatched, and the offset-keyed
+        partials make the retry overwrite instead of double-count."""
+        from repro.core import LinearCostModel, get_policy, run
+        from repro.serve.analytics import AnalyticsRuntimeExecutor
+
+        class SlowAnalytics(AnalyticsRuntimeExecutor):
+            def _execute(self, query, num_tuples, offset):
+                super()._execute(query, num_tuples, offset)
+                return 10.0  # every real batch blows C_max
+
+        query = PAPER_QUERIES[1]
+        n = 12
+        files, times = _files(query.stream, n)
+        cm = LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2)
+        arr = TraceArrival(timestamps=tuple(times))
+        q = Query("st", arr.wind_start, arr.wind_end,
+                  arr.wind_end + 5.0 * cm.cost(n), n, cm, arr)
+        slow = SlowAnalytics({q.query_id: (query, files)}, SCALE)
+        trace = run(get_policy("llf-dynamic", delta_rsf=0.5, c_max=2.0),
+                    [q], slow)
+        phys = slow.physical(q.query_id)
+        n_batches = sum(1 for e in trace.executions if e.kind == "batch")
+        assert n_batches > 0
+        assert trace.stragglers.count(q.query_id) == n_batches
+        # re-dispatch executed each batch twice...
+        assert len(phys.batch_log) == 2 * n_batches
+        # ...but the offset-keyed partials were overwritten, not appended
+        assert phys.num_batches == n_batches
+        # and the combined result is exactly the clean one-shot answer
+        oneshot, _, _ = run_batched(query, files, n, SCALE)
+        np.testing.assert_allclose(slow.results[q.query_id], oneshot,
+                                   rtol=1e-5)
+
 
 class TestCheckpoint:
     def test_save_restore_roundtrip(self, tmp_path):
@@ -130,6 +182,29 @@ class TestServingEngine:
             got = np.concatenate(j.results)
             assert got.shape == (j.num_requests, cfg.vocab_size)
             assert np.all(np.isfinite(got))
+
+    def test_oversized_batch_split_into_bucket_sized_subbatches(self):
+        """Regression: n above the largest bucket used to crash run_batch
+        with a broadcast ValueError (``padded[:n] = prompts`` with n > b);
+        it must split into bucket-sized sub-batches and sum the wall time."""
+        from repro.models.base import get_config
+        from repro.models.lm import build_specs
+        from repro.models.params import init_params
+        from repro.serve.engine import PrefillExecutor
+
+        cfg = dataclasses.replace(get_config("yi_6b").reduced(),
+                                  vocab_size=128)
+        params = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+        prefill = PrefillExecutor(cfg, params, buckets=(1, 2, 4, 8, 16, 32))
+        rng = np.random.default_rng(1)
+        prompts = rng.integers(0, cfg.vocab_size, (40, 8)).astype(np.int32)
+        out, dt = prefill.run_batch(prompts)  # n=40 > max bucket 32
+        assert out.shape == (40, cfg.vocab_size)
+        assert dt > 0.0
+        # identical logits to running the same rows in small batches
+        # (prefill rows are independent; padding must not leak)
+        ref, _ = prefill.run_batch(prompts[32:])
+        np.testing.assert_allclose(out[32:], ref, rtol=1e-5, atol=1e-5)
 
 
 def test_train_driver_loss_improves(tmp_path):

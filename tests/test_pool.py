@@ -1,0 +1,395 @@
+"""ExecutorPool: W parallel workers over one physical backend.
+
+Headline properties:
+
+* W=1 parity — ``run(policy, workload, ExecutorPool(workers=1))`` is
+  trace-identical to the bare single-executor loop for EVERY registered
+  policy (the pool is a strict generalization);
+* NINP per worker — batches assigned to one worker never overlap in
+  modelled time (the non-preemptive invariant moved from the executor to
+  each worker);
+* scale-out — more workers strictly reduce multi-query makespan when
+  there is parallel work to claim;
+* shards — one logical batch split across workers lands as offset-keyed
+  partials that combine in finalize.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import (
+    BatchShard,
+    DynamicQuerySpec,
+    ExecutorPool,
+    LinearCostModel,
+    Planner,
+    PolicyDecision,
+    Query,
+    SimulatedExecutor,
+    TraceArrival,
+    get_policy,
+    list_policies,
+    run,
+)
+from repro.dist.sharding import batch_shard_extents
+
+N_TUPLES = 8
+TIMESTAMPS = tuple(float(i) for i in range(N_TUPLES))
+
+
+def fixed_query(qid: str = "q0", slack: float = 3.0) -> Query:
+    arr = TraceArrival(timestamps=TIMESTAMPS)
+    cm = LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2)
+    return Query(
+        query_id=qid,
+        wind_start=arr.wind_start,
+        wind_end=arr.wind_end,
+        deadline=arr.wind_end + slack * cm.cost(N_TUPLES),
+        num_tuples_total=N_TUPLES,
+        cost_model=cm,
+        arrival=arr,
+    )
+
+
+def multi_specs(n: int = 6, slack: float = 5.0):
+    return [DynamicQuerySpec(query=fixed_query(f"q{i}", slack))
+            for i in range(n)]
+
+
+class TestW1Parity:
+    """Acceptance criterion: ExecutorPool(workers=1) == bare executor."""
+
+    @pytest.mark.parametrize("policy_name", sorted(list_policies()))
+    def test_single_query_trace_identical(self, policy_name):
+        bare = run(get_policy(policy_name), [fixed_query()],
+                   SimulatedExecutor())
+        pooled = run(get_policy(policy_name), [fixed_query()],
+                     ExecutorPool(workers=1))
+        assert bare.executions == pooled.executions
+        assert bare.outcomes == pooled.outcomes
+
+    @pytest.mark.parametrize("policy_name",
+                             ["llf-dynamic", "edf-dynamic", "sjf-dynamic",
+                              "rr-dynamic"])
+    def test_multi_query_trace_identical(self, policy_name):
+        bare = run(get_policy(policy_name), multi_specs(),
+                   SimulatedExecutor())
+        pooled = run(get_policy(policy_name), multi_specs(),
+                     ExecutorPool(workers=1))
+        assert bare.executions == pooled.executions
+        assert bare.outcomes == pooled.outcomes
+
+    def test_w1_worker_tag_recorded_but_ignored_by_equality(self):
+        pooled = run(get_policy("llf-dynamic"), multi_specs(),
+                     ExecutorPool(workers=1))
+        assert {e.worker for e in pooled.executions} == {"w0"}
+
+
+class TestPoolSemantics:
+    def test_ninp_invariant_per_worker(self):
+        trace = run(get_policy("llf-dynamic"), multi_specs(),
+                    ExecutorPool(workers=3))
+        by_worker = {}
+        for e in trace.executions:
+            by_worker.setdefault(e.worker, []).append(e)
+        assert set(by_worker) == {"w0", "w1", "w2"}
+        for execs in by_worker.values():
+            execs.sort(key=lambda e: e.start)
+            for a, b in zip(execs, execs[1:]):
+                assert a.end <= b.start + 1e-9, (a, b)
+
+    def test_makespan_shrinks_with_workers(self):
+        def makespan(workers):
+            trace = Planner(policy="llf-dynamic").run(multi_specs(),
+                                                      workers=workers)
+            assert all(o.query_id for o in trace.outcomes)
+            return max(o.completion_time for o in trace.outcomes)
+
+        m1, m2, m4 = makespan(1), makespan(2), makespan(4)
+        assert m2 < m1
+        assert m4 < m2
+
+    def test_all_tuples_processed_any_width(self):
+        for workers in (1, 2, 3, 5):
+            trace = run(get_policy("llf-dynamic"), multi_specs(),
+                        ExecutorPool(workers=workers))
+            done = sum(e.num_tuples for e in trace.executions
+                       if e.kind == "batch")
+            assert done == 6 * N_TUPLES
+            assert len(trace.outcomes) == 6
+
+    def test_final_agg_waits_for_last_partial(self):
+        trace = run(get_policy("llf-dynamic"), multi_specs(),
+                    ExecutorPool(workers=4))
+        for out in trace.outcomes:
+            batch_ends = [e.end for e in trace.executions
+                          if e.query_id == out.query_id and e.kind == "batch"]
+            aggs = [e for e in trace.executions
+                    if e.query_id == out.query_id and e.kind == "final_agg"]
+            for agg in aggs:
+                assert agg.start >= max(batch_ends) - 1e-9
+            assert out.completion_time >= max(batch_ends) - 1e-9
+
+    def test_strict_replay_on_pool_dispatches_to_earliest_free(self):
+        # Four batches all scheduled at t=8: a serial executor must queue
+        # them; a 4-way pool runs them concurrently, one per worker.
+        from repro.core import Batch, Schedule
+        from repro.core.runtime import execute_plan
+
+        q = fixed_query()
+        plan = Schedule(batches=tuple(
+            Batch(sched_time=8.0, num_tuples=2) for _ in range(4)))
+        serial = execute_plan(q, plan, SimulatedExecutor(), strict=True)
+        pooled = execute_plan(q, plan, ExecutorPool(workers=4), strict=True)
+        assert pooled.outcome(q.query_id).completion_time < \
+            serial.outcome(q.query_id).completion_time
+        batch_rows = [e for e in pooled.executions if e.kind == "batch"]
+        assert {e.worker for e in batch_rows} == {"w0", "w1", "w2", "w3"}
+        assert {e.start for e in batch_rows} == {8.0}
+
+
+class TestShardedDispatch:
+    def test_shard_across_splits_minbatch(self):
+        trace = Planner(policy="llf-dynamic", shard_across=2).run(
+            multi_specs(), workers=4)
+        done = sum(e.num_tuples for e in trace.executions
+                   if e.kind == "batch")
+        assert done == 6 * N_TUPLES
+
+    def test_shards_of_one_decision_land_on_distinct_workers(self):
+        calls = []
+
+        class TwoWayPolicy:
+            name = "two-way"
+            kind = "dynamic"
+            c_max = None
+
+            def plan(self, queries, cost_model=None, now=0.0):
+                raise NotImplementedError
+
+            def replan(self, event, state):
+                ready = [r for r in state.active() if r.ready(event.now)]
+                if not ready:
+                    nxt = min((r.next_ready_time(event.now)
+                               for r in state.unfinished()),
+                              default=math.inf)
+                    if not math.isfinite(nxt):
+                        return PolicyDecision()
+                    return PolicyDecision(wake_at=nxt)
+                rt = ready[0]
+                take = rt.avail(event.now)
+                sizes = [s for _, s in batch_shard_extents(take, 2)]
+                calls.append(take)
+                return PolicyDecision(
+                    query_id=rt.q.query_id, num_tuples=take,
+                    shards=tuple(BatchShard(num_tuples=s) for s in sizes),
+                )
+
+        # all tuples present at t=0, so one decision sees the full batch
+        arr = TraceArrival(timestamps=(0.0,) * N_TUPLES)
+        q = dataclasses.replace(fixed_query(), arrival=arr)
+        trace = run(TwoWayPolicy(), [DynamicQuerySpec(query=q, truth=arr)],
+                    ExecutorPool(workers=2))
+        assert calls == [N_TUPLES]
+        done = sum(e.num_tuples for e in trace.executions
+                   if e.kind == "batch")
+        assert done == N_TUPLES
+        # the two shards of the one decision start together, one per worker
+        starts = {}
+        for e in trace.executions:
+            if e.kind == "batch":
+                starts.setdefault(e.start, set()).add(e.worker)
+        assert any(len(ws) == 2 for ws in starts.values())
+
+    def test_shard_across_counts_only_free_workers(self):
+        # 4-way pool but three workers busy until t=5: splitting the batch
+        # onto busy workers would finish LATER than not splitting, so the
+        # decision must not shard.
+        from repro.core import ExecutionTrace
+        from repro.core.runtime import DynamicQuerySpec, QueryRuntime, RuntimeState
+
+        arr = TraceArrival(timestamps=(0.0,) * N_TUPLES)
+        q = dataclasses.replace(fixed_query(), arrival=arr)
+        rt = QueryRuntime(spec=DynamicQuerySpec(query=q, truth=arr),
+                          min_batch=N_TUPLES, admitted=True)
+        policy = get_policy("llf-dynamic", shard_across=4)
+        names = ("w0", "w1", "w2", "w3")
+
+        def decide(clocks):
+            state = RuntimeState(
+                runtimes=[rt], trace=ExecutionTrace(), num_workers=4,
+                worker_names=names, worker_clocks=clocks)
+            from repro.core import SchedulingEvent
+
+            return policy.replan(SchedulingEvent("batch_end", 0.0), state)
+
+        busy = decide((0.0, 5.0, 5.0, 5.0))
+        assert busy.shards is None  # one free worker: no split
+        idle = decide((0.0, 0.0, 0.0, 0.0))
+        assert idle.shards is not None and len(idle.shards) == 4
+        half = decide((0.0, 0.0, 5.0, 5.0))
+        assert half.shards is not None and len(half.shards) == 2
+
+    def test_worker_targeted_decision_without_pool_raises(self):
+        class NamedWorkerPolicy:
+            name = "named"
+            kind = "dynamic"
+            c_max = None
+
+            def plan(self, queries, cost_model=None, now=0.0):
+                raise NotImplementedError
+
+            def replan(self, event, state):
+                rts = state.active()
+                return PolicyDecision(query_id=rts[0].q.query_id,
+                                      num_tuples=1, worker="w7")
+
+        with pytest.raises(ValueError, match="not an ExecutorPool"):
+            run(NamedWorkerPolicy(), [fixed_query()], SimulatedExecutor())
+
+    def test_shard_validation(self):
+        with pytest.raises(ValueError, match="sum to"):
+            PolicyDecision(query_id="q", num_tuples=5,
+                           shards=(BatchShard(2), BatchShard(2)))
+        with pytest.raises(ValueError, match="positive"):
+            BatchShard(0)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            PolicyDecision(query_id="q", num_tuples=2, worker="w0",
+                           shards=(BatchShard(2),))
+
+
+class TestBatchShardExtents:
+    def test_even_split(self):
+        assert batch_shard_extents(8, 2) == ((0, 4), (4, 4))
+
+    def test_remainder_to_earliest(self):
+        assert batch_shard_extents(7, 3) == ((0, 3), (3, 2), (5, 2))
+
+    def test_fewer_tuples_than_shards(self):
+        assert batch_shard_extents(2, 4) == ((0, 1), (1, 1))
+
+    def test_extents_tile_the_batch(self):
+        for n in (1, 5, 16, 33):
+            for w in (1, 2, 3, 8):
+                ext = batch_shard_extents(n, w)
+                assert sum(s for _, s in ext) == n
+                off = 0
+                for o, s in ext:
+                    assert o == off and s > 0
+                    off += s
+
+    def test_invalid_args(self):
+        with pytest.raises(ValueError):
+            batch_shard_extents(-1, 2)
+        with pytest.raises(ValueError):
+            batch_shard_extents(4, 0)
+
+
+class TestPoolValidation:
+    def test_nested_pool_rejected(self):
+        with pytest.raises(TypeError, match="nest"):
+            ExecutorPool(backend=ExecutorPool(workers=2), workers=2)
+
+    def test_zero_workers_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            ExecutorPool(workers=0)
+
+    def test_duplicate_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            ExecutorPool(names=("a", "a"))
+
+    def test_conflicting_workers_and_names_rejected(self):
+        with pytest.raises(ValueError, match="conflicts"):
+            ExecutorPool(workers=4, names=("a", "b"))
+        assert ExecutorPool(workers=2, names=("a", "b")).num_workers == 2
+        assert ExecutorPool(names=("a", "b", "c")).num_workers == 3
+
+    def test_unknown_worker_rejected(self):
+        pool = ExecutorPool(workers=2)
+        with pytest.raises(KeyError, match="w9"):
+            pool.submit_batch(fixed_query(), 1, 0, worker="w9")
+
+    def test_named_workers(self):
+        pool = ExecutorPool(names=("alpha", "beta"))
+        assert pool.num_workers == 2
+        trace = run(get_policy("llf-dynamic"), multi_specs(2), pool)
+        assert {e.worker for e in trace.executions} == {"alpha", "beta"}
+
+    def test_planner_run_workers_kw_wraps_pool(self):
+        trace = Planner(policy="llf-dynamic").run(multi_specs(2), workers=2)
+        assert {e.worker for e in trace.executions} == {"w0", "w1"}
+
+
+class TestPoolRealBackends:
+    """The pool drives the real executors through the same loop; offset-keyed
+    results combine across workers."""
+
+    def _analytics(self, qid: str, workers: int):
+        from repro.data.tpch import PAPER_QUERIES, StreamScale, stream_files
+        from repro.serve.analytics import AnalyticsRuntimeExecutor
+
+        scale = StreamScale(scale=0.005)
+        aq = PAPER_QUERIES[1]  # CQ2: 5 groups
+        files = [l if aq.stream == "lineitem" else o
+                 for _, o, l in stream_files(seed=5, num_files=N_TUPLES,
+                                             sc=scale)]
+        backend = AnalyticsRuntimeExecutor({qid: (aq, files)}, scale)
+        return ExecutorPool(backend=backend, workers=workers), backend
+
+    def test_analytics_pool_w1_matches_simulated(self):
+        q = fixed_query()
+        sim = run(get_policy("llf-dynamic"), [q], SimulatedExecutor())
+        pool, _ = self._analytics(q.query_id, 1)
+        real = run(get_policy("llf-dynamic"), [fixed_query()], pool)
+        assert sim.executions == real.executions
+        assert sim.outcomes == real.outcomes
+
+    def test_analytics_pool_w2_same_result_earlier_finish(self):
+        import numpy as np
+
+        results = {}
+        finishes = {}
+        for workers in (1, 2):
+            q = fixed_query(slack=5.0)
+            pool, backend = self._analytics(q.query_id, workers)
+            trace = run(get_policy("llf-dynamic"), [q], pool)
+            results[workers] = backend.results[q.query_id]
+            finishes[workers] = trace.outcome(q.query_id).completion_time
+        np.testing.assert_allclose(results[1], results[2], rtol=1e-5)
+        assert finishes[2] <= finishes[1]
+
+    def test_serving_pool_processes_every_request(self):
+        import jax
+        import numpy as np
+
+        from repro.core import LinearCostModel, Strategy, UniformWindowArrival
+        from repro.models.base import get_config
+        from repro.models.lm import build_specs
+        from repro.models.params import init_params
+        from repro.serve.engine import (
+            PrefillExecutor, WindowJob, serve_multi_jobs)
+
+        cfg = dataclasses.replace(get_config("yi_6b").reduced(),
+                                  vocab_size=128)
+        params = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+        ex = PrefillExecutor(cfg, params, buckets=(1, 2, 4, 8))
+        cm = LinearCostModel(tuple_cost=0.02, overhead=0.05)
+        rng = np.random.default_rng(0)
+        jobs = [
+            WindowJob(
+                job_id=f"j{i}",
+                prompts=rng.integers(0, cfg.vocab_size, (n, 8)).astype(
+                    np.int32),
+                arrival=UniformWindowArrival(0.0, 10.0, n),
+                deadline=10.0 + 3.0 * cm.cost(n),
+            )
+            for i, n in enumerate((5, 7))
+        ]
+        report = serve_multi_jobs(jobs, ex, cm, Strategy.LLF,
+                                  delta_rsf=0.5, c_max=2.0, workers=2)
+        for j in jobs:
+            assert report[j.job_id]["processed"] == j.num_requests
+            got = np.concatenate(j.results)
+            assert got.shape == (j.num_requests, cfg.vocab_size)
+            assert np.all(np.isfinite(got))

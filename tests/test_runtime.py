@@ -159,6 +159,18 @@ class TestExecutePlan:
                if e.kind == "batch"]
         assert got == [(b.sched_time, b.num_tuples) for b in plan.batches]
 
+    def test_adaptive_processes_tail_when_truth_underdelivers(self):
+        # Truth delivers only 6 of the planned 8 tuples: the arrived tail
+        # (fewer than the plan's next batch size) must still be processed
+        # at the planned instant, not silently dropped at stream end.
+        q = fixed_query(deadline_slack=0.6)
+        plan = Planner(policy="single").schedule(q)
+        truth = TraceArrival(timestamps=TIMESTAMPS[:6])
+        trace = execute_plan(q, plan, truth=truth)
+        done = sum(e.num_tuples for e in trace.executions
+                   if e.kind == "batch")
+        assert done == 6
+
     def test_adaptive_absorbs_faster_arrivals(self):
         # Truth arrives 2x faster than predicted: the adaptive loop finishes
         # earlier than the plan's last point, never later.
