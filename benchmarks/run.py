@@ -142,6 +142,7 @@ def main() -> None:
         bench_batch_vs_streaming,# Fig 5
         bench_multi_query,       # Fig 7 (both calibration regimes)
         bench_pool_scaling,      # makespan vs W (ExecutorPool scale-out)
+        bench_session,           # continuous sessions: recurrence + drift
         bench_input_modes,       # Table 2 analogue (real executor)
         bench_memory,            # §7.2 OOM analysis
         bench_kernels,           # kernel micro-benches
@@ -151,8 +152,8 @@ def main() -> None:
     failures = 0
     for mod in (bench_single_query, bench_cost_vs_batches,
                 bench_batch_vs_streaming, bench_multi_query,
-                bench_pool_scaling, bench_input_modes, bench_memory,
-                bench_kernels, bench_roofline):
+                bench_pool_scaling, bench_session, bench_input_modes,
+                bench_memory, bench_kernels, bench_roofline):
         try:
             mod.main()
         except Exception:

@@ -1,0 +1,92 @@
+"""Continuous-session walkthrough: submit -> drift -> recalibrate -> withdraw.
+
+A long-running Session serves a recurring query whose TRUE batch costs are
+1.5x what the offline §6.2 fit predicted (OracleCostExecutor injects the
+drift).  Watch the lifecycle:
+
+  1. submit  — the recurring spec passes the schedulability pre-flight;
+  2. drift   — window 0's plan, made with the stale model, finishes LATE;
+  3. recalibrate — observed batch durations push the drift metric over the
+     threshold; the session refits and plans later windows correctly;
+  4. online admission — a second query joins mid-run (and a hopeless one is
+     rejected by the pre-flight);
+  5. withdraw — the recurring query leaves; the session drains.
+
+    PYTHONPATH=src python examples/session_demo.py
+"""
+from repro.core import (
+    ConstantRateArrival,
+    LinearCostModel,
+    Query,
+    RecurringQuerySpec,
+    Session,
+)
+
+N, RATE = 40, 2.0
+FITTED = LinearCostModel(tuple_cost=0.1, overhead=0.2, agg_per_batch=0.1)
+TRUE = LinearCostModel(tuple_cost=0.15, overhead=0.3, agg_per_batch=0.15)
+PERIOD = 60.0
+
+
+def recurring() -> RecurringQuerySpec:
+    arr = ConstantRateArrival(wind_start=0.0, rate=RATE, num_tuples_total=N)
+    base = Query(
+        query_id="sensor-agg",
+        wind_start=0.0,
+        wind_end=arr.wind_end,
+        # tight: forces a multi-batch plan, so stale costs -> a late finish
+        deadline=arr.wind_end + 0.5 * FITTED.cost(N),
+        num_tuples_total=N,
+        cost_model=FITTED,
+        arrival=arr,
+    )
+    return RecurringQuerySpec(base=base, period=PERIOD, num_windows=None,
+                              true_cost_model=TRUE)
+
+
+def main() -> None:
+    session = Session(policy="single", calibrate=True, drift_threshold=0.2,
+                      min_samples=2, refit_every=1_000_000)
+
+    # 1. submit (gated by the admission pre-flight)
+    res = session.submit(recurring())
+    print(f"submitted sensor-agg: admitted={res.admitted}")
+
+    # 2./3. run three windows: window 0 misses (stale model), the observed
+    # 1.5x durations trigger a recalibration, windows 1-2 meet.
+    session.run_until(3 * PERIOD - 1.0)
+    for o in session.trace.outcome_series("sensor-agg"):
+        print(f"  {o.query_id}: finish={o.completion_time:7.2f} "
+              f"deadline={o.deadline:7.2f} met={o.met_deadline}")
+    for e in session.trace.events_for("recalibrate"):
+        print(f"  recalibrated at t={e.time:.1f} ({e.detail})")
+    cal = session.calibrator("sensor-agg")
+    print(f"  calibrator: refits={cal.refits} drift={cal.drift():.4f} "
+          f"cost(40): fitted={FITTED.cost(40):.2f} "
+          f"calibrated={cal.cost(40):.2f} true={TRUE.cost(40):.2f}")
+
+    # 4. online admission at the live clock: one feasible, one hopeless
+    now = session.now
+    arr = ConstantRateArrival(wind_start=now, rate=RATE, num_tuples_total=20)
+    ok = session.submit(Query("adhoc", now, arr.wind_end,
+                              arr.wind_end + 3.0 * FITTED.cost(20),
+                              20, FITTED, arr))
+    bad_cm = LinearCostModel(tuple_cost=3.0, overhead=10.0)
+    bad = session.submit(Query("hopeless", now, arr.wind_end,
+                               arr.wind_end + 0.5, 20, bad_cm, arr))
+    print(f"mid-run admissions at t={now:.1f}: adhoc={ok.admitted} "
+          f"hopeless={bad.admitted}")
+    if bad.report.reasons:
+        print(f"  rejection reason: {bad.report.reasons[0]}")
+
+    # 5. withdraw the open-ended query and drain the rest
+    session.withdraw("sensor-agg")
+    trace = session.run()
+    print(f"withdrawn; session drained at t={session.now:.1f}")
+    met = sum(o.met_deadline for o in trace.outcomes)
+    print(f"outcomes: {met}/{len(trace.outcomes)} deadlines met; "
+          f"events: {[e.kind for e in trace.events]}")
+
+
+if __name__ == "__main__":
+    main()

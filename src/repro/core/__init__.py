@@ -19,6 +19,13 @@ around three first-class pieces:
   re-queue and trace recording.  Any backend scales out via
   ``ExecutorPool`` — W workers with independent modelled clocks over one
   physical backend; ``workers=1`` is trace-identical to the bare executor.
+* **Session** — the CONTINUOUS counterpart of ``Planner.run``: recurring
+  windows (``RecurringQuerySpec``) roll over on one carried-over executor
+  timeline, queries are admitted online (schedulability pre-flight) or
+  withdrawn mid-run, and ``calibrate=True`` refits cost models from
+  execution feedback (``CalibratingCostModel``), replanning future windows
+  when drift crosses the threshold (docs/API.md "Sessions & recurring
+  queries").
 
 Pure-Python/numpy and executor-agnostic; the legacy ``schedule_*`` free
 functions remain as deprecation shims (see docs/API.md for the migration
@@ -29,6 +36,7 @@ from .api import (
     Planner,
     SchedulingEvent,
     SchedulingPolicy,
+    Session,
     get_policy,
     list_policies,
     register_policy,
@@ -36,17 +44,20 @@ from .api import (
 from .arrivals import (
     ArrivalModel,
     ConstantRateArrival,
+    ShiftedArrival,
     TraceArrival,
     UniformWindowArrival,
     jittered_trace,
 )
 from .cost_model import (
+    CalibratingCostModel,
     CostModelBase,
     LinearCostModel,
     PiecewiseLinearCostModel,
     SublinearCostModel,
     fit_piecewise_linear,
 )
+from .session import AdmissionResult, SessionRuntime
 from .constraints import (
     brute_force_optimal,
     feasible_assignment,
@@ -60,7 +71,9 @@ from .multi_query import (
 )
 from .runtime import (
     BaseExecutor,
+    DynamicLoopCore,
     ExecutorPool,
+    OracleCostExecutor,
     QueryRuntime,
     RuntimeState,
     SimulatedExecutor,
@@ -69,6 +82,7 @@ from .runtime import (
 )
 from .schedulability import (
     FeasibilityReport,
+    admission_check,
     check as check_schedulability,
     min_post_window_work,
     post_window_condition,
@@ -89,6 +103,7 @@ from .single_query import (
     validate_schedule,
 )
 from .types import (
+    EPS,
     Batch,
     BatchExecution,
     BatchShard,
@@ -98,19 +113,28 @@ from .types import (
     PolicyDecision,
     Query,
     QueryOutcome,
+    RecurringQuerySpec,
     Schedule,
+    SessionEvent,
+    SessionTrace,
     Strategy,
+    split_window_id,
+    window_query_id,
 )
 
 __all__ = [
+    "AdmissionResult",
     "ArrivalModel",
     "BaseExecutor",
     "Batch",
     "BatchExecution",
     "BatchShard",
+    "CalibratingCostModel",
     "ConstantRateArrival",
     "CostModelBase",
+    "DynamicLoopCore",
     "DynamicQuerySpec",
+    "EPS",
     "ExecutionTrace",
     "Executor",
     "ExecutorPool",
@@ -119,6 +143,7 @@ __all__ = [
     "LARGE_NUMBER",
     "LinearCostModel",
     "MemoryModel",
+    "OracleCostExecutor",
     "PiecewiseLinearCostModel",
     "Plan",
     "Planner",
@@ -126,15 +151,22 @@ __all__ = [
     "Query",
     "QueryOutcome",
     "QueryRuntime",
+    "RecurringQuerySpec",
     "RuntimeState",
     "Schedule",
     "SchedulingEvent",
     "SchedulingPolicy",
+    "Session",
+    "SessionEvent",
+    "SessionRuntime",
+    "SessionTrace",
     "SimulatedExecutor",
     "Strategy",
     "SublinearCostModel",
     "TraceArrival",
     "UniformWindowArrival",
+    "ShiftedArrival",
+    "admission_check",
     "batched_cost_curve",
     "brute_force_optimal",
     "check_schedulability",
@@ -158,6 +190,8 @@ __all__ = [
     "schedule_via_constraints",
     "schedule_with_agg_cost",
     "schedule_without_agg_cost",
+    "split_window_id",
     "staggered_deadlines",
     "validate_schedule",
+    "window_query_id",
 ]

@@ -271,3 +271,80 @@ def as_queries(queries: Union[Query, Sequence[Query]]) -> List[Query]:
     if isinstance(queries, Query):
         return [queries]
     return list(queries)
+
+
+# ---------------------------------------------------------------------------
+# Session facade (continuous operation)
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """Facade over ``repro.core.session.SessionRuntime``: the long-running
+    counterpart of ``Planner`` for CONTINUOUS operation.
+
+    Where ``Planner.run`` drains a fixed workload and returns, a Session
+    stays live: recurring queries roll over window after window on one
+    carried-over executor timeline, new queries are admitted (gated by a
+    schedulability pre-flight) or withdrawn mid-run, and — with
+    ``calibrate=True`` — cost models refit themselves from execution
+    feedback, triggering replans of future windows when drift crosses the
+    threshold::
+
+        s = Session(policy="llf-dynamic", calibrate=True)
+        s.submit(RecurringQuerySpec(base=q, period=60.0, num_windows=None))
+        s.run_until(600.0)            # ten windows roll over
+        s.submit(urgent_query)        # online admission at t=600
+        s.run_until(1200.0)
+        s.withdraw(q.query_id)
+        series = s.trace.outcome_series(q.query_id)
+
+    Accepts everything ``Planner.run`` accepts (policy name or instance,
+    ``executor=``, ``workers=`` pool shorthand) plus the session knobs
+    (``calibrate``, ``drift_threshold``, ``min_samples``, ``refit_every``,
+    ``c_max``, ``admission_control``, ``start_time``).
+    """
+
+    def __init__(self, policy: Union[str, SchedulingPolicy] = "llf-dynamic",
+                 executor: Optional[Executor] = None, **session_kw):
+        from .session import SessionRuntime
+
+        self._runtime = SessionRuntime(policy, executor, **session_kw)
+
+    # -- delegation (the facade IS the runtime, minus its internals) -----
+    @property
+    def policy(self) -> SchedulingPolicy:
+        return self._runtime.policy
+
+    @property
+    def executor(self) -> Executor:
+        return self._runtime.executor
+
+    @property
+    def now(self) -> float:
+        return self._runtime.now
+
+    @property
+    def trace(self):
+        return self._runtime.trace
+
+    @property
+    def live_ids(self) -> List[str]:
+        return self._runtime.live_ids
+
+    def calibrator(self, base_id: str):
+        return self._runtime.calibrator(base_id)
+
+    def submit(self, spec, *, force: bool = False):
+        return self._runtime.submit(spec, force=force)
+
+    def withdraw(self, base_id: str) -> None:
+        self._runtime.withdraw(base_id)
+
+    def run_until(self, horizon: float, max_steps: int = 1_000_000):
+        return self._runtime.run_until(horizon, max_steps=max_steps)
+
+    def run(self, max_steps: int = 1_000_000):
+        return self._runtime.run(max_steps=max_steps)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return repr(self._runtime).replace("SessionRuntime", "Session", 1)

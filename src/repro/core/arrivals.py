@@ -18,6 +18,13 @@ import bisect
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+# All arrival-boundary comparisons share the module-level tolerance from
+# repro.core.types: a tuple arriving exactly at instant t counts as available
+# AT t for every model (see the EPS docstring there).  Historically each model
+# carried its own magic epsilon (1e-9 count-scale here, 1e-12 time-scale in
+# TraceArrival, another 1e-9 in runtime.py).
+from .types import EPS
+
 
 class ArrivalModel:
     wind_start: float
@@ -62,7 +69,7 @@ class ConstantRateArrival(ArrivalModel):
     def tuples_available(self, t: float) -> int:
         if t < self.wind_start:
             return 0
-        k = int((t - self.wind_start) * self.rate + 1e-9) + 1
+        k = int((t - self.wind_start) * self.rate + EPS) + 1
         return min(k, self.num_tuples_total)
 
 
@@ -95,7 +102,7 @@ class UniformWindowArrival(ArrivalModel):
         if n <= 1:
             return n
         frac = (t - self.wind_start) / (self.wind_end - self.wind_start)
-        return min(n, int(frac * (n - 1) + 1e-9) + 1)
+        return min(n, int(frac * (n - 1) + EPS) + 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,7 +140,38 @@ class TraceArrival(ArrivalModel):
         return self.timestamps[min(num_tuples, len(self.timestamps)) - 1]
 
     def tuples_available(self, t: float) -> int:
-        return bisect.bisect_right(self.timestamps, t + 1e-12)
+        return bisect.bisect_right(self.timestamps, t + EPS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedArrival(ArrivalModel):
+    """``base`` translated ``shift`` time units later: window ``w`` of a
+    ``RecurringQuerySpec`` is the base window shifted by ``w * period``.
+
+    Pure time translation — exactly preserves the base model's inverse
+    relationship between ``input_time`` and ``tuples_available``.
+    """
+
+    base: ArrivalModel
+    shift: float
+
+    @property
+    def wind_start(self) -> float:  # type: ignore[override]
+        return self.base.wind_start + self.shift
+
+    @property
+    def wind_end(self) -> float:  # type: ignore[override]
+        return self.base.wind_end + self.shift
+
+    @property
+    def num_tuples_total(self) -> int:  # type: ignore[override]
+        return self.base.num_tuples_total
+
+    def input_time(self, num_tuples: int) -> float:
+        return self.base.input_time(num_tuples) + self.shift
+
+    def tuples_available(self, t: float) -> int:
+        return self.base.tuples_available(t - self.shift)
 
 
 def jittered_trace(

@@ -25,7 +25,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 class CostModelBase:
@@ -236,3 +236,161 @@ def fit_piecewise_linear(
     return PiecewiseLinearCostModel(
         points=tuple(mono), agg_points=tuple(_isotonic(agg_samples))
     )
+
+
+class CalibratingCostModel(CostModelBase):
+    """Self-calibrating wrapper: §6.2's offline fit made CONTINUOUS.
+
+    The paper fits its piecewise-linear cost model once, offline, from
+    measured batches; a long-running session cannot afford that — data
+    distributions, cluster load and compilation caches shift, so predicted
+    batch costs drift away from observed wall times.  This wrapper
+
+    * starts out delegating to ``base`` (the offline fit);
+    * records ``(num_tuples, observed_cost)`` pairs from execution feedback
+      (``observe``; final-aggregation pairs via ``observe_agg``);
+    * refits its knots every ``refit_every`` observations once
+      ``min_samples`` have accumulated, through ``fit_piecewise_linear``'s
+      isotonic path (same cleanup as the offline fit);
+    * exposes ``drift()`` — mean relative |observed - predicted| over the
+      last ``window`` observations, where "predicted" is what the model in
+      effect AT OBSERVATION TIME said.  A session compares it against its
+      drift threshold to trigger replanning of future windows.
+
+    Mutable by design: every Query holding this instance (all windows of a
+    recurring query) sees refits immediately — dynamic policies consult
+    ``cost``/``agg_cost`` at each decision instant, so refits steer
+    priorities and MinBatch re-sizing without object swapping.
+    """
+
+    def __init__(
+        self,
+        base: CostModelBase,
+        *,
+        min_samples: int = 4,
+        refit_every: int = 8,
+        window: int = 64,
+        max_samples: int = 4096,
+    ):
+        if min_samples < 2:
+            raise ValueError("min_samples must be >= 2 (a fit needs 2 knots)")
+        if refit_every < 1:
+            raise ValueError("refit_every must be >= 1")
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        if max_samples < 1:
+            # 0 would make the `del lst[:-0 or None]` trim wipe the buffer.
+            raise ValueError("max_samples must be >= 1")
+        self.base = base
+        self.min_samples = min_samples
+        self.refit_every = refit_every
+        self.window = window
+        self.max_samples = max_samples
+        self._samples: List[Tuple[float, float]] = []
+        self._agg_samples: List[Tuple[float, float]] = []
+        self._errors: List[float] = []   # relative error per observation
+        self._fitted: Optional[PiecewiseLinearCostModel] = None
+        self._fitted_agg = False  # did the current fit include agg samples?
+        self._since_refit = 0
+        self.refits = 0
+
+    # -- CostModelBase ---------------------------------------------------
+    def cost(self, num_tuples: int) -> float:
+        model = self.base if self._fitted is None else self._fitted
+        return model.cost(num_tuples)
+
+    def agg_cost(self, num_batches: int) -> float:
+        # Agg knots come from the fit only when the FIT saw agg feedback;
+        # per-batch refits alone must not zero out the base model's
+        # aggregation cost.
+        if not self._fitted_agg or self._fitted is None:
+            return self.base.agg_cost(num_batches)
+        return self._fitted.agg_cost(num_batches)
+
+    # -- feedback --------------------------------------------------------
+    @property
+    def calibrated(self) -> bool:
+        return self._fitted is not None
+
+    @property
+    def num_observations(self) -> int:
+        return len(self._samples)
+
+    def observe(self, num_tuples: int, observed_cost: float) -> None:
+        """Record one executed batch: ``observed_cost`` is the batch's true
+        duration (modelled true cost in simulation, wall seconds on a real
+        backend — cost units == time units, §1)."""
+        if num_tuples <= 0 or observed_cost < 0:
+            return
+        predicted = self.cost(num_tuples)
+        scale = max(abs(observed_cost), abs(predicted), 1e-12)
+        self._errors.append(abs(observed_cost - predicted) / scale)
+        del self._errors[: -self.window or None]
+        self._samples.append((float(num_tuples), float(observed_cost)))
+        del self._samples[: -self.max_samples or None]
+        self._since_refit += 1
+        if (
+            len(self._samples) >= self.min_samples
+            and self._since_refit >= self.refit_every
+        ):
+            self.refit_now()
+
+    def observe_agg(self, num_batches: int, observed_cost: float) -> None:
+        if num_batches <= 1 or observed_cost < 0:
+            return
+        self._agg_samples.append((float(num_batches), float(observed_cost)))
+        del self._agg_samples[: -self.max_samples or None]
+        if self._fitted is not None:
+            # Fold the (rare: one per multi-batch query) agg sample straight
+            # into the already-calibrated fit.
+            self.refit_now()
+
+    def _knots(self, samples, base_fn):
+        """Knots for one axis of the refit.
+
+        Rich feedback (>= 3 distinct sizes) fits the raw measurements —
+        exactly §6.2 with fresher data.  Sparse feedback (a session that so
+        far only ran MinBatch-sized batches) cannot pin down a shape, and
+        raw knots would extrapolate FLAT (poisoning ``cost(1)`` and
+        therefore MinBatch sizing and C_max checks); instead the BASE
+        model's shape is kept and its level corrected by the median
+        observed/predicted ratio (a multiplicative drift correction).
+        """
+        xs = sorted({x for x, _ in samples})
+        if len(xs) >= 3:
+            return samples
+        ratios = sorted(
+            y / base_fn(int(x)) for x, y in samples if base_fn(int(x)) > 1e-12
+        )
+        r = ratios[len(ratios) // 2] if ratios else 1.0
+        grid = sorted({1.0, *xs, 2.0 * max(xs)})
+        return [(x, r * base_fn(int(x))) for x in grid]
+
+    def refit_now(self) -> bool:
+        """Refit immediately (a session's drift trigger); False when there
+        are not yet enough samples for a meaningful fit."""
+        if len(self._samples) < self.min_samples:
+            return False
+        if self._agg_samples:
+            agg = [(1.0, 0.0),
+                   *self._knots(self._agg_samples, self.base.agg_cost)]
+        else:
+            agg = ((1, 0.0),)
+        self._fitted = fit_piecewise_linear(
+            self._knots(self._samples, self.base.cost), agg
+        )
+        self._fitted_agg = bool(self._agg_samples)
+        self._since_refit = 0
+        self._errors.clear()  # errors measured against the superseded model
+        self.refits += 1
+        return True
+
+    def drift(self) -> float:
+        """Mean relative prediction error SINCE THE LAST REFIT (0 = the
+        current model predicted every observed cost exactly).  Resets on
+        refit, so a session trigger (`drift() > threshold` -> ``refit_now``)
+        does not immediately re-fire."""
+        if not self._errors:
+            return 0.0
+        recent = self._errors[-self.window:]
+        return sum(recent) / len(recent)

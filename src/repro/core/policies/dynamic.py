@@ -66,7 +66,8 @@ class DynamicPolicy:
     # -- runtime hooks ---------------------------------------------------
     def on_admit(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
         """FindMinBatchSize at admission (§4.1): Eq.-9 cost bound, C_max
-        blocking cap, GROUP-BY floor."""
+        blocking cap, GROUP-BY floor.  The loop follows up with an
+        ``"admission"`` SchedulingEvent at the same decision instant."""
         rt.min_batch = find_min_batch_size(
             rt.est_total(now) or 1,
             rt.q.cost_model,
@@ -74,6 +75,19 @@ class DynamicPolicy:
             self.c_max,
             rt.spec.num_groups,
         )
+
+    def on_withdraw(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
+        """Query deleted mid-run (§4: "queries may be added or removed at
+        any point").  Nothing to unwind for Algorithm 2 — MinBatch state
+        dies with the runtime — but custom policies with cross-query state
+        override this."""
+
+    def on_recalibrate(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
+        """Cost-model recalibration (a session detected drift and refitted):
+        re-run MinBatch sizing so future batches of ``rt`` reflect the
+        corrected costs.  Only affects batch SIZING going forward — the NINP
+        invariant is untouched."""
+        self.on_admit(rt, now)
 
     def priority(self, rt: "QueryRuntime", now: float) -> Tuple:  # noqa: F821
         """Sort key among ready queries; smallest wins the executor."""

@@ -45,15 +45,18 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .api import Executor, SchedulingEvent, SchedulingPolicy
 from .arrivals import ArrivalModel
+from .cost_model import CostModelBase
 from .types import (
+    EPS,
     BatchExecution,
     ExecutionTrace,
     Query,
     QueryOutcome,
     Schedule,
+    split_window_id,
 )
 
-_EPS = 1e-9
+_EPS = EPS  # the one shared tolerance (see types.EPS)
 LARGE_NUMBER = 1e18  # Algorithm 2's sentinel for "not ready"
 
 
@@ -247,6 +250,7 @@ class BaseExecutor:
         self._now = 0.0
         self.wall_seconds: Dict[str, float] = {}
         self.last_batch_wall: Optional[float] = None
+        self.last_agg_wall: Optional[float] = None
 
     # -- protocol --------------------------------------------------------
     def clock(self) -> float:
@@ -261,7 +265,7 @@ class BaseExecutor:
         self._now = t
 
     def submit_batch(self, query: Query, num_tuples: int, offset: int) -> float:
-        dur = query.cost_model.cost(num_tuples)
+        dur = self._modelled_batch_cost(query, num_tuples)
         self.last_batch_wall = self._execute(query, num_tuples, offset)
         if self.last_batch_wall is not None:
             self.wall_seconds[query.query_id] = (
@@ -271,10 +275,9 @@ class BaseExecutor:
         return dur
 
     def finalize(self, query: Query, num_batches: int) -> float:
-        agg = (
-            query.cost_model.agg_cost(num_batches) if num_batches > 1 else 0.0
-        )
+        agg = self._modelled_agg_cost(query, num_batches)
         wall = self._finalize(query, num_batches)
+        self.last_agg_wall = wall
         if wall is not None:
             self.wall_seconds[query.query_id] = (
                 self.wall_seconds.get(query.query_id, 0.0) + wall
@@ -292,6 +295,16 @@ class BaseExecutor:
             )
 
     # -- backend hooks ---------------------------------------------------
+    def _modelled_batch_cost(self, query: Query, num_tuples: int) -> float:
+        """TRUE modelled duration of one batch — what the clock advances by.
+        Default: the query's own cost model (prediction == truth).  Override
+        to inject cost drift (see ``OracleCostExecutor``)."""
+        return query.cost_model.cost(num_tuples)
+
+    def _modelled_agg_cost(self, query: Query, num_batches: int) -> float:
+        """TRUE modelled duration of the final aggregation."""
+        return query.cost_model.agg_cost(num_batches) if num_batches > 1 else 0.0
+
     def _execute(
         self, query: Query, num_tuples: int, offset: int
     ) -> Optional[float]:
@@ -305,6 +318,46 @@ class BaseExecutor:
 
 class SimulatedExecutor(BaseExecutor):
     """Pure discrete-event backend: the paper's §7 experiment harness."""
+
+
+class OracleCostExecutor(SimulatedExecutor):
+    """Simulated backend whose TRUE batch costs come from per-query oracle
+    models: the modelled clock advances by the oracle's cost while planners
+    keep consulting ``query.cost_model`` (the fitted — possibly calibrating —
+    model).  This is the cost-side analogue of ``DynamicQuerySpec.truth`` for
+    arrivals: §6.2's measured model can be wrong, and a continuously running
+    session must detect and absorb that.
+
+    ``true_models`` is keyed by query id; per-window session ids
+    ("<base>#w<k>") fall back to their base id, so one entry covers every
+    window of a recurring query.  Unkeyed queries use ``default`` (when
+    given) or their own cost model (no drift).
+    """
+
+    def __init__(
+        self,
+        true_models: Optional[Dict[str, CostModelBase]] = None,
+        default: Optional[CostModelBase] = None,
+    ):
+        super().__init__()
+        self.true_models = dict(true_models or {})
+        self.default = default
+
+    def true_model(self, query: Query) -> CostModelBase:
+        m = self.true_models.get(query.query_id)
+        if m is None:
+            m = self.true_models.get(split_window_id(query.query_id)[0])
+        if m is None:
+            m = self.default
+        return query.cost_model if m is None else m
+
+    def _modelled_batch_cost(self, query: Query, num_tuples: int) -> float:
+        return self.true_model(query).cost(num_tuples)
+
+    def _modelled_agg_cost(self, query: Query, num_batches: int) -> float:
+        if num_batches <= 1:
+            return 0.0
+        return self.true_model(query).agg_cost(num_batches)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -456,6 +509,10 @@ class ExecutorPool:
         return getattr(self.backend, "last_batch_wall", None)
 
     @property
+    def last_agg_wall(self) -> Optional[float]:
+        return getattr(self.backend, "last_agg_wall", None)
+
+    @property
     def wall_seconds(self) -> Dict[str, float]:
         return getattr(self.backend, "wall_seconds", {})
 
@@ -542,7 +599,12 @@ def _record_final_agg(
 
 
 def _record_outcome(
-    trace: ExecutionTrace, query: Query, num_batches: int, completion: float
+    trace: ExecutionTrace,
+    query: Query,
+    num_batches: int,
+    completion: float,
+    *,
+    tuples_processed: int = -1,
 ) -> QueryOutcome:
     out = QueryOutcome(
         query_id=query.query_id,
@@ -554,6 +616,8 @@ def _record_outcome(
             if e.query_id == query.query_id
         ),
         num_batches=num_batches,
+        tuples_processed=tuples_processed,
+        num_tuples_total=query.num_tuples_total,
     )
     trace.outcomes.append(out)
     return out
@@ -574,6 +638,7 @@ def execute_plan(
     trace: Optional[ExecutionTrace] = None,
     on_batch: Optional[Callable[[BatchExecution], None]] = None,
     c_max: Optional[float] = None,
+    carryover: bool = False,
 ) -> ExecutionTrace:
     """Execute one query's plan on ``executor`` (simulated by default).
 
@@ -586,6 +651,11 @@ def execute_plan(
     ``max(clock, sched_time)`` — the mode real backends use to apply a vetted
     plan to fully materialized inputs.
 
+    ``carryover=True``: keep the executor's running clock (a continuous
+    session timeline, where one executor serves many window queries back to
+    back) instead of resetting it to the query's ``submit_time``; the clock
+    only ever moves forward.
+
     With an ``ExecutorPool`` both modes dispatch each triggered batch to the
     earliest-free worker (``pool.clock()`` IS the earliest-free instant), so
     consecutive batches of one query overlap across workers; the final
@@ -593,7 +663,10 @@ def execute_plan(
     """
     executor = SimulatedExecutor() if executor is None else executor
     trace = ExecutionTrace() if trace is None else trace
-    executor.reset(query.submit_time)  # each query gets its own timeline
+    if carryover:
+        executor.advance(query.submit_time)
+    else:
+        executor.reset(query.submit_time)  # each query gets its own timeline
 
     n_batches = 0
     if strict:
@@ -608,6 +681,7 @@ def execute_plan(
             )
             offset += b.num_tuples
             n_batches += 1
+        processed = offset
     else:
         if not plan.batches and query.num_tuples_total > 0:
             raise ValueError(
@@ -656,11 +730,17 @@ def execute_plan(
                 wait_for = min(processed + 1, arr.num_tuples_total)
                 nxt = min(next_arrival, max(point, arr.input_time(wait_for)))
                 if not math.isfinite(nxt) or nxt <= now + _EPS:
-                    break  # nothing further will arrive or trigger
+                    # Nothing further will arrive or trigger: the truth
+                    # stream under-delivered against the plan.  The outcome
+                    # below records the shortfall (``pending`` tuples never
+                    # materialized) instead of posing as a completion.
+                    break
                 executor.advance(nxt)
 
     completion = _record_final_agg(trace, executor, query, n_batches, on_batch)
-    _record_outcome(trace, query, n_batches, completion)
+    _record_outcome(
+        trace, query, n_batches, completion, tuples_processed=processed
+    )
     return trace
 
 
@@ -739,51 +819,57 @@ def _run_static(
     return trace
 
 
-def _run_dynamic(
-    policy: SchedulingPolicy,
-    executor: Executor,
-    specs: List[DynamicQuerySpec],
-    *,
-    start_time: Optional[float],
-    max_steps: int,
-    on_batch: Optional[Callable[[BatchExecution], None]],
-    c_max: Optional[float],
-) -> ExecutionTrace:
-    """Algorithm 2's NINP loop, generalized over dynamic policies.
+class DynamicLoopCore:
+    """One-decision-instant stepping core of Algorithm 2's NINP loop.
 
-    Admissions/deletions happen only between batches (§4.2: "the scheduler
-    takes the new query at the end of the batch"); the policy picks the
-    winner at each decision instant; the executor performs the batch."""
-    runts = [QueryRuntime(spec=s) for s in specs]
-    trace = ExecutionTrace()
-    if not runts:
-        return trace
-    start = (
-        min(r.q.submit_time for r in runts) if start_time is None else start_time
-    )
-    executor.reset(start)
-    is_pool = getattr(executor, "is_pool", False)
-    state = RuntimeState(
-        runtimes=runts,
-        trace=trace,
-        num_workers=getattr(executor, "num_workers", 1),
-        worker_names=tuple(getattr(executor, "worker_names", ())),
-    )
-    event_kind = "start"
+    ``run()`` drives it to exhaustion for a fixed workload; a ``Session``
+    drives it incrementally (``tick(horizon=...)``) on a CONTINUOUS timeline,
+    appending new ``QueryRuntime``s between ticks as windows roll over or
+    queries are admitted mid-run.  Admissions/deletions happen only between
+    batches (§4.2: "the scheduler takes the new query at the end of the
+    batch"); the policy picks the winner at each decision instant; the
+    executor performs the batch.  When an admission happens, the next
+    ``replan`` receives an ``"admission"`` SchedulingEvent naming the
+    admitted query — the decision instant §4.2 introduces for new arrivals.
+    """
 
-    for _ in range(max_steps):
-        now = executor.clock()
-        # -- admissions & deletions (between batches only, §4.2) ----------
-        for rt in runts:
+    def __init__(
+        self,
+        policy: SchedulingPolicy,
+        executor: Executor,
+        state: RuntimeState,
+        *,
+        on_batch: Optional[Callable[[BatchExecution], None]] = None,
+        c_max: Optional[float] = None,
+    ):
+        self.policy = policy
+        self.executor = executor
+        self.state = state
+        self.on_batch = on_batch
+        self.c_max = c_max
+        self.is_pool = getattr(executor, "is_pool", False)
+        self._event_kind = "start"
+        self._event_qid: Optional[str] = None
+
+    @property
+    def runts(self) -> List[QueryRuntime]:
+        return self.state.runtimes
+
+    def _admit_and_delete(self, now: float) -> Optional[str]:
+        """Flip admissions/deletions due at ``now``; return the last admitted
+        query id (None when no admission happened)."""
+        admitted: Optional[str] = None
+        for rt in self.runts:
             if not rt.admitted and rt.q.submit_time <= now + _EPS:
                 rt.admitted = True
-                rt.rr_seq = state.rr_counter
-                state.rr_counter += 1
-                on_admit = getattr(policy, "on_admit", None)
+                rt.rr_seq = self.state.rr_counter
+                self.state.rr_counter += 1
+                on_admit = getattr(self.policy, "on_admit", None)
                 if on_admit is not None:
                     on_admit(rt, now)
                 elif rt.min_batch <= 0:
                     rt.min_batch = 1  # protocol-minimal policy: no sizing hook
+                admitted = rt.q.query_id
             if (
                 rt.spec.delete_time is not None
                 and not rt.deleted
@@ -791,31 +877,64 @@ def _run_dynamic(
                 and not rt.completed
             ):
                 rt.deleted = True
+                on_withdraw = getattr(self.policy, "on_withdraw", None)
+                if on_withdraw is not None:
+                    on_withdraw(rt, now)
+        return admitted
 
-        if not state.active() and all(r.admitted or r.deleted for r in runts):
-            break
+    def drained(self) -> bool:
+        """No active work and nothing pending admission."""
+        return not self.state.active() and all(
+            r.admitted or r.deleted for r in self.runts
+        )
 
-        if is_pool:
+    def tick(self, horizon: float = math.inf) -> str:
+        """Process ONE decision instant.  Returns:
+
+        * ``"done"``    — drained: every runtime completed or deleted;
+        * ``"stop"``    — the policy declared nothing will ever be ready;
+        * ``"wait"``    — idled forward to the policy's wake instant;
+        * ``"ran"``     — dispatched one batch (or shard group);
+        * ``"horizon"`` — the next actionable instant lies beyond
+          ``horizon`` (the clock was advanced exactly to it; only a session
+          passes a finite horizon).
+        """
+        executor, state, trace = self.executor, self.state, self.state.trace
+        now = executor.clock()
+        if now > horizon + _EPS:
+            return "horizon"
+        admitted = self._admit_and_delete(now)
+        if admitted is not None:
+            self._event_kind, self._event_qid = "admission", admitted
+        if self.drained():
+            return "done"
+
+        if self.is_pool:
             state.worker_clocks = tuple(
                 executor.worker_clock(n) for n in state.worker_names
             )
-        decision = policy.replan(SchedulingEvent(event_kind, now), state)
+        decision = self.policy.replan(
+            SchedulingEvent(self._event_kind, now, self._event_qid), state
+        )
         if decision.is_stop:
-            break
+            return "stop"
         if decision.is_wait:
+            self._event_kind, self._event_qid = "wake", None
+            if decision.wake_at > horizon + _EPS:
+                executor.advance(horizon)
+                return "horizon"
             executor.advance(decision.wake_at)
-            event_kind = "wake"
-            continue
+            return "wait"
 
         rt = state.by_id(decision.query_id)
         rt.rr_seq = state.rr_counter  # rotate to the back for RR fairness
         state.rr_counter += 1
 
-        if (decision.worker is not None or decision.shards) and not is_pool:
+        if (decision.worker is not None or decision.shards) and not self.is_pool:
             raise ValueError(
-                f"policy {getattr(policy, 'name', policy)!r} emitted a "
-                "worker-targeted decision but the executor is not an "
-                "ExecutorPool"
+                f"policy {getattr(self.policy, 'name', self.policy)!r} "
+                "emitted a worker-targeted decision but the executor is not "
+                "an ExecutorPool"
             )
         if decision.shards:
             # One logical batch split across workers: each shard becomes its
@@ -829,24 +948,61 @@ def _run_dynamic(
                 claimed.append(name)
                 _record_batch(
                     trace, executor, rt.q, shard.num_tuples, rt.processed,
-                    on_batch=on_batch, c_max=c_max, worker=name,
+                    on_batch=self.on_batch, c_max=self.c_max, worker=name,
                 )
                 rt.processed += shard.num_tuples
                 rt.batches_done += 1
         else:
             _record_batch(
                 trace, executor, rt.q, decision.num_tuples, rt.processed,
-                on_batch=on_batch, c_max=c_max, worker=decision.worker,
+                on_batch=self.on_batch, c_max=self.c_max,
+                worker=decision.worker,
             )
             rt.processed += decision.num_tuples
             rt.batches_done += 1
-        event_kind = "batch_end"
+        self._event_kind, self._event_qid = "batch_end", rt.q.query_id
 
         # -- completion: all that will ever arrive has been processed -----
         if rt.done(executor.clock()):
             completion = _record_final_agg(
-                trace, executor, rt.q, rt.batches_done, on_batch
+                trace, executor, rt.q, rt.batches_done, self.on_batch
             )
             rt.completed = True
-            _record_outcome(trace, rt.q, rt.batches_done, completion)
+            _record_outcome(
+                trace, rt.q, rt.batches_done, completion,
+                tuples_processed=rt.processed,
+            )
+        return "ran"
+
+
+def _run_dynamic(
+    policy: SchedulingPolicy,
+    executor: Executor,
+    specs: List[DynamicQuerySpec],
+    *,
+    start_time: Optional[float],
+    max_steps: int,
+    on_batch: Optional[Callable[[BatchExecution], None]],
+    c_max: Optional[float],
+) -> ExecutionTrace:
+    """Algorithm 2's NINP loop over a fixed workload (see DynamicLoopCore)."""
+    runts = [QueryRuntime(spec=s) for s in specs]
+    trace = ExecutionTrace()
+    if not runts:
+        return trace
+    start = (
+        min(r.q.submit_time for r in runts) if start_time is None else start_time
+    )
+    executor.reset(start)
+    state = RuntimeState(
+        runtimes=runts,
+        trace=trace,
+        num_workers=getattr(executor, "num_workers", 1),
+        worker_names=tuple(getattr(executor, "worker_names", ())),
+    )
+    core = DynamicLoopCore(policy, executor, state, on_batch=on_batch,
+                           c_max=c_max)
+    for _ in range(max_steps):
+        if core.tick() in ("done", "stop"):
+            break
     return trace

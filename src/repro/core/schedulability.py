@@ -131,3 +131,34 @@ def check(queries: Sequence[Query], c_max: float = float("inf")) -> FeasibilityR
         feasible=all(p.feasible for p in parts),
         reasons=tuple(r for p in parts for r in p.reasons),
     )
+
+
+def admission_check(
+    incoming: Sequence[Query],
+    active: Sequence[Query] = (),
+    c_max: float = float("inf"),
+) -> FeasibilityReport:
+    """Online admission pre-flight: may ``incoming`` join the LIVE set?
+
+    ``active`` are remaining-work snapshots of the currently admitted
+    queries (a session builds them from its runtime state: pending tuples
+    and their remaining arrival instants).  The checks stay NECESSARY
+    conditions, so ``feasible=False`` proves the union cannot be scheduled
+    by any NINP strategy on one executor — the caller should reject the
+    submission (§4.3: exact schedulability is NP-complete, so the gate errs
+    on the admitting side; deadline misses remain a measured outcome).
+
+    * each incoming query must be feasible in isolation (the active ones
+      passed this gate at their own admission);
+    * the §7.4 post-window condition must hold across the UNION;
+    * C_max blocking warnings are reported for the incoming set.
+    """
+    parts = [
+        single_query_condition(incoming),
+        post_window_condition([*active, *incoming]),
+        blocking_period_bound(incoming, c_max),
+    ]
+    return FeasibilityReport(
+        feasible=all(p.feasible for p in parts),
+        reasons=tuple(r for p in parts for r in p.reasons),
+    )

@@ -1,0 +1,599 @@
+"""Continuous intermittent-query sessions (the paper's Custom Query
+Scheduler RUNS CONTINUOUSLY — §1's "results are obtained at the end of each
+window", §4's "queries may be added or removed at any point").
+
+Everything before this module modelled one-shot windows: ``Planner.run``
+drains a fixed workload, resets the executor per query and returns.  A
+``SessionRuntime`` is the long-lived generalization:
+
+* **recurring windows** — a ``RecurringQuerySpec`` is instantiated into
+  per-window ``Query`` objects lazily at window roll-over; executor/pool
+  clocks CARRY OVER across windows (one continuous timeline, never reset
+  after session start);
+* **online admission** — ``submit`` gates new work behind a schedulability
+  pre-flight (``repro.core.schedulability.admission_check``) against
+  remaining-work snapshots of the live set; ``withdraw`` removes a query
+  mid-run.  Both take effect between batches (§4.2) through the shared
+  ``DynamicLoopCore``, whose ``replan`` receives ``"admission"``
+  SchedulingEvents;
+* **self-calibrating costs** — with ``calibrate=True`` each recurring
+  query's cost model is wrapped in a ``CalibratingCostModel`` fed by
+  execution feedback (modelled true durations in simulation — see
+  ``OracleCostExecutor`` — or measured wall seconds on real backends).
+  When the drift metric crosses ``drift_threshold`` the session refits and
+  replans FUTURE work: static windows are planned at window start with the
+  refreshed model; dynamic runtimes get their MinBatch re-sized through the
+  policy's ``on_recalibrate`` hook.
+
+Static policies run each window's plan on the same carried-over timeline
+(``execute_plan(carryover=True)``): window k+1 starts no earlier than both
+its own ``submit_time`` and the end of window k's execution — the session
+owns ONE executor, exactly like the dynamic NINP loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Union
+
+from .api import Executor, SchedulingPolicy, get_policy
+from .arrivals import TraceArrival
+from .cost_model import CalibratingCostModel
+from .runtime import (
+    DynamicLoopCore,
+    DynamicQuerySpec,
+    ExecutorPool,
+    OracleCostExecutor,
+    QueryRuntime,
+    RuntimeState,
+)
+from .schedulability import FeasibilityReport, admission_check
+from .types import (
+    EPS,
+    BatchExecution,
+    InfeasibleDeadline,
+    Query,
+    QueryOutcome,
+    RecurringQuerySpec,
+    SessionTrace,
+    split_window_id,
+)
+
+# Remaining-arrival snapshots for the admission pre-flight are exact up to
+# this many pending tuples; beyond it the ORIGINAL query stands in (a
+# conservative, still-valid input to the necessary conditions).
+_SNAPSHOT_CAP = 20_000
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionResult:
+    """Outcome of ``SessionRuntime.submit``."""
+
+    admitted: bool
+    report: FeasibilityReport
+    base_id: str
+
+    def __bool__(self) -> bool:
+        return self.admitted
+
+
+@dataclasses.dataclass
+class _LiveSpec:
+    """Session-side bookkeeping for one recurring query."""
+
+    rspec: RecurringQuerySpec
+    calibrator: Optional[CalibratingCostModel] = None
+    next_window: int = 0
+    withdrawn: bool = False
+    # dynamic path: instantiated window runtimes; static path: pending Queries
+    runtimes: List[QueryRuntime] = dataclasses.field(default_factory=list)
+    pending_static: List[Query] = dataclasses.field(default_factory=list)
+
+    @property
+    def base_id(self) -> str:
+        return self.rspec.base_id
+
+    @property
+    def exhausted(self) -> bool:
+        if self.withdrawn:
+            return True
+        nw = self.rspec.num_windows
+        return nw is not None and self.next_window >= nw
+
+    @property
+    def open_ended(self) -> bool:
+        return self.rspec.num_windows is None and not self.withdrawn
+
+    def cost_model(self):
+        return (self.calibrator if self.calibrator is not None
+                else self.rspec.base.cost_model)
+
+
+def as_recurring(
+    spec: Union[Query, DynamicQuerySpec, RecurringQuerySpec],
+) -> RecurringQuerySpec:
+    """Normalize a submission: one-shot queries become single-window specs."""
+    if isinstance(spec, RecurringQuerySpec):
+        return spec
+    if isinstance(spec, DynamicQuerySpec):
+        truth = spec.truth
+        return RecurringQuerySpec(
+            base=spec.query,
+            period=max(spec.query.wind_end - spec.query.wind_start, 1.0),
+            num_windows=1,
+            truth_factory=(lambda w: truth),
+            num_groups=spec.num_groups,
+            delete_time=spec.delete_time,
+            total_known=spec.total_known,
+        )
+    if isinstance(spec, Query):
+        return RecurringQuerySpec(
+            base=spec,
+            period=max(spec.wind_end - spec.wind_start, 1.0),
+            num_windows=1,
+        )
+    raise TypeError(f"cannot submit {type(spec).__name__} to a session")
+
+
+class SessionRuntime:
+    """The long-running event loop behind ``repro.core.Session``.
+
+    Drive it with ``submit`` / ``withdraw`` between ``run_until`` calls::
+
+        s = SessionRuntime(policy="llf-dynamic")
+        s.submit(RecurringQuerySpec(base=q, period=60.0, num_windows=10))
+        s.run_until(300.0)          # windows roll over, clocks carry
+        s.submit(other)             # mid-run admission (pre-flight gated)
+        s.run_until(900.0)
+        s.trace.outcome_series(q.query_id)
+    """
+
+    def __init__(
+        self,
+        policy: Union[str, SchedulingPolicy] = "llf-dynamic",
+        executor: Optional[Executor] = None,
+        *,
+        workers: Optional[int] = None,
+        start_time: Optional[float] = None,
+        calibrate: bool = False,
+        drift_threshold: float = 0.25,
+        min_samples: int = 4,
+        refit_every: int = 8,
+        c_max: Optional[float] = None,
+        admission_control: bool = True,
+        **policy_params,
+    ):
+        if isinstance(policy, str):
+            policy = get_policy(policy, **policy_params)
+        elif policy_params:
+            raise TypeError("policy_params only apply when policy is a name")
+        if c_max is not None and hasattr(policy, "c_max"):
+            # ``c_max`` is both a session knob (the loop's wall-time
+            # straggler bound) and a policy knob (MinBatch sizing, §4.2).
+            # One explicit value must mean ONE bound — mirror it onto the
+            # policy so Session(policy="llf-dynamic", c_max=x) sizes batches
+            # exactly like Planner(policy="llf-dynamic", c_max=x).
+            policy.c_max = c_max
+        self.policy = policy
+        executor = OracleCostExecutor() if executor is None else executor
+        if workers is not None:
+            executor = ExecutorPool(backend=executor, workers=workers)
+        self.executor = executor
+        self.calibrate = calibrate
+        self.drift_threshold = drift_threshold
+        self.min_samples = min_samples
+        self.refit_every = refit_every
+        self.c_max = c_max if c_max is not None else getattr(policy, "c_max", None)
+        self.admission_control = admission_control
+        self.trace = SessionTrace()
+        self._live: Dict[str, _LiveSpec] = {}
+        self._state = RuntimeState(
+            runtimes=[],
+            trace=self.trace,
+            num_workers=getattr(executor, "num_workers", 1),
+            worker_names=tuple(getattr(executor, "worker_names", ())),
+        )
+        self._core = DynamicLoopCore(
+            policy, executor, self._state,
+            on_batch=self._observe, c_max=self.c_max,
+        )
+        self._is_dynamic = getattr(policy, "kind", "static") == "dynamic"
+        self._start_time = start_time
+        self._started = start_time is not None
+        self._outcomes_seen = 0
+        # per-window batch counts for final-agg calibration feedback (O(1)
+        # instead of re-scanning the whole session trace per window)
+        self._batch_counts: Dict[str, int] = {}
+        if start_time is not None:
+            executor.reset(start_time)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        """Current modelled time of the session's continuous timeline."""
+        return self.executor.clock()
+
+    @property
+    def live_ids(self) -> List[str]:
+        return [b for b, l in self._live.items() if not l.withdrawn]
+
+    def calibrator(self, base_id: str) -> Optional[CalibratingCostModel]:
+        return self._live[base_id].calibrator
+
+    # ------------------------------------------------------------------
+    # Admission / withdrawal
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        spec: Union[Query, DynamicQuerySpec, RecurringQuerySpec],
+        *,
+        force: bool = False,
+    ) -> AdmissionResult:
+        """Admit a (recurring) query into the live session.
+
+        The schedulability pre-flight checks the spec's FIRST window against
+        remaining-work snapshots of everything currently admitted (necessary
+        conditions only: rejection proves infeasibility, acceptance promises
+        nothing — deadline misses remain a measured outcome).  ``force=True``
+        records the report but admits regardless.
+        """
+        rspec = as_recurring(spec)
+        base_id = rspec.base_id
+        if split_window_id(base_id)[1] is not None:
+            raise ValueError(
+                f"{base_id!r} collides with the per-window id namespace "
+                "'<base>#w<k>'; pick a base id without a '#w<digits>' suffix"
+            )
+        if base_id in self._live:
+            # Covers withdrawn ids too: a second incarnation would re-mint
+            # the same per-window ids, and runtime/trace lookups (first
+            # match by id) would then hit the dead incarnation's rows.
+            raise ValueError(
+                f"{base_id!r} already used in this session (live or "
+                "withdrawn); pick a fresh base id per incarnation"
+            )
+        calibrator = None
+        if self.calibrate:
+            if isinstance(rspec.base.cost_model, CalibratingCostModel):
+                calibrator = rspec.base.cost_model
+            else:
+                calibrator = CalibratingCostModel(
+                    rspec.base.cost_model,
+                    min_samples=self.min_samples,
+                    refit_every=self.refit_every,
+                )
+        live = _LiveSpec(rspec=rspec, calibrator=calibrator)
+
+        first = rspec.window_query(0, cost_model=live.cost_model())
+        report = admission_check(
+            [first], self._active_snapshot(),
+            c_max=self.c_max if self.c_max is not None else float("inf"),
+        )
+        now = self.now
+        if self.admission_control and not report.feasible and not force:
+            self.trace.log("reject", now, base_id,
+                           "; ".join(report.reasons))
+            return AdmissionResult(False, report, base_id)
+
+        self._register_true_cost(rspec)
+        self._live[base_id] = live
+        self.trace.log(
+            "submit", now, base_id,
+            f"period={rspec.period};windows={rspec.num_windows or 'inf'}",
+        )
+        self._instantiate_next(live)
+        return AdmissionResult(True, report, base_id)
+
+    def withdraw(self, base_id: str) -> None:
+        """Remove a live query mid-run: active windows are deleted at the
+        next between-batch instant (§4.2), future windows never open."""
+        live = self._live[base_id]
+        if live.withdrawn:
+            return
+        now = self.now
+        live.withdrawn = True
+        for rt in live.runtimes:
+            if not rt.completed and rt.spec.delete_time is None:
+                rt.spec.delete_time = now
+        live.pending_static.clear()
+        self.trace.log("withdraw", now, base_id)
+
+    # ------------------------------------------------------------------
+    # Driving the loop
+    # ------------------------------------------------------------------
+    def run_until(self, horizon: float, max_steps: int = 1_000_000) -> SessionTrace:
+        """Advance the session's continuous timeline to ``horizon``,
+        processing every decision instant on the way (window roll-overs,
+        admissions, batches, recalibrations)."""
+        if math.isinf(horizon):
+            open_ended = [l.base_id for l in self._live.values() if l.open_ended]
+            if open_ended:
+                raise ValueError(
+                    f"open-ended specs {open_ended} never drain; use a "
+                    "finite horizon (run_until) or withdraw them first"
+                )
+        self._ensure_started(horizon)
+        if self._is_dynamic:
+            self._run_dynamic_until(horizon, max_steps)
+        else:
+            self._run_static_until(horizon, max_steps)
+        self._drain_outcome_events()
+        return self.trace
+
+    def run(self, max_steps: int = 1_000_000) -> SessionTrace:
+        """Drain every admitted window (bounded specs only)."""
+        return self.run_until(math.inf, max_steps=max_steps)
+
+    # -- dynamic path ---------------------------------------------------
+    def _run_dynamic_until(self, horizon: float, max_steps: int) -> None:
+        for _ in range(max_steps):
+            self._replenish()
+            status = self._core.tick(horizon)
+            self._drain_outcome_events()
+            if status == "horizon":
+                return
+            if status == "stop" or (
+                status == "done"
+                and all(l.exhausted for l in self._live.values())
+            ):
+                # Drained (or the policy declared nothing will ever be
+                # ready): reflect the full passage of time to the horizon so
+                # later submissions join at the session's current instant.
+                if math.isfinite(horizon):
+                    self.executor.advance(horizon)
+                return
+        raise RuntimeError(f"session exceeded {max_steps} steps before "
+                           f"reaching horizon {horizon}")
+
+    # -- static path ----------------------------------------------------
+    def _run_static_until(self, horizon: float, max_steps: int) -> None:
+        from .runtime import execute_plan
+
+        for _ in range(max_steps):
+            self._replenish(horizon)
+            q, live = self._next_static(horizon)
+            if q is None:
+                # Nothing left at or before the horizon; reflect the passage
+                # of time so admissions submitted later see a current clock.
+                if math.isfinite(horizon):
+                    nxt = self._earliest_static()
+                    self.executor.advance(
+                        horizon if nxt is None else min(horizon, nxt)
+                    )
+                return
+            live.pending_static.remove(q)
+            window = split_window_id(q.query_id)[1] or 0
+            truth = live.rspec.window_truth(window)
+            try:
+                plan = self.policy.plan(q)[q.query_id]
+            except InfeasibleDeadline as e:
+                # An unplannable window is a MISS, not a non-event: record
+                # an outcome (never completes, full shortfall) so met/total
+                # metrics stay honest, plus the reason as its own event.
+                self.trace.log("window_infeasible",
+                               max(self.now, q.submit_time), q.query_id,
+                               str(e))
+                self.trace.outcomes.append(QueryOutcome(
+                    query_id=q.query_id,
+                    completion_time=math.inf,
+                    deadline=q.deadline,
+                    total_cost=0.0,
+                    num_batches=0,
+                    tuples_processed=0,
+                    num_tuples_total=q.num_tuples_total,
+                ))
+                self._drain_outcome_events()
+                continue
+            execute_plan(
+                q, plan, self.executor, truth=truth,
+                trace=self.trace, on_batch=self._observe,
+                c_max=self.c_max, carryover=True,
+            )
+            self._drain_outcome_events()
+        raise RuntimeError(f"session exceeded {max_steps} steps before "
+                           f"reaching horizon {horizon}")
+
+    def _next_static(self, horizon: float):
+        best, best_live = None, None
+        for live in self._live.values():
+            for q in live.pending_static:
+                if q.submit_time > horizon + EPS:
+                    continue
+                if best is None or q.submit_time < best.submit_time:
+                    best, best_live = q, live
+        return best, best_live
+
+    def _earliest_static(self) -> Optional[float]:
+        starts = [q.submit_time for l in self._live.values()
+                  for q in l.pending_static]
+        return min(starts) if starts else None
+
+    # ------------------------------------------------------------------
+    # Window roll-over
+    # ------------------------------------------------------------------
+    def _instantiate_next(self, live: _LiveSpec) -> None:
+        if live.exhausted:
+            return
+        w = live.next_window
+        q = live.rspec.window_query(w, cost_model=live.cost_model())
+        live.next_window += 1
+        self.trace.log("window_open", q.submit_time, q.query_id)
+        if self._is_dynamic:
+            spec = DynamicQuerySpec(
+                query=q,
+                truth=live.rspec.window_truth(w),
+                num_groups=live.rspec.num_groups,
+                delete_time=live.rspec.delete_time,
+                total_known=live.rspec.total_known,
+            )
+            rt = QueryRuntime(spec=spec)
+            live.runtimes.append(rt)
+            self._state.runtimes.append(rt)
+        else:
+            live.pending_static.append(q)
+
+    def _replenish(self, horizon: float = math.inf) -> None:
+        """Keep the NEXT window of every live spec instantiated (lazy
+        roll-over: open-ended recurrence never materializes more than one
+        future window ahead).  The static path additionally materializes
+        every window opening before ``horizon``."""
+        for live in self._live.values():
+            if self._is_dynamic:
+                last = live.runtimes[-1] if live.runtimes else None
+                if (last is None or last.admitted) and not live.exhausted:
+                    self._instantiate_next(live)
+            else:
+                while (
+                    not live.exhausted
+                    and live.rspec.window_start(live.next_window)
+                    <= horizon + EPS
+                ):
+                    self._instantiate_next(live)
+
+    # ------------------------------------------------------------------
+    # Calibration feedback
+    # ------------------------------------------------------------------
+    def _observe(self, ex: BatchExecution) -> None:
+        live = self._live.get(split_window_id(ex.query_id)[0])
+        if live is None or live.calibrator is None:
+            return
+        cal = live.calibrator
+        if ex.kind == "final_agg":
+            # Observed duration: measured wall seconds on real backends,
+            # modelled (true) duration in simulation.
+            wall = getattr(self.executor, "last_agg_wall", None)
+            nb = self._batch_counts.pop(ex.query_id, 0)
+            cal.observe_agg(nb, wall if wall is not None else ex.end - ex.start)
+            return
+        if ex.kind != "batch" or ex.num_tuples <= 0:
+            return
+        self._batch_counts[ex.query_id] = (
+            self._batch_counts.get(ex.query_id, 0) + 1
+        )
+        wall = getattr(self.executor, "last_batch_wall", None)
+        cal.observe(ex.num_tuples,
+                    wall if wall is not None else ex.end - ex.start)
+        drift = cal.drift()
+        if drift > self.drift_threshold and cal.num_observations >= cal.min_samples:
+            self._recalibrate(live, drift)
+
+    def _recalibrate(self, live: _LiveSpec, drift: float) -> None:
+        """Drift crossed the threshold: refit NOW and replan future work.
+
+        Dynamic runtimes get their MinBatch re-sized via the policy's
+        ``on_recalibrate`` hook; static windows pick the refreshed model up
+        at plan time (plans are made at window start).  The NINP invariant
+        is untouched — only future sizing/ordering changes.
+        """
+        cal = live.calibrator
+        if not cal.refit_now():
+            return
+        now = self.now
+        self.trace.log(
+            "recalibrate", now, live.base_id,
+            f"drift={drift:.4f};refit={cal.refits};obs={cal.num_observations}",
+        )
+        hook = getattr(self.policy, "on_recalibrate", None)
+        if hook is None:
+            return
+        for rt in live.runtimes:
+            if rt.admitted and not (rt.completed or rt.deleted):
+                try:
+                    hook(rt, now)
+                except InfeasibleDeadline:
+                    pass  # keep the previous MinBatch; sizing is advisory
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _ensure_started(self, horizon: float) -> None:
+        """First drive: anchor the timeline at the earliest submitted work
+        (matching ``runtime.run``'s start), unless ``start_time`` pinned it."""
+        if self._started:
+            return
+        starts: List[float] = []
+        if self._is_dynamic:
+            starts = [rt.q.submit_time for rt in self._state.runtimes]
+        else:
+            starts = [q.submit_time for l in self._live.values()
+                      for q in l.pending_static]
+        start = min(starts, default=0.0)
+        if math.isfinite(horizon):
+            start = min(start, horizon)
+        self.executor.reset(start)
+        self._started = True
+
+    def _register_true_cost(self, rspec: RecurringQuerySpec) -> None:
+        if rspec.true_cost_model is None:
+            return
+        backend = getattr(self.executor, "backend", self.executor)
+        if isinstance(backend, OracleCostExecutor):
+            backend.true_models[rspec.base_id] = rspec.true_cost_model
+        else:
+            raise TypeError(
+                "true_cost_model requires an OracleCostExecutor backend "
+                f"(got {type(backend).__name__}); real backends exhibit "
+                "their own true costs"
+            )
+
+    def _active_snapshot(self) -> List[Query]:
+        """Remaining-work snapshots of everything currently admitted, for
+        the admission pre-flight."""
+        now = self.now
+        snaps: List[Query] = []
+        for live in self._live.values():
+            if live.withdrawn:
+                continue
+            for rt in live.runtimes:
+                if rt.completed or rt.deleted:
+                    continue
+                snap = _remaining_query(rt, now)
+                if snap is not None:
+                    snaps.append(snap)
+            snaps.extend(live.pending_static)
+        return snaps
+
+    def _drain_outcome_events(self) -> None:
+        while self._outcomes_seen < len(self.trace.outcomes):
+            o = self.trace.outcomes[self._outcomes_seen]
+            self._outcomes_seen += 1
+            self.trace.log(
+                "window_close", o.completion_time, o.query_id,
+                f"met={o.met_deadline};shortfall={o.shortfall}",
+            )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (
+            f"SessionRuntime(policy={getattr(self.policy, 'name', '?')!r}, "
+            f"now={self.now:.6g}, live={self.live_ids})"
+        )
+
+
+def _remaining_query(rt: QueryRuntime, now: float) -> Optional[Query]:
+    """Snapshot of an in-flight query's REMAINING work as a fresh Query
+    (pending tuples with their remaining arrival instants): the live-set
+    input to ``admission_check``.  Falls back to the original query above
+    ``_SNAPSHOT_CAP`` pending tuples (conservative but still a valid
+    necessary-condition input)."""
+    q = rt.q
+    remaining = q.num_tuples_total - rt.processed
+    if remaining <= 0:
+        return None
+    if rt.processed == 0:
+        return q
+    if remaining > _SNAPSHOT_CAP:
+        return q
+    ts = tuple(
+        q.arrival.input_time(k)
+        for k in range(rt.processed + 1, q.num_tuples_total + 1)
+    )
+    return dataclasses.replace(
+        q,
+        num_tuples_total=remaining,
+        arrival=TraceArrival(timestamps=ts),
+        wind_start=ts[0],
+        wind_end=max(ts[-1], ts[0]),
+        submit_time=None,
+    )

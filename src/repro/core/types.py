@@ -9,7 +9,21 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
+
+# The ONE comparison tolerance for modelled time and tuple counts.
+#
+# Cost units == time units (§1) and both are O(1)-O(1e4) in every scenario the
+# paper and the benchmarks exercise, so a single absolute epsilon serves all
+# three historic uses: count-scale slop when inverting arrival rates
+# (``ConstantRateArrival.tuples_available``), time-scale slop when bisecting
+# arrival instants (``TraceArrival``), and decision-instant comparisons in the
+# runtime loop.  A tuple that arrives exactly at instant t must count as
+# available AT t: every comparison uses ``t + EPS`` / ``t - EPS`` in the
+# direction that makes the boundary inclusive.
+EPS = 1e-9
+
+WINDOW_ID_SEP = "#w"  # per-window query ids: "<base_id>#w<index>"
 
 
 class InfeasibleDeadline(Exception):
@@ -209,16 +223,38 @@ class BatchExecution:
 
 @dataclasses.dataclass
 class QueryOutcome:
+    """Per-query result row.
+
+    ``tuples_processed`` vs ``num_tuples_total`` records delivery: a truth
+    arrival stream that under-delivers against the planned total leaves a
+    shortfall, which used to be silently recorded as a normal completion.
+    ``num_tuples_total < 0`` means "not recorded" (hand-built outcomes in the
+    comparison harness); such outcomes report ``complete == True``.
+    """
+
     query_id: str
     completion_time: float
     deadline: float
     total_cost: float
     num_batches: int
+    tuples_processed: int = -1
+    num_tuples_total: int = -1
 
     @property
     def met_deadline(self) -> bool:
         # Allow tiny float slop from accumulated arithmetic.
-        return self.completion_time <= self.deadline + 1e-9
+        return self.completion_time <= self.deadline + EPS
+
+    @property
+    def shortfall(self) -> int:
+        """Planned tuples that never arrived/processed (0 when complete)."""
+        if self.num_tuples_total < 0 or self.tuples_processed < 0:
+            return 0
+        return max(self.num_tuples_total - self.tuples_processed, 0)
+
+    @property
+    def complete(self) -> bool:
+        return self.shortfall == 0
 
 
 @dataclasses.dataclass
@@ -243,3 +279,145 @@ class ExecutionTrace:
     @property
     def all_met(self) -> bool:
         return all(o.met_deadline for o in self.outcomes)
+
+
+# ---------------------------------------------------------------------------
+# Continuous sessions: recurring windows (the paper's Custom Query Scheduler
+# runs continuously; each registered query's window RECURS with some period)
+# ---------------------------------------------------------------------------
+
+
+def window_query_id(base_id: str, window: int) -> str:
+    """Id of window ``window`` of recurring query ``base_id``."""
+    return f"{base_id}{WINDOW_ID_SEP}{window}"
+
+
+def split_window_id(query_id: str) -> Tuple[str, Optional[int]]:
+    """Inverse of ``window_query_id``; (query_id, None) for one-shot ids."""
+    base, sep, tail = query_id.rpartition(WINDOW_ID_SEP)
+    if sep and tail.isdigit():
+        return base, int(tail)
+    return query_id, None
+
+
+@dataclasses.dataclass
+class RecurringQuerySpec:
+    """A recurring intermittent query: ``base``'s window repeated every
+    ``period`` time units.
+
+    ``base`` is window 0 verbatim (its window, arrival shape, cost model and
+    deadline).  Window ``w`` covers ``[wind_start + w*period, wind_end +
+    w*period)`` with the base arrival model time-shifted by ``w*period`` and
+    deadline ``wind_end(w) + deadline_offset`` (defaulting to the base
+    query's own deadline-to-window-end gap).  ``num_windows=None`` recurs
+    open-endedly — the session instantiates windows lazily, so open-ended
+    specs require a run horizon (``Session.run_until``).
+
+    ``truth_factory(w)`` supplies the ACTUAL arrival process of window ``w``
+    (already shifted to the window's absolute time frame); default: predicted
+    == true.  ``true_cost_model`` injects cost drift in simulation: the
+    executor charges it for this query's batches while planners keep seeing
+    the (possibly calibrating) ``base.cost_model``.  ``delete_time`` /
+    ``total_known`` carry the ``DynamicQuerySpec`` semantics through to every
+    instantiated window (a scheduled deletion at an absolute instant; §4.4's
+    unknown-total estimation).
+    """
+
+    base: Query
+    period: float
+    num_windows: Optional[int] = None
+    deadline_offset: Optional[float] = None
+    truth_factory: Optional[Callable[[int], "ArrivalModel"]] = None  # noqa: F821
+    true_cost_model: Optional["CostModelBase"] = None  # noqa: F821
+    num_groups: int = 0
+    delete_time: Optional[float] = None
+    total_known: bool = True
+
+    def __post_init__(self) -> None:
+        if self.period <= 0:
+            raise ValueError(f"period must be positive, got {self.period}")
+        if self.num_windows is not None and self.num_windows < 1:
+            raise ValueError(f"num_windows must be >= 1, got {self.num_windows}")
+        if self.deadline_offset is None:
+            self.deadline_offset = self.base.deadline - self.base.wind_end
+        if self.deadline_offset < 0:
+            raise ValueError("deadline_offset must be >= 0 (deadline before "
+                             "window end is never schedulable)")
+
+    @property
+    def base_id(self) -> str:
+        return self.base.query_id
+
+    def window_start(self, window: int) -> float:
+        return self.base.wind_start + window * self.period
+
+    def window_query(self, window: int,
+                     cost_model: Optional["CostModelBase"] = None) -> Query:  # noqa: F821
+        """Instantiate window ``window`` as a one-shot Query (shifted arrival,
+        per-window deadline, optional cost-model override)."""
+        from .arrivals import ShiftedArrival  # lazy: arrivals is a sibling
+
+        if self.num_windows is not None and window >= self.num_windows:
+            raise IndexError(
+                f"{self.base_id}: window {window} >= num_windows {self.num_windows}"
+            )
+        shift = window * self.period
+        arr = self.base.arrival if shift == 0 else ShiftedArrival(
+            base=self.base.arrival, shift=shift)
+        # A single-window spec IS its base query: keep the base id, so a
+        # session over one-shot submissions is trace-identical to the
+        # one-shot runtime.  Recurring specs suffix every window.
+        qid = (self.base_id if self.num_windows == 1
+               else window_query_id(self.base_id, window))
+        submit = (None if self.base.submit_time is None
+                  else self.base.submit_time + shift)
+        return Query(
+            query_id=qid,
+            wind_start=self.base.wind_start + shift,
+            wind_end=self.base.wind_end + shift,
+            deadline=self.base.wind_end + shift + self.deadline_offset,
+            num_tuples_total=self.base.num_tuples_total,
+            cost_model=self.base.cost_model if cost_model is None else cost_model,
+            arrival=arr,
+            submit_time=submit,
+        )
+
+    def window_truth(self, window: int) -> Optional["ArrivalModel"]:  # noqa: F821
+        return None if self.truth_factory is None else self.truth_factory(window)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionEvent:
+    """One lifecycle event of a long-running session (admissions, window
+    roll-overs, recalibrations) — the session-level analogue of a
+    ``BatchExecution`` row."""
+
+    kind: str   # "submit" | "reject" | "withdraw" | "window_open" |
+    #             "window_close" | "recalibrate"
+    time: float
+    query_id: str = ""
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class SessionTrace(ExecutionTrace):
+    """ExecutionTrace plus the session's own event log.  Per-window outcomes
+    of one recurring query form a series (``outcome_series``)."""
+
+    events: List[SessionEvent] = dataclasses.field(default_factory=list)
+
+    def log(self, kind: str, time: float, query_id: str = "",
+            detail: str = "") -> None:
+        self.events.append(SessionEvent(kind, time, query_id, detail))
+
+    def outcome_series(self, base_id: str) -> List[QueryOutcome]:
+        """Outcomes of every window of ``base_id``, in window order."""
+        rows = []
+        for o in self.outcomes:
+            base, w = split_window_id(o.query_id)
+            if base == base_id:
+                rows.append((0 if w is None else w, o))
+        return [o for _, o in sorted(rows, key=lambda p: p[0])]
+
+    def events_for(self, kind: str) -> List[SessionEvent]:
+        return [e for e in self.events if e.kind == kind]

@@ -35,7 +35,10 @@ from ..core import (
     CostModelBase,
     LinearCostModel,
     Query,
+    RecurringQuerySpec,
     Schedule,
+    Session,
+    SessionTrace,
     TraceArrival,
     fit_piecewise_linear,
 )
@@ -200,6 +203,81 @@ def run_batched(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
     result, agg_s = ex.finalize()
     total = sum(b.seconds for b in ex.batch_log) + agg_s
     return result, total, ex.num_batches
+
+
+def run_session(
+    query: AnalyticsQuery,
+    windows: Sequence[Sequence[Dict[str, np.ndarray]]],
+    window_timestamps: Sequence[Sequence[float]],
+    scale: StreamScale,
+    cost_model: CostModelBase,
+    *,
+    period: Optional[float] = None,
+    deadline_offset: Optional[float] = None,
+    policy: str = "llf-dynamic",
+    calibrate: bool = True,
+    use_kernel: bool = False,
+    **session_kw,
+) -> Tuple[Dict[int, np.ndarray], SessionTrace]:
+    """Session mode over the REAL segagg backend: the paper's continuously
+    running scheduler, one recurring GROUP-BY query, one result per window.
+
+    ``windows[w]`` are window ``w``'s files; ``window_timestamps[w]`` their
+    ACTUAL arrival instants (the per-window truth — predictions come from
+    window 0's trace shifted by ``period``).  Every window must carry the
+    same file count (the recurring spec's shape).  With ``calibrate=True``
+    the scheduler's cost model refits online from measured wall seconds
+    (cost units == seconds, §1/§6.2), so a mis-measured offline model heals
+    while the session runs.
+
+    Returns ({window_index: combined_aggregate}, SessionTrace).
+    """
+    if not windows:
+        raise ValueError("need at least one window")
+    n = len(windows[0])
+    if any(len(w) != n for w in windows):
+        raise ValueError("every window must carry the same file count "
+                         f"(window 0 has {n})")
+    if len(window_timestamps) != len(windows):
+        raise ValueError("windows and window_timestamps must align")
+    base_arr = TraceArrival(timestamps=tuple(window_timestamps[0]))
+    if period is None:
+        period = base_arr.wind_end - base_arr.wind_start or 1.0
+    if deadline_offset is None:
+        deadline_offset = 2.0 * cost_model.cost(n)
+    base = Query(
+        query_id=query.query_id,
+        wind_start=base_arr.wind_start,
+        wind_end=base_arr.wind_end,
+        deadline=base_arr.wind_end + deadline_offset,
+        num_tuples_total=n,
+        cost_model=cost_model,
+        arrival=base_arr,
+    )
+    truths = [TraceArrival(timestamps=tuple(ts)) for ts in window_timestamps]
+    rspec = RecurringQuerySpec(
+        base=base,
+        period=period,
+        num_windows=len(windows),
+        deadline_offset=deadline_offset,
+        truth_factory=lambda w: truths[w],
+        num_groups=query.num_groups(scale),
+    )
+    jobs = {
+        rspec.window_query(w).query_id: (query, list(files))
+        for w, files in enumerate(windows)
+    }
+    executor = AnalyticsRuntimeExecutor(jobs, scale, use_kernel)
+    session = Session(policy=policy, executor=executor, calibrate=calibrate,
+                      **session_kw)
+    session.submit(rspec)
+    trace = session.run()
+    results = {
+        w: executor.results[rspec.window_query(w).query_id]
+        for w in range(len(windows))
+        if rspec.window_query(w).query_id in executor.results
+    }
+    return results, trace
 
 
 def measure_cost_model(query: AnalyticsQuery,

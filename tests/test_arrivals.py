@@ -1,0 +1,168 @@
+"""Arrival-model invariants (satellites of the session PR).
+
+* Boundary semantics at EXACT arrival instants, under the unified
+  module-level tolerance (``repro.core.types.EPS``): a tuple arriving at
+  instant t counts as available AT t for every model.
+* Inverse invariants: ``tuples_available(input_time(k)) >= k`` and
+  monotonicity of both primitives — deterministic cases always run, the
+  hypothesis sweep is gated on availability like ``test_properties.py``.
+"""
+import pytest
+
+from repro.core import (
+    EPS,
+    ConstantRateArrival,
+    ShiftedArrival,
+    TraceArrival,
+    UniformWindowArrival,
+    jittered_trace,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback below still runs
+    HAVE_HYPOTHESIS = False
+
+
+def models(n: int = 10):
+    """One of each arrival family over ~[0, 9]."""
+    const = ConstantRateArrival(wind_start=0.0, rate=1.0, num_tuples_total=n)
+    return {
+        "constant": const,
+        "uniform": UniformWindowArrival(wind_start=0.0, wind_end=float(n - 1),
+                                        num_tuples_total=n),
+        "trace": TraceArrival(timestamps=tuple(float(i) for i in range(n))),
+        "shifted": ShiftedArrival(base=const, shift=7.5),
+        "jittered": jittered_trace(const, seed=3, jitter_frac=0.2,
+                                   rate_scale=0.9),
+    }
+
+
+def check_inverse_invariants(arr):
+    n = arr.num_tuples_total
+    prev_t = float("-inf")
+    for k in range(1, n + 1):
+        t = arr.input_time(k)
+        assert t >= prev_t, f"input_time not monotone at k={k}"
+        prev_t = t
+        # the k-th tuple counts as available AT its own arrival instant
+        assert arr.tuples_available(t) >= k, (k, t)
+    prev_a = -1
+    t0, t1 = arr.wind_start - 1.0, arr.wind_end + 1.0
+    steps = 4 * n
+    for i in range(steps + 1):
+        t = t0 + (t1 - t0) * i / steps
+        a = arr.tuples_available(t)
+        assert a >= prev_a, f"tuples_available not monotone at t={t}"
+        prev_a = a
+    assert arr.tuples_available(arr.wind_start - 1.0) == 0
+    assert arr.tuples_available(arr.wind_end) == n
+
+
+class TestInverseInvariantsDeterministic:
+    @pytest.mark.parametrize("name", sorted(models()))
+    def test_inverse_and_monotone(self, name):
+        check_inverse_invariants(models()[name])
+
+    def test_shifted_is_pure_translation(self):
+        base = ConstantRateArrival(wind_start=0.0, rate=2.0,
+                                   num_tuples_total=12)
+        sh = ShiftedArrival(base=base, shift=5.0)
+        for k in range(0, 13):
+            assert sh.input_time(k) == base.input_time(k) + 5.0
+        for i in range(40):
+            t = i * 0.25
+            assert sh.tuples_available(t + 5.0) == base.tuples_available(t)
+        assert sh.wind_start == 5.0
+        assert sh.num_tuples_total == 12
+
+
+class TestExactArrivalBoundaries:
+    """At t == input_time(k) exactly, the k-th tuple IS available; just
+    below (beyond the unified tolerance) it is not."""
+
+    def test_constant_rate_boundaries(self):
+        arr = ConstantRateArrival(wind_start=1.0, rate=2.0,
+                                  num_tuples_total=10)
+        for k in range(1, 11):
+            t = arr.input_time(k)
+            assert arr.tuples_available(t) == k
+            assert arr.tuples_available(t - 1e-6) == k - 1
+            assert arr.tuples_available(t + EPS) >= k
+
+    def test_uniform_window_boundaries(self):
+        arr = UniformWindowArrival(wind_start=2.0, wind_end=11.0,
+                                   num_tuples_total=10)
+        for k in range(1, 11):
+            t = arr.input_time(k)
+            assert arr.tuples_available(t) == k
+            assert arr.tuples_available(t - 1e-6) == k - 1
+
+    def test_trace_boundaries(self):
+        ts = (0.0, 0.5, 0.5, 2.25, 7.0)
+        arr = TraceArrival(timestamps=ts)
+        assert arr.tuples_available(0.0) == 1
+        assert arr.tuples_available(0.5) == 3   # simultaneous arrivals
+        assert arr.tuples_available(0.5 - 1e-6) == 1
+        assert arr.tuples_available(2.25) == 4
+        assert arr.tuples_available(7.0) == 5
+        assert arr.tuples_available(6.999999) == 4
+
+    def test_paper_worked_example_convention(self):
+        """§3.1: window [1, 10], 1 tuple/s — '8 tuples available by time 8',
+        '6 tuples available from 6'."""
+        arr = ConstantRateArrival(wind_start=1.0, rate=1.0,
+                                  num_tuples_total=10)
+        assert arr.tuples_available(8.0) == 8
+        assert arr.tuples_available(6.0) == 6
+        assert arr.input_time(10) == arr.wind_end == 10.0
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestInverseInvariantsProperty:
+        @given(
+            st.integers(2, 200),
+            st.floats(0.1, 50.0),
+            st.floats(-10.0, 10.0),
+        )
+        @settings(max_examples=100, deadline=None)
+        def test_constant_rate(self, n, rate, start):
+            check_inverse_invariants(
+                ConstantRateArrival(wind_start=start, rate=rate,
+                                    num_tuples_total=n))
+
+        @given(
+            st.integers(1, 200),
+            st.floats(-10.0, 10.0),
+            st.floats(0.1, 100.0),
+        )
+        @settings(max_examples=100, deadline=None)
+        def test_uniform_window(self, n, start, span):
+            check_inverse_invariants(
+                UniformWindowArrival(wind_start=start, wind_end=start + span,
+                                     num_tuples_total=n))
+
+        @given(
+            st.lists(st.floats(0.0, 100.0), min_size=1, max_size=100),
+        )
+        @settings(max_examples=100, deadline=None)
+        def test_trace(self, ts):
+            check_inverse_invariants(
+                TraceArrival(timestamps=tuple(sorted(ts))))
+
+        @given(
+            st.integers(2, 100),
+            st.floats(0.2, 20.0),
+            st.integers(0, 2**16),
+            st.floats(0.0, 0.5),
+            st.floats(0.5, 2.0),
+        )
+        @settings(max_examples=100, deadline=None)
+        def test_jittered_trace(self, n, rate, seed, jitter, scale):
+            base = ConstantRateArrival(wind_start=0.0, rate=rate,
+                                       num_tuples_total=n)
+            check_inverse_invariants(
+                jittered_trace(base, seed=seed, jitter_frac=jitter,
+                               rate_scale=scale))

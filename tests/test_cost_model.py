@@ -5,6 +5,7 @@ and the shared zero-batch convention (cost(0) == per-batch overhead, so the
 import pytest
 
 from repro.core import (
+    CalibratingCostModel,
     LinearCostModel,
     PiecewiseLinearCostModel,
     SublinearCostModel,
@@ -113,3 +114,97 @@ class TestZeroBatchConvention:
             cm = paper_cost_model(qid)
             assert cm.cost(0) > 0.0
             assert cm.tuples_processable(cm.cost(0) / 2) == 0
+
+
+class TestCalibratingCostModel:
+    BASE = LinearCostModel(tuple_cost=0.1, overhead=0.2, agg_per_batch=0.1)
+    TRUE = LinearCostModel(tuple_cost=0.15, overhead=0.3, agg_per_batch=0.15)
+
+    def test_delegates_to_base_before_calibration(self):
+        cal = CalibratingCostModel(self.BASE)
+        for n in (0, 1, 7, 100):
+            assert cal.cost(n) == self.BASE.cost(n)
+        assert cal.agg_cost(5) == self.BASE.agg_cost(5)
+        assert not cal.calibrated
+        assert cal.drift() == 0.0
+
+    def test_auto_refit_converges_to_observed(self):
+        cal = CalibratingCostModel(self.BASE, min_samples=3, refit_every=3)
+        for n in (5, 10, 20, 40):
+            cal.observe(n, self.TRUE.cost(n))
+        assert cal.calibrated and cal.refits >= 1
+        for n in (5, 10, 20, 40):
+            assert cal.cost(n) == pytest.approx(self.TRUE.cost(n), rel=1e-6)
+
+    def test_drift_metric_and_reset_on_refit(self):
+        cal = CalibratingCostModel(self.BASE, min_samples=2,
+                                   refit_every=10**6)
+        cal.observe(10, self.TRUE.cost(10))
+        cal.observe(30, self.TRUE.cost(30))
+        # true = 1.5x fitted everywhere -> relative error 1/3
+        assert cal.drift() == pytest.approx(1.0 / 3.0, rel=1e-3)
+        assert cal.refit_now()
+        assert cal.drift() == 0.0  # errors vs the superseded model cleared
+        cal.observe(20, self.TRUE.cost(20))
+        assert cal.drift() < 0.05  # the refit tracks the true model
+
+    def test_sparse_feedback_preserves_base_shape(self):
+        # Observations at ONE batch size must not extrapolate flat: the
+        # level-corrected base shape keeps cost(1) meaningful (MinBatch
+        # sizing and C_max checks depend on it).
+        cal = CalibratingCostModel(self.BASE, min_samples=2,
+                                   refit_every=10**6)
+        for _ in range(4):
+            cal.observe(5, self.TRUE.cost(5))
+        assert cal.refit_now()
+        assert cal.cost(1) == pytest.approx(self.TRUE.cost(1), rel=0.05)
+        assert cal.cost(20) == pytest.approx(self.TRUE.cost(20), rel=0.05)
+
+    def test_agg_base_preserved_until_agg_feedback(self):
+        cal = CalibratingCostModel(self.BASE, min_samples=2, refit_every=2)
+        for n in (5, 10, 20):
+            cal.observe(n, self.TRUE.cost(n))
+        assert cal.calibrated
+        # no agg feedback yet: the offline agg model must survive the refit
+        assert cal.agg_cost(4) == self.BASE.agg_cost(4)
+        cal.observe_agg(4, self.TRUE.agg_cost(4))
+        assert cal.agg_cost(4) == pytest.approx(self.TRUE.agg_cost(4),
+                                                rel=0.05)
+
+    def test_refit_requires_min_samples(self):
+        cal = CalibratingCostModel(self.BASE, min_samples=4)
+        cal.observe(5, 1.0)
+        assert not cal.refit_now()
+        assert not cal.calibrated
+
+    def test_ignores_degenerate_observations(self):
+        cal = CalibratingCostModel(self.BASE)
+        cal.observe(0, 1.0)
+        cal.observe(-3, 1.0)
+        cal.observe(5, -1.0)
+        cal.observe_agg(1, 0.5)
+        assert cal.num_observations == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="min_samples"):
+            CalibratingCostModel(self.BASE, min_samples=1)
+        with pytest.raises(ValueError, match="refit_every"):
+            CalibratingCostModel(self.BASE, refit_every=0)
+        with pytest.raises(ValueError, match="window"):
+            CalibratingCostModel(self.BASE, window=0)
+        with pytest.raises(ValueError, match="max_samples"):
+            CalibratingCostModel(self.BASE, max_samples=0)
+
+    def test_monotone_after_noisy_feedback(self):
+        # isotonic cleanup (shared with the offline fit) keeps the refit
+        # usable even with noisy, locally-decreasing measurements
+        import random
+
+        rng = random.Random(0)
+        cal = CalibratingCostModel(self.BASE, min_samples=4, refit_every=4)
+        for _ in range(32):
+            n = rng.choice((4, 8, 16, 32))
+            cal.observe(n, self.TRUE.cost(n) * rng.uniform(0.9, 1.1))
+        assert cal.calibrated
+        for n in range(0, 40):
+            assert cal.cost(n + 1) >= cal.cost(n) - 1e-9

@@ -1,8 +1,6 @@
 """Integration tests: real executors driven by the paper's scheduler,
 fault-tolerant checkpointing, and the end-to-end training driver."""
 import dataclasses
-import pathlib
-import subprocess
 import sys
 
 import jax
@@ -10,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Query, Strategy, TraceArrival, UniformWindowArrival, schedule_single
+from repro.core import Planner, Query, Strategy, TraceArrival, UniformWindowArrival
 from repro.data.tpch import PAPER_QUERIES, StreamScale, stream_files
 from repro.serve.analytics import (
     AnalyticsExecutor,
@@ -54,7 +52,7 @@ class TestAnalyticsExecutor:
         arr = TraceArrival(timestamps=tuple(times))
         q = Query("it", arr.wind_start, arr.wind_end,
                   arr.wind_end + 1.5 * cm.cost(48), 48, cm, arr)
-        plan = schedule_single(q)
+        plan = Planner(policy="single").schedule(q)
         result, log, agg_s = run_plan(query, files, plan, SCALE)
         oneshot, _, _ = run_batched(query, files, 48, SCALE)
         np.testing.assert_allclose(result, oneshot, rtol=1e-5)
@@ -77,6 +75,31 @@ class TestAnalyticsExecutor:
             ex.process_batch(batch)
         after = _segagg_ref_jit._cache_size()
         assert after - before <= 1  # ONE new entry at most, not one per executor
+
+    def test_recurring_session_real_backend(self):
+        """Session mode over real segagg batches: per-window results equal
+        the one-shot reference, wall-second feedback calibrates the model."""
+        from repro.core import LinearCostModel
+        from repro.serve.analytics import run_session
+
+        aq = PAPER_QUERIES[1]  # CQ2: 5 groups
+        nw, nf = 2, 6
+        windows, wts = [], []
+        for w in range(nw):
+            files, times = _files(aq.stream, nf, seed=10 + w)
+            windows.append(files)
+            wts.append([t + w * 10.0 for t in times])
+        cm = LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2)
+        results, trace = run_session(aq, windows, wts, SCALE, cm,
+                                     period=10.0, calibrate=True)
+        assert sorted(results) == [0, 1]
+        for w in range(nw):
+            ref, _, _ = run_batched(aq, windows[w], nf, SCALE)
+            np.testing.assert_allclose(results[w], ref, rtol=1e-5)
+        series = trace.outcome_series(aq.query_id)
+        assert [o.complete for o in series] == [True, True]
+        kinds = [e.kind for e in trace.events]
+        assert kinds.count("window_open") == nw
 
     def test_straggler_requeue_real_backend(self):
         """C_max straggler re-queue on a REAL backend: a slow ``_execute``
@@ -182,6 +205,41 @@ class TestServingEngine:
             got = np.concatenate(j.results)
             assert got.shape == (j.num_requests, cfg.vocab_size)
             assert np.all(np.isfinite(got))
+
+    def test_serve_session_online_admission(self):
+        """Jobs join the continuously running engine one by one; every
+        admitted request is served; the session clock carries over."""
+        from repro.core import LinearCostModel, UniformWindowArrival
+        from repro.models.base import get_config
+        from repro.models.lm import build_specs
+        from repro.models.params import init_params
+        from repro.serve.engine import (
+            PrefillExecutor, WindowJob, serve_session)
+
+        cfg = dataclasses.replace(get_config("yi_6b").reduced(),
+                                  vocab_size=128)
+        params = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+        ex = PrefillExecutor(cfg, params, buckets=(1, 2, 4, 8))
+        cm = LinearCostModel(tuple_cost=0.02, overhead=0.05)
+        rng = np.random.default_rng(0)
+        jobs = [
+            WindowJob(job_id=f"j{i}",
+                      prompts=rng.integers(0, cfg.vocab_size, (n, 8)).astype(
+                          np.int32),
+                      arrival=UniformWindowArrival(i * 2.0, i * 2.0 + 10.0, n),
+                      deadline=i * 2.0 + 10.0 + 3.0 * cm.cost(n))
+            for i, n in enumerate((5, 7))
+        ]
+        report, session = serve_session(jobs, ex, cm, policy="llf-dynamic",
+                                        c_max=2.0)
+        for j in jobs:
+            row = report[j.job_id]
+            assert row["admitted"] and row["completed"]
+            assert row["processed"] == j.num_requests
+            assert row["shortfall"] == 0
+            got = np.concatenate(j.results)
+            assert got.shape == (j.num_requests, cfg.vocab_size)
+        assert session.now >= max(r["completion"] for r in report.values())
 
     def test_oversized_batch_split_into_bucket_sized_subbatches(self):
         """Regression: n above the largest bucket used to crash run_batch

@@ -14,16 +14,17 @@ from repro.core import (
     InfeasibleDeadline,
     LinearCostModel,
     Query,
+    SimulatedExecutor,
     Strategy,
     SublinearCostModel,
-    brute_force_optimal,
     find_min_batch_size,
     plan_cost,
-    schedule_dynamic,
-    schedule_single,
-    schedule_via_constraints,
+    run,
     validate_schedule,
 )
+from repro.core.policies.constraint import brute_force_search, plan_via_constraints
+from repro.core.policies.dynamic import policy_for_strategy
+from repro.core.policies.single import plan_single
 
 linear_models = st.builds(
     LinearCostModel,
@@ -67,7 +68,7 @@ class TestAlgorithm1Properties:
     @given(feasible_linear_queries())
     @settings(max_examples=150, deadline=None)
     def test_feasible_always_schedules_single_batch(self, q):
-        plan = schedule_single(q)
+        plan = plan_single(q)
         assert plan.num_batches == 1
         validate_schedule(q, plan)
 
@@ -75,7 +76,7 @@ class TestAlgorithm1Properties:
     @settings(max_examples=300, deadline=None)
     def test_plans_valid_or_infeasible(self, q):
         try:
-            plan = schedule_single(q)
+            plan = plan_single(q)
         except InfeasibleDeadline:
             return
         validate_schedule(q, plan)
@@ -87,12 +88,12 @@ class TestAlgorithm1Properties:
         (== minimum cost under Eq. 1) that any in-order schedule can."""
         assume(q.num_tuples_total <= 25)
         try:
-            plan = schedule_single(q)
+            plan = plan_single(q)
         except InfeasibleDeadline:
-            assert brute_force_optimal(q, max_batches=3) is None or True
+            assert brute_force_search(q, max_batches=3) is None or True
             return
         assume(plan.num_batches <= 4)
-        bf = brute_force_optimal(q, max_batches=min(plan.num_batches, 4))
+        bf = brute_force_search(q, max_batches=min(plan.num_batches, 4))
         assert bf is not None, "Alg1 found a plan brute force missed"
         assert bf[0] == plan.num_batches
 
@@ -101,11 +102,11 @@ class TestAlgorithm1Properties:
     def test_constraint_solver_agrees(self, q):
         """§3.2: both methods give the same #batches on linear models."""
         try:
-            a1 = schedule_single(q)
+            a1 = plan_single(q)
         except InfeasibleDeadline:
             a1 = None
         try:
-            cs = schedule_via_constraints(q, max_batches=64)
+            cs = plan_via_constraints(q, max_batches=64)
         except InfeasibleDeadline:
             cs = None
         if a1 is None or cs is None:
@@ -123,10 +124,10 @@ class TestAlgorithm1Properties:
         tight_deadline = q.wind_end + (q.deadline - q.wind_end) * shrink
         qt = dataclasses.replace(q, deadline=tight_deadline)
         try:
-            pt = schedule_single(qt)
+            pt = plan_single(qt)
         except InfeasibleDeadline:
             return
-        pl = schedule_single(q)
+        pl = plan_single(q)
         assert plan_cost(qt, pt) >= plan_cost(q, pl) - 1e-9
 
 
@@ -181,7 +182,8 @@ class TestDynamicProperties:
             truth = jittered_trace(arr, seed=seed + i, jitter_frac=0.2,
                                    rate_scale=0.8 + (seed % 5) * 0.1)
             specs.append(DynamicQuerySpec(query=q, truth=truth))
-        trace = schedule_dynamic(specs, strategy, delta_rsf=0.5, c_max=10.0)
+        trace = run(policy_for_strategy(strategy, delta_rsf=0.5, c_max=10.0),
+                    specs, SimulatedExecutor())
         # conservation
         for s in specs:
             done = sum(e.num_tuples for e in trace.executions

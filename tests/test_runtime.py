@@ -171,6 +171,49 @@ class TestExecutePlan:
                    if e.kind == "batch")
         assert done == 6
 
+    def test_shortfall_recorded_when_truth_underdelivers(self):
+        # Regression for the silent-drop path: when the discrete-event jump
+        # breaks out with pending tuples that will never arrive, the outcome
+        # must record the shortfall instead of posing as a completion.
+        q = fixed_query(deadline_slack=0.6)
+        plan = Planner(policy="single").schedule(q)
+        truth = TraceArrival(timestamps=TIMESTAMPS[:6])
+        out = execute_plan(q, plan, truth=truth).outcome(q.query_id)
+        assert out.tuples_processed == 6
+        assert out.num_tuples_total == N_TUPLES
+        assert out.shortfall == 2
+        assert not out.complete
+
+    def test_complete_outcome_has_no_shortfall(self):
+        q = fixed_query()
+        out = Planner(policy="single").run([q]).outcome(q.query_id)
+        assert out.tuples_processed == N_TUPLES
+        assert out.num_tuples_total == N_TUPLES
+        assert out.shortfall == 0 and out.complete
+
+    def test_dynamic_loop_records_shortfall(self):
+        q = fixed_query(deadline_slack=5.0)
+        truth = TraceArrival(timestamps=TIMESTAMPS[:6])
+        policy = get_policy("llf-dynamic", delta_rsf=0.5, c_max=30.0)
+        trace = run(policy, [DynamicQuerySpec(query=q, truth=truth)],
+                    SimulatedExecutor())
+        out = trace.outcome(q.query_id)
+        assert out.tuples_processed == 6
+        assert out.shortfall == 2 and not out.complete
+
+    def test_carryover_keeps_clock(self):
+        # carryover=True must never rewind a continuous session timeline.
+        q = fixed_query()
+        plan = Planner(policy="single").schedule(q)
+        ex = SimulatedExecutor()
+        ex.reset(50.0)  # session clock is already past the window
+        trace = execute_plan(q, plan, ex, carryover=True)
+        assert min(e.start for e in trace.executions) >= 50.0
+        ex2 = SimulatedExecutor()
+        ex2.reset(50.0)
+        trace2 = execute_plan(q, plan, ex2)  # default: rewinds to submit
+        assert min(e.start for e in trace2.executions) < 50.0
+
     def test_adaptive_absorbs_faster_arrivals(self):
         # Truth arrives 2x faster than predicted: the adaptive loop finishes
         # earlier than the plan's last point, never later.

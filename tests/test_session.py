@@ -1,0 +1,496 @@
+"""Continuous-session tests.
+
+Headline property (ISSUE acceptance): a Session running the same workload
+as one-shot ``Planner.run`` calls — single window, no drift, no admissions —
+is TRACE-IDENTICAL to the plain runtime for all 9 registered policies.  On
+top of that: recurring windows with carried-over clocks, online admission
+(pre-flight gated) and withdrawal, and drift-triggered cost recalibration.
+"""
+import math
+
+import pytest
+
+from repro.core import (
+    CalibratingCostModel,
+    ConstantRateArrival,
+    LinearCostModel,
+    OracleCostExecutor,
+    Planner,
+    Query,
+    RecurringQuerySpec,
+    Session,
+    TraceArrival,
+    get_policy,
+    list_policies,
+    split_window_id,
+    window_query_id,
+)
+from repro.core.policies.dynamic import LLFPolicy
+
+N_TUPLES = 8
+
+
+def fixed_query(qid: str = "q0", start: float = 0.0, slack: float = 3.0,
+                rate: float = 1.0, n: int = N_TUPLES) -> Query:
+    arr = ConstantRateArrival(wind_start=start, rate=rate, num_tuples_total=n)
+    cm = LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2)
+    return Query(qid, start, arr.wind_end, arr.wind_end + slack * cm.cost(n),
+                 n, cm, arr)
+
+
+def drift_pair(n: int = 40, rate: float = 2.0):
+    """(base query, true 1.5x cost model): deadline tight enough to force
+    batching under the fitted model."""
+    cm_fit = LinearCostModel(tuple_cost=0.1, overhead=0.2, agg_per_batch=0.1)
+    cm_true = LinearCostModel(tuple_cost=0.15, overhead=0.3,
+                              agg_per_batch=0.15)
+    arr = ConstantRateArrival(wind_start=0.0, rate=rate, num_tuples_total=n)
+    deadline = arr.wind_end + 0.5 * cm_fit.cost(n)
+    return Query("d", 0.0, arr.wind_end, deadline, n, cm_fit, arr), cm_true
+
+
+class TestOneShotParity:
+    """Session == Planner.run when sessions degenerate to one-shot windows."""
+
+    @pytest.mark.parametrize("policy_name", sorted(list_policies()))
+    def test_single_query_trace_identical(self, policy_name):
+        base = Planner(policy=policy_name).run([fixed_query()])
+        session = Session(policy=policy_name)
+        assert session.submit(fixed_query()).admitted
+        trace = session.run()
+        assert trace.executions == base.executions
+        assert trace.outcomes == base.outcomes
+
+    @pytest.mark.parametrize("policy_name",
+                             ["llf-dynamic", "edf-dynamic", "sjf-dynamic",
+                              "rr-dynamic"])
+    def test_overlapping_multi_query_trace_identical(self, policy_name):
+        """Dynamic policies: three CONCURRENT one-shot queries time-share
+        the session executor exactly like the fixed-workload loop."""
+        def queries():
+            return [fixed_query(f"q{i}", start=float(i), slack=5.0)
+                    for i in range(3)]
+
+        base = Planner(policy=policy_name).run(queries())
+        session = Session(policy=policy_name)
+        for q in queries():
+            assert session.submit(q).admitted
+        trace = session.run()
+        assert trace.executions == base.executions
+        assert trace.outcomes == base.outcomes
+
+    @pytest.mark.parametrize("policy_name", sorted(
+        n for n in list_policies()
+        if getattr(get_policy(n), "kind", "static") == "static"))
+    def test_spaced_multi_query_trace_identical(self, policy_name):
+        """Static policies: windows spaced so each plan drains before the
+        next submit — the carried-over session clock then coincides with
+        the one-shot per-query timelines."""
+        def queries():
+            return [fixed_query(f"q{i}", start=40.0 * i) for i in range(3)]
+
+        base = Planner(policy=policy_name).run(queries())
+        session = Session(policy=policy_name)
+        for q in queries():
+            assert session.submit(q).admitted
+        trace = session.run()
+        assert trace.executions == base.executions
+        assert trace.outcomes == base.outcomes
+
+    @pytest.mark.parametrize("policy_name", ["single", "llf-dynamic"])
+    def test_submit_time_preserved(self, policy_name):
+        # A query submitted to the system after its window starts (§4) must
+        # behave identically under a session: submit_time survives the
+        # per-window Query instantiation.
+        import dataclasses
+
+        def q():
+            return dataclasses.replace(fixed_query("late", slack=5.0),
+                                       submit_time=5.0)
+
+        base = Planner(policy=policy_name).run([q()])
+        session = Session(policy=policy_name)
+        session.submit(q())
+        trace = session.run()
+        assert trace.executions == base.executions
+        assert trace.outcomes == base.outcomes
+        assert min(e.start for e in trace.executions) >= 5.0
+
+    def test_pool_session_matches_pool_run(self):
+        def queries():
+            return [fixed_query(f"q{i}", slack=5.0) for i in range(4)]
+
+        base = Planner(policy="llf-dynamic").run(queries(), workers=2)
+        session = Session(policy="llf-dynamic", workers=2)
+        for q in queries():
+            session.submit(q)
+        trace = session.run()
+        assert trace.executions == base.executions
+        assert trace.outcomes == base.outcomes
+
+
+class TestRecurrence:
+    def test_windows_roll_over_with_carried_clocks(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=3))
+        trace = session.run()
+        series = trace.outcome_series("r")
+        assert [o.query_id for o in series] == [
+            window_query_id("r", w) for w in range(3)
+        ]
+        assert all(o.met_deadline for o in series)
+        # one continuous timeline: completions strictly increase and the
+        # second window's first batch starts no earlier than window 1 opens
+        comps = [o.completion_time for o in series]
+        assert comps == sorted(comps)
+        w1_rows = [e for e in trace.executions
+                   if e.query_id == window_query_id("r", 1)]
+        assert min(e.start for e in w1_rows) >= 30.0
+
+    def test_infeasible_static_window_counts_as_miss(self):
+        # A window whose plan is infeasible must surface as a missed,
+        # fully-short outcome — not silently vanish from the series.
+        import dataclasses
+
+        base = fixed_query("r")
+        tight = dataclasses.replace(base, deadline=base.wind_end + 1e-3)
+        session = Session(policy="single")
+        session.submit(RecurringQuerySpec(base=tight, period=30.0,
+                                          num_windows=2), force=True)
+        trace = session.run()
+        series = trace.outcome_series("r")
+        assert len(series) == 2
+        for o in series:
+            assert not o.met_deadline
+            assert o.num_batches == 0 and o.shortfall == N_TUPLES
+        assert trace.events_for("window_infeasible")
+
+    def test_static_policy_windows(self):
+        session = Session(policy="single")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=3))
+        trace = session.run()
+        assert len(trace.outcome_series("r")) == 3
+        assert trace.all_met
+
+    def test_open_ended_requires_horizon(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=None))
+        with pytest.raises(ValueError, match="open-ended"):
+            session.run()
+        session.run_until(95.0)
+        # windows at 0/30/60 completed; lazy instantiation didn't run ahead
+        done = {split_window_id(o.query_id)[1] for o in trace_outcomes(session)}
+        assert done >= {0, 1, 2}
+
+    def test_run_until_is_resumable_and_monotone(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=4))
+        session.run_until(45.0)
+        t1 = session.now
+        n1 = len(session.trace.outcomes)
+        session.run_until(45.0)  # idempotent at the same horizon
+        assert session.now == t1
+        assert len(session.trace.outcomes) == n1
+        session.run_until(200.0)
+        assert session.now >= t1
+        assert len(session.trace.outcomes) == 4
+
+    def test_window_events_logged(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=2))
+        trace = session.run()
+        kinds = [e.kind for e in trace.events]
+        assert kinds.count("window_open") == 2
+        assert kinds.count("window_close") == 2
+        assert kinds[0] == "submit"
+
+    def test_recurring_spec_validation(self):
+        with pytest.raises(ValueError, match="period"):
+            RecurringQuerySpec(base=fixed_query(), period=0.0)
+        with pytest.raises(ValueError, match="num_windows"):
+            RecurringQuerySpec(base=fixed_query(), period=1.0, num_windows=0)
+        spec = RecurringQuerySpec(base=fixed_query(), period=5.0,
+                                  num_windows=2)
+        with pytest.raises(IndexError):
+            spec.window_query(2)
+
+
+def trace_outcomes(session):
+    return session.trace.outcomes
+
+
+class TestAdmission:
+    def test_infeasible_submission_rejected_with_reasons(self):
+        session = Session(policy="llf-dynamic")
+        arr = ConstantRateArrival(wind_start=0.0, rate=1.0,
+                                  num_tuples_total=20)
+        hopeless = Query("bad", 0.0, arr.wind_end, arr.wind_end + 0.1, 20,
+                         LinearCostModel(tuple_cost=2.0, overhead=5.0), arr)
+        res = session.submit(hopeless)
+        assert not res.admitted and not res
+        assert res.report.reasons
+        assert [e.kind for e in session.trace.events] == ["reject"]
+        # force= overrides the gate (misses become a measured outcome)
+        assert session.submit(hopeless, force=True).admitted
+
+    def test_mid_run_admission_between_batches(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("a"), period=30.0,
+                                          num_windows=3))
+        session.run_until(40.0)
+        res = session.submit(fixed_query("b", start=45.0, slack=5.0))
+        assert res.admitted
+        trace = session.run()
+        assert trace.outcome("b").met_deadline
+        assert len(trace.outcome_series("a")) == 3
+        # admission was logged at the session clock, not window time
+        sub = [e for e in trace.events if e.kind == "submit"
+               and e.query_id == "b"]
+        assert sub and sub[0].time >= 40.0
+
+    def test_duplicate_live_id_rejected(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(fixed_query("a"))
+        with pytest.raises(ValueError, match="already used"):
+            session.submit(fixed_query("a"))
+
+    def test_window_namespace_collision_rejected(self):
+        session = Session(policy="llf-dynamic")
+        with pytest.raises(ValueError, match="per-window id namespace"):
+            session.submit(fixed_query("load#w2"))
+        session.submit(fixed_query("load#windmill"))  # not a window suffix
+
+    def test_dynamic_spec_delete_time_preserved(self):
+        # Planner.run deletes the spec at t=4; a Session must do the same.
+        from repro.core import DynamicQuerySpec
+
+        def spec():
+            return DynamicQuerySpec(query=fixed_query("a", slack=5.0),
+                                    delete_time=4.0)
+
+        base = Planner(policy="llf-dynamic").run([spec()])
+        session = Session(policy="llf-dynamic")
+        session.submit(spec())
+        trace = session.run()
+        assert trace.executions == base.executions
+        assert trace.outcomes == base.outcomes
+        assert not trace.outcomes  # deleted mid-window: never completes
+
+    def test_admission_event_reaches_policy(self):
+        seen = []
+
+        class Recorder(LLFPolicy):
+            def replan(self, event, state):
+                seen.append(event.kind)
+                return super().replan(event, state)
+
+        session = Session(policy=Recorder())
+        session.submit(fixed_query("a"))
+        session.run()
+        assert "admission" in seen
+
+
+class TestWithdrawal:
+    def test_withdraw_stops_future_windows(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=10))
+        session.run_until(40.0)
+        session.withdraw("r")
+        trace = session.run()
+        windows = {split_window_id(o.query_id)[1]
+                   for o in trace.outcome_series("r")}
+        assert max(windows) <= 2
+        assert [e.kind for e in trace.events][-1] != "window_open" or True
+        assert any(e.kind == "withdraw" for e in trace.events)
+        # nothing of r executes after the withdrawal instant + its last batch
+        last = max((e.end for e in trace.executions), default=0.0)
+        assert last <= 45.0
+
+    def test_withdrawn_id_cannot_be_resubmitted(self):
+        # A second incarnation would re-mint the same per-window ids and
+        # corrupt first-match-by-id runtime/trace lookups.
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=4))
+        session.run_until(10.0)
+        session.withdraw("r")
+        with pytest.raises(ValueError, match="already used"):
+            session.submit(fixed_query("r"))
+
+    def test_on_withdraw_hook_called(self):
+        calls = []
+
+        class Recorder(LLFPolicy):
+            def on_withdraw(self, rt, now):
+                calls.append((rt.q.query_id, now))
+
+        session = Session(policy=Recorder())
+        session.submit(RecurringQuerySpec(base=fixed_query("r", slack=5.0),
+                                          period=30.0, num_windows=4))
+        session.run_until(35.0)
+        session.withdraw("r")
+        session.run_until(70.0)
+        assert calls, "policy.on_withdraw never invoked"
+
+
+class TestCalibration:
+    def test_static_model_misses_calibrating_meets(self):
+        """The ISSUE acceptance demo in miniature: true cost 1.5x fitted."""
+        results = {}
+        for calibrate in (False, True):
+            base, cm_true = drift_pair()
+            spec = RecurringQuerySpec(base=base, period=60.0, num_windows=4,
+                                      true_cost_model=cm_true)
+            session = Session(policy="single", calibrate=calibrate,
+                              drift_threshold=0.2, min_samples=2,
+                              refit_every=1_000_000)
+            assert session.submit(spec).admitted
+            trace = session.run()
+            results[calibrate] = trace.outcome_series("d")
+        stale = [o.met_deadline for o in results[False]]
+        calibrated = [o.met_deadline for o in results[True]]
+        assert stale == [False, False, False, False]
+        assert calibrated[0] is False       # window 0 pays for discovery
+        assert all(calibrated[1:]), calibrated
+
+    def test_recalibrate_event_and_drift_reset(self):
+        base, cm_true = drift_pair()
+        spec = RecurringQuerySpec(base=base, period=60.0, num_windows=2,
+                                  true_cost_model=cm_true)
+        session = Session(policy="single", calibrate=True,
+                          drift_threshold=0.2, min_samples=2,
+                          refit_every=1_000_000)
+        session.submit(spec)
+        trace = session.run()
+        recals = trace.events_for("recalibrate")
+        assert recals and "drift=" in recals[0].detail
+        cal = session.calibrator("d")
+        assert cal.refits >= 1
+        assert cal.drift() < 0.2  # post-refit predictions track the oracle
+
+    def test_dynamic_policy_minbatch_resized(self):
+        base, cm_true = drift_pair()
+        c_max = base.cost_model.cost(5)  # quantum == fitted 5-tuple batch
+        sizes = []
+
+        class Recorder(LLFPolicy):
+            def on_recalibrate(self, rt, now):
+                before = rt.min_batch
+                super().on_recalibrate(rt, now)
+                sizes.append((before, rt.min_batch))
+
+        spec = RecurringQuerySpec(base=base, period=60.0, num_windows=3,
+                                  true_cost_model=cm_true)
+        session = Session(policy=Recorder(delta_rsf=0.5, c_max=c_max),
+                          calibrate=True, drift_threshold=0.2,
+                          min_samples=2, refit_every=1_000_000)
+        session.submit(spec)
+        session.run()
+        assert sizes, "on_recalibrate never invoked"
+        assert any(after < before for before, after in sizes), (
+            "1.5x true costs must shrink the C_max-capped MinBatch"
+        )
+
+    def test_oracle_executor_charges_true_costs(self):
+        base, cm_true = drift_pair(n=10)
+        ex = OracleCostExecutor({"d": cm_true})
+        session = Session(policy="llf-dynamic", executor=ex)
+        session.submit(base)
+        trace = session.run()
+        batch = next(e for e in trace.executions if e.kind == "batch")
+        assert batch.end - batch.start == pytest.approx(
+            cm_true.cost(batch.num_tuples))
+
+    def test_calibrator_shared_across_windows(self):
+        base, cm_true = drift_pair()
+        spec = RecurringQuerySpec(base=base, period=60.0, num_windows=2,
+                                  true_cost_model=cm_true)
+        session = Session(policy="llf-dynamic", calibrate=True,
+                          min_samples=2)
+        session.submit(spec)
+        session.run()
+        cal = session.calibrator("d")
+        assert isinstance(cal, CalibratingCostModel)
+        assert cal.num_observations > 0
+        # both windows fed the SAME calibrator
+        w0 = sum(1 for e in session.trace.executions
+                 if split_window_id(e.query_id)[1] == 0 and e.kind == "batch")
+        assert cal.num_observations > w0
+
+    def test_true_cost_model_requires_oracle_backend(self):
+        from repro.core import SimulatedExecutor
+
+        base, cm_true = drift_pair()
+        session = Session(policy="llf-dynamic", executor=SimulatedExecutor())
+        with pytest.raises(TypeError, match="OracleCostExecutor"):
+            session.submit(RecurringQuerySpec(base=base, period=60.0,
+                                              num_windows=1,
+                                              true_cost_model=cm_true))
+
+
+class TestSessionShortfall:
+    def test_underdelivering_truth_flagged_per_window(self):
+        ts = tuple(float(i) for i in range(N_TUPLES))
+        base = fixed_query("r")
+        spec = RecurringQuerySpec(
+            base=base, period=30.0, num_windows=2,
+            truth_factory=lambda w: TraceArrival(
+                timestamps=tuple(t + 30.0 * w for t in ts[:6])),
+        )
+        session = Session(policy="llf-dynamic")
+        session.submit(spec)
+        trace = session.run()
+        for o in trace.outcome_series("r"):
+            assert o.tuples_processed == 6
+            assert o.num_tuples_total == N_TUPLES
+            assert o.shortfall == 2
+            assert not o.complete
+
+
+class TestSessionMisc:
+    def test_now_advances_without_work(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(fixed_query("a"))
+        session.run_until(500.0)
+        assert session.now >= 100.0  # idled forward past the drained work
+
+    def test_session_repr_and_live_ids(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(fixed_query("a"))
+        assert session.live_ids == ["a"]
+        assert "Session" in repr(session)
+
+    def test_c_max_kwarg_reaches_policy_sizing(self):
+        # Session(c_max=x) must size MinBatch with x, exactly like
+        # Planner(policy=name, c_max=x) — not the policy's default 30.0.
+        session = Session(policy="llf-dynamic", c_max=2.0)
+        assert session.policy.c_max == 2.0
+        base = Planner(policy="llf-dynamic", c_max=2.0).run([fixed_query()])
+        session.submit(fixed_query())
+        trace = session.run()
+        assert trace.executions == base.executions
+
+    def test_submit_rejects_unknown_type(self):
+        session = Session(policy="llf-dynamic")
+        with pytest.raises(TypeError):
+            session.submit(42)
+
+    def test_run_respects_max_steps(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=50))
+        with pytest.raises(RuntimeError, match="steps"):
+            session.run(max_steps=5)
+
+    def test_infinite_horizon_guard_allows_bounded(self):
+        session = Session(policy="llf-dynamic")
+        session.submit(RecurringQuerySpec(base=fixed_query("r"), period=30.0,
+                                          num_windows=2))
+        trace = session.run_until(math.inf)
+        assert len(trace.outcome_series("r")) == 2
