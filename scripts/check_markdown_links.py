@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the CI docs job.
+
+Scans the given files/directories for ``.md`` files, extracts inline links
+and images (``[text](target)`` / ``![alt](target)``), and verifies that
+every RELATIVE target resolves to an existing file or directory.  External
+schemes (http/https/mailto) are skipped — CI runs offline — and pure
+in-page anchors (``#section``) are skipped too; a ``file.md#anchor`` target
+is checked for the file part.
+
+    python scripts/check_markdown_links.py README.md docs
+
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# Inline links/images; deliberately simple — fenced code blocks are stripped
+# first so `[x](y)` inside code samples is not treated as a link.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"```.*?```", re.S)
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(paths: list[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in map(pathlib.Path, paths):
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def broken_links(md: pathlib.Path) -> list[str]:
+    text = _FENCE.sub("", md.read_text(encoding="utf-8"))
+    bad = []
+    for target in _LINK.findall(text):
+        if target.startswith(_SKIP_PREFIXES):
+            continue
+        file_part = target.split("#", 1)[0]
+        if not file_part:
+            continue
+        if not (md.parent / file_part).exists():
+            bad.append(target)
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    files = md_files(paths)
+    if not files:
+        print(f"no markdown files under {paths}", file=sys.stderr)
+        return 1
+    failures = 0
+    for md in files:
+        for target in broken_links(md):
+            print(f"{md}: broken link -> {target}", file=sys.stderr)
+            failures += 1
+    print(f"checked {len(files)} markdown files: "
+          f"{failures or 'no'} broken link{'s' if failures != 1 else ''}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

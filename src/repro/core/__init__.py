@@ -26,6 +26,13 @@ around three first-class pieces:
   execution feedback (``CalibratingCostModel``), replanning future windows
   when drift crosses the threshold (docs/API.md "Sessions & recurring
   queries").
+* **Pane sharing** — opt-in shared execution for overlapping windows over
+  a common stream (``repro.core.panes``): windows decompose into GCD-width
+  panes, partial aggregates are computed once into a reference-counted
+  ``PaneStore`` and fanned out to every subscriber at merge cost, and the
+  amortized ``SharedCostModel`` makes the cheaper shared cost visible to
+  every policy and to ``admission_check`` (``Planner.run(share=True)``,
+  ``Session(sharing=True)``, ``run_shared`` — docs/API.md "Pane sharing").
 
 Pure-Python/numpy and executor-agnostic; the legacy ``schedule_*`` free
 functions remain as deprecation shims (see docs/API.md for the migration
@@ -54,24 +61,30 @@ from .cost_model import (
     CostModelBase,
     LinearCostModel,
     PiecewiseLinearCostModel,
+    SharedCostModel,
     SublinearCostModel,
     fit_piecewise_linear,
 )
 from .session import AdmissionResult, SessionRuntime
-from .constraints import (
-    brute_force_optimal,
-    feasible_assignment,
-    schedule_via_constraints,
-)
+# Canonical homes only below: the legacy shim modules (constraints,
+# single_query, multi_query) are imported LAST, purely for the deprecated
+# schedule_* names — canonical symbols never route through them.
+from .policies.constraint import feasible_assignment
 from .minbatch import find_min_batch_size
-from .multi_query import (
-    LARGE_NUMBER,
-    DynamicQuerySpec,
-    schedule_dynamic,
+from .panes import (
+    PaneStats,
+    PaneStore,
+    SharedBook,
+    pane_width,
+    run_shared,
+    share_workload,
 )
+from .plans import plan_cost, validate_schedule
 from .runtime import (
+    LARGE_NUMBER,
     BaseExecutor,
     DynamicLoopCore,
+    DynamicQuerySpec,
     ExecutorPool,
     OracleCostExecutor,
     QueryRuntime,
@@ -94,14 +107,6 @@ from .simulator import (
     one_shot_trace,
     staggered_deadlines,
 )
-from .single_query import (
-    execute_single,
-    plan_cost,
-    schedule_single,
-    schedule_with_agg_cost,
-    schedule_without_agg_cost,
-    validate_schedule,
-)
 from .types import (
     EPS,
     Batch,
@@ -110,6 +115,7 @@ from .types import (
     ExecutionTrace,
     InfeasibleDeadline,
     Plan,
+    PaneSpec,
     PolicyDecision,
     Query,
     QueryOutcome,
@@ -120,6 +126,17 @@ from .types import (
     Strategy,
     split_window_id,
     window_query_id,
+)
+
+# Legacy deprecation shims (docs/API.md migration table) — imported last so
+# nothing canonical depends on these modules.
+from .constraints import brute_force_optimal, schedule_via_constraints
+from .multi_query import schedule_dynamic
+from .single_query import (
+    execute_single,
+    schedule_single,
+    schedule_with_agg_cost,
+    schedule_without_agg_cost,
 )
 
 __all__ = [
@@ -144,6 +161,9 @@ __all__ = [
     "LinearCostModel",
     "MemoryModel",
     "OracleCostExecutor",
+    "PaneSpec",
+    "PaneStats",
+    "PaneStore",
     "PiecewiseLinearCostModel",
     "Plan",
     "Planner",
@@ -160,6 +180,8 @@ __all__ = [
     "SessionEvent",
     "SessionRuntime",
     "SessionTrace",
+    "SharedBook",
+    "SharedCostModel",
     "SimulatedExecutor",
     "Strategy",
     "SublinearCostModel",
@@ -181,10 +203,13 @@ __all__ = [
     "micro_batch_trace",
     "min_post_window_work",
     "one_shot_trace",
+    "pane_width",
     "plan_cost",
     "post_window_condition",
     "register_policy",
     "run",
+    "run_shared",
+    "share_workload",
     "schedule_dynamic",
     "schedule_single",
     "schedule_via_constraints",

@@ -229,6 +229,7 @@ class Planner:
 
     @property
     def name(self) -> str:
+        """Canonical registry name of the wrapped policy."""
         return self.policy.name
 
     def plan(
@@ -237,6 +238,10 @@ class Planner:
         cost_model: Optional[CostModelBase] = None,
         now: float = 0.0,
     ) -> Plan:
+        """Static ``Plan`` for ``queries`` under the wrapped policy (the
+        PREDICTED arrival models; dynamic policies return their
+        deterministic projection).  ``cost_model`` overrides every query's
+        own model when given."""
         return self.policy.plan(queries, cost_model=cost_model, now=now)
 
     def schedule(self, query: Query, **kw) -> Schedule:
@@ -249,17 +254,40 @@ class Planner:
         executor: Optional[Executor] = None,
         *,
         workers: Optional[int] = None,
+        share: bool = False,
+        pane_tuples: Optional[int] = None,
         **runtime_kw,
     ) -> ExecutionTrace:
         """Execute ``workload`` (Queries or DynamicQuerySpecs) end to end
         through the shared runtime loop; simulates when no executor given.
 
         ``workers=W`` wraps ``executor`` in an ``ExecutorPool`` of W workers
-        (``workers=4`` with no executor: a 4-way simulated pool)."""
+        (``workers=4`` with no executor: a 4-way simulated pool).
+
+        ``share=True`` enables pane-based shared execution for queries that
+        name a common ``Query.stream`` (``repro.core.panes``): their cost
+        models become amortized one-scan-+-k-merges ``SharedCostModel``s and
+        pane partials are cached/reused across overlapping windows.
+        ``pane_tuples`` overrides the per-stream GCD pane width.  The
+        returned trace carries the pane bookkeeping as ``trace.pane_book``
+        (scan/hit/eviction stats under ``.store.stats``).  With
+        ``share=False`` (default) the run is byte-identical to the unshared
+        runtime."""
         from .runtime import ExecutorPool, run as _run
 
         if workers is not None:
             executor = ExecutorPool(backend=executor, workers=workers)
+        if share:
+            from .panes import run_shared
+
+            trace, book = run_shared(
+                self.policy, workload, executor,
+                pane_tuples=pane_tuples, **runtime_kw,
+            )
+            trace.pane_book = book
+            return trace
+        if pane_tuples is not None:
+            raise ValueError("pane_tuples= only applies with share=True")
         return _run(self.policy, workload, executor=executor, **runtime_kw)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
@@ -301,7 +329,10 @@ class Session:
     Accepts everything ``Planner.run`` accepts (policy name or instance,
     ``executor=``, ``workers=`` pool shorthand) plus the session knobs
     (``calibrate``, ``drift_threshold``, ``min_samples``, ``refit_every``,
-    ``c_max``, ``admission_control``, ``start_time``).
+    ``c_max``, ``admission_control``, ``start_time``) and the pane-sharing
+    knobs (``sharing=True`` to share pane partials across overlapping
+    windows of queries on a common ``Query.stream``, ``pane_tuples`` to
+    override the GCD pane width — docs/API.md "Pane sharing").
     """
 
     def __init__(self, policy: Union[str, SchedulingPolicy] = "llf-dynamic",
@@ -313,37 +344,68 @@ class Session:
     # -- delegation (the facade IS the runtime, minus its internals) -----
     @property
     def policy(self) -> SchedulingPolicy:
+        """The scheduling policy driving this session."""
         return self._runtime.policy
 
     @property
     def executor(self) -> Executor:
+        """The session's (single, carried-over) execution backend."""
         return self._runtime.executor
 
     @property
     def now(self) -> float:
+        """Current modelled time of the session's continuous timeline."""
         return self._runtime.now
 
     @property
     def trace(self):
+        """The live ``SessionTrace``: executions, outcomes and session
+        lifecycle events recorded so far."""
         return self._runtime.trace
 
     @property
     def live_ids(self) -> List[str]:
+        """Base ids of every submitted, not-yet-withdrawn query."""
         return self._runtime.live_ids
 
+    @property
+    def book(self):
+        """Pane-sharing bookkeeping (``repro.core.panes.SharedBook``) when
+        the session runs with ``sharing=True``; None otherwise."""
+        return self._runtime.book
+
+    @property
+    def pane_stats(self):
+        """Pane-cache scan/hit/eviction counters (None without sharing)."""
+        return self._runtime.pane_stats
+
     def calibrator(self, base_id: str):
+        """The live ``CalibratingCostModel`` of ``base_id`` (None unless
+        the session was built with ``calibrate=True``)."""
         return self._runtime.calibrator(base_id)
 
     def submit(self, spec, *, force: bool = False):
+        """Admit a Query / DynamicQuerySpec / RecurringQuerySpec into the
+        live session, gated by the schedulability pre-flight
+        (``repro.core.schedulability.admission_check``); ``force=True``
+        records the report but admits regardless.  Returns an
+        ``AdmissionResult`` (truthy iff admitted)."""
         return self._runtime.submit(spec, force=force)
 
     def withdraw(self, base_id: str) -> None:
+        """Remove a live query mid-run: active windows are deleted at the
+        next between-batch instant (§4.2), future windows never open."""
         self._runtime.withdraw(base_id)
 
     def run_until(self, horizon: float, max_steps: int = 1_000_000):
+        """Advance the continuous timeline to ``horizon``, processing every
+        decision instant (window roll-overs, admissions, batches,
+        recalibrations) on the way; returns the ``SessionTrace``."""
         return self._runtime.run_until(horizon, max_steps=max_steps)
 
     def run(self, max_steps: int = 1_000_000):
+        """Drain every admitted window (bounded specs only — open-ended
+        recurrence needs ``run_until``)."""
         return self._runtime.run(max_steps=max_steps)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety

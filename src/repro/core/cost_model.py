@@ -40,6 +40,20 @@ class CostModelBase:
         """Final-aggregation cost. Single-batch runs need no final agg (§2.1)."""
         raise NotImplementedError
 
+    def merge_cost(self, num_panes: int) -> float:
+        """Cost of folding ``num_panes`` cached pane partial aggregates into
+        a query's running state (pane sharing, ``repro.core.panes``).
+
+        Merging pane partials is the same kind of work as the final
+        aggregation's partial combine — the accumulator plus ``num_panes``
+        partials — so the default prices it as ``agg_cost(num_panes + 1)``.
+        Models whose aggregation is free (the paper's §3.1 worked examples)
+        therefore merge for free too.  ``merge_cost(0)`` is 0.
+        """
+        if num_panes <= 0:
+            return 0.0
+        return self.agg_cost(num_panes + 1)
+
     # -- derived ---------------------------------------------------------
     def tuples_processable(self, duration: float, hi: int = 1 << 40) -> int:
         """EstTuplesProcessed(q, duration): largest n with cost(n) <= duration.
@@ -91,16 +105,19 @@ class LinearCostModel(CostModelBase):
     agg_overhead: float = 0.0
 
     def cost(self, num_tuples: int) -> float:
+        """Eq. (1): ``n * tuple_cost + overhead`` (``cost(0)`` = overhead)."""
         if num_tuples <= 0:
             return self.overhead if num_tuples == 0 else 0.0
         return num_tuples * self.tuple_cost + self.overhead
 
     def agg_cost(self, num_batches: int) -> float:
+        """Linear-in-batches final aggregation; free for single batches."""
         if num_batches <= 1:
             return 0.0
         return num_batches * self.agg_per_batch + self.agg_overhead
 
     def tuples_processable(self, duration: float, hi: int = 1 << 40) -> int:
+        """Closed-form inverse of ``cost`` (caps at ``hi`` for free models)."""
         if duration < self.overhead:
             return 0
         if self.tuple_cost <= 0:
@@ -163,6 +180,7 @@ class PiecewiseLinearCostModel(CostModelBase):
         return y0 + t * (y1 - y0)
 
     def cost(self, num_tuples: int) -> float:
+        """Interpolated batch cost from the fitted knots."""
         if num_tuples < 0:
             return 0.0
         if num_tuples == 0:
@@ -173,6 +191,7 @@ class PiecewiseLinearCostModel(CostModelBase):
         return max(0.0, self._interp(self.points, float(num_tuples)))
 
     def agg_cost(self, num_batches: int) -> float:
+        """Interpolated final-aggregation cost from the ``agg_points``."""
         if num_batches <= 1:
             return 0.0
         return max(0.0, self._interp(self.agg_points, float(num_batches)))
@@ -190,6 +209,7 @@ class SublinearCostModel(CostModelBase):
     agg_per_batch: float = 0.0
 
     def cost(self, num_tuples: int) -> float:
+        """``scale * n**exponent + overhead`` (sublinear in batch size)."""
         if num_tuples < 0:
             return 0.0
         if num_tuples == 0:
@@ -197,9 +217,71 @@ class SublinearCostModel(CostModelBase):
         return self.scale * float(num_tuples) ** self.exponent + self.overhead
 
     def agg_cost(self, num_batches: int) -> float:
+        """Linear-in-batches final aggregation; free for single batches."""
         if num_batches <= 1:
             return 0.0
         return num_batches * self.agg_per_batch
+
+
+class SharedCostModel(CostModelBase):
+    """Per-query cost under pane-based shared execution: one scan + k merges.
+
+    ``sharers`` queries subscribe to the same stream; a pane batch of ``n``
+    tuples is SCANNED once for all of them and each subscriber folds the
+    pane partials into its own state at merge cost.  The per-query charge is
+    therefore the amortized share of the scan plus this query's merges::
+
+        cost(n) = base.cost(n) / sharers + base.merge_cost(ceil(n / pane))
+
+    Summed over all ``sharers`` processing the same ``n`` tuples this
+    recovers exactly ``base.cost(n) + sharers * merges`` — the shared-batch
+    total — while each individual query (and therefore every policy's
+    laxity/remaining-cost computation, MinBatch sizing and
+    ``admission_check``) sees the CHEAPER shared cost instead of a full
+    private scan.  ``agg_cost`` passes through unchanged: the final
+    aggregation stays per query.
+
+    ``sharers`` is mutable on purpose: a session updates it as queries join
+    or leave a stream, and every window query holding this instance sees the
+    new amortization immediately (same pattern as ``CalibratingCostModel``).
+    Wrap a ``CalibratingCostModel`` to compose sharing with online
+    calibration — observations then calibrate the SHARED per-query cost,
+    which is also what the executor charges.
+    """
+
+    def __init__(self, base: CostModelBase, sharers: int, pane_tuples: int):
+        if sharers < 1:
+            raise ValueError(f"sharers must be >= 1, got {sharers}")
+        if pane_tuples < 1:
+            raise ValueError(f"pane_tuples must be >= 1, got {pane_tuples}")
+        self.base = base
+        self.sharers = sharers
+        self.pane_tuples = pane_tuples
+
+    def cost(self, num_tuples: int) -> float:
+        """Amortized shared-batch cost (see class docstring); monotone
+        whenever ``base`` is."""
+        if num_tuples < 0:
+            return 0.0
+        scan = self.base.cost(num_tuples) / max(self.sharers, 1)
+        if num_tuples == 0:
+            return scan  # zero-batch convention: the amortized overhead
+        panes = -(-num_tuples // self.pane_tuples)  # ceil
+        return scan + self.base.merge_cost(panes)
+
+    def agg_cost(self, num_batches: int) -> float:
+        """Final aggregation is per query — delegates to the base model."""
+        return self.base.agg_cost(num_batches)
+
+    def merge_cost(self, num_panes: int) -> float:
+        """Pane merges are physical work on the base model's terms."""
+        return self.base.merge_cost(num_panes)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (
+            f"SharedCostModel(sharers={self.sharers}, "
+            f"pane_tuples={self.pane_tuples}, base={self.base!r})"
+        )
 
 
 def _isotonic(samples: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:
@@ -310,10 +392,12 @@ class CalibratingCostModel(CostModelBase):
     # -- feedback --------------------------------------------------------
     @property
     def calibrated(self) -> bool:
+        """True once at least one refit has replaced the offline base fit."""
         return self._fitted is not None
 
     @property
     def num_observations(self) -> int:
+        """Per-batch feedback samples currently buffered."""
         return len(self._samples)
 
     def observe(self, num_tuples: int, observed_cost: float) -> None:
@@ -336,6 +420,8 @@ class CalibratingCostModel(CostModelBase):
             self.refit_now()
 
     def observe_agg(self, num_batches: int, observed_cost: float) -> None:
+        """Record one executed final aggregation (its true duration, like
+        ``observe`` for batches)."""
         if num_batches <= 1 or observed_cost < 0:
             return
         self._agg_samples.append((float(num_batches), float(observed_cost)))

@@ -67,14 +67,41 @@ class DynamicPolicy:
     def on_admit(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
         """FindMinBatchSize at admission (§4.1): Eq.-9 cost bound, C_max
         blocking cap, GROUP-BY floor.  The loop follows up with an
-        ``"admission"`` SchedulingEvent at the same decision instant."""
-        rt.min_batch = find_min_batch_size(
+        ``"admission"`` SchedulingEvent at the same decision instant.
+
+        Under pane sharing (the query's cost model is a ``SharedCostModel``)
+        the MinBatch is additionally aligned to the stream's pane width, so
+        dispatched batches are PANE batches — computed once and fanned out
+        to every subscribed query — rather than arbitrary fragments."""
+        rt.min_batch = self._pane_align(rt, find_min_batch_size(
             rt.est_total(now) or 1,
             rt.q.cost_model,
             self.delta_rsf,
             self.c_max,
             rt.spec.num_groups,
-        )
+        ))
+
+    def _pane_align(self, rt: "QueryRuntime", min_batch: int) -> int:  # noqa: F821
+        """Round a MinBatch to the shared stream's pane grid.  Rounding UP
+        preserves the Eq.-9 cost bound just computed (batched cost is
+        non-increasing in batch size), so prefer the next multiple whenever
+        it still respects C_max; only when C_max forbids the larger batch
+        round DOWN (C_max has precedence over Eq. 9, exactly like the cap
+        in ``find_min_batch_size``).  No-op for unshared queries (no
+        ``pane_tuples`` on the cost model)."""
+        cm = rt.q.cost_model
+        pane = getattr(cm, "pane_tuples", 0)
+        if not pane or pane <= 1:
+            return min_batch
+        total = max(rt.q.num_tuples_total, 1)
+        up = -(-min_batch // pane) * pane  # ceil to the pane grid
+        if cm.cost(min(up, total)) <= self.c_max + 1e-9:
+            min_batch = up
+        elif min_batch >= pane:
+            min_batch = (min_batch // pane) * pane
+        # else: even one pane blows C_max — keep the sub-pane MinBatch
+        # (fragment batches share less but never violate the blocking bound)
+        return max(1, min(min_batch, total))
 
     def on_withdraw(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
         """Query deleted mid-run (§4: "queries may be added or removed at

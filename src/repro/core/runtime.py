@@ -759,6 +759,7 @@ def run(
     strict: bool = False,
     on_batch: Optional[Callable[[BatchExecution], None]] = None,
     c_max: Optional[float] = None,
+    sharing: Optional["SharedBook"] = None,  # noqa: F821  (panes.py)
 ) -> ExecutionTrace:
     """Run ``workload`` under ``policy`` on ``executor`` (simulated when
     omitted) and return the full ExecutionTrace with per-query outcomes.
@@ -768,9 +769,19 @@ def run(
     one; static policies don't, so pass it explicitly to enable straggler
     re-queue on static runs).  ``strict`` applies only to static policies
     (replay plans verbatim); ``start_time``/``max_steps`` only to dynamic
-    ones — passing an inapplicable argument raises."""
+    ones — passing an inapplicable argument raises.
+
+    ``sharing`` attaches a ``repro.core.panes.SharedBook`` whose pane
+    bookkeeping observes every executed batch (deposits the first coverage
+    of each pane, counts reuse, releases refcounts).  The workload must
+    already be share-transformed (``panes.share_workload`` — which is what
+    assigns the shared cost models); ``panes.run_shared`` bundles the
+    transform, this call and the book teardown.  ``sharing=None`` (the
+    default) leaves the loop byte-identical to the unshared runtime."""
     specs = as_specs(workload)
     executor = SimulatedExecutor() if executor is None else executor
+    if sharing is not None:
+        on_batch = sharing.chain(on_batch)
     if c_max is None:
         c_max = getattr(policy, "c_max", None)
     if getattr(policy, "kind", "static") == "dynamic":

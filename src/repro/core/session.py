@@ -23,7 +23,15 @@ drains a fixed workload, resets the executor per query and returns.  A
   When the drift metric crosses ``drift_threshold`` the session refits and
   replans FUTURE work: static windows are planned at window start with the
   refreshed model; dynamic runtimes get their MinBatch re-sized through the
-  policy's ``on_recalibrate`` hook.
+  policy's ``on_recalibrate`` hook;
+* **pane sharing** — with ``sharing=True`` the session keeps ONE
+  ``repro.core.panes.SharedBook`` for its whole lifetime: window queries on
+  a common ``Query.stream`` with actual overlap (several live specs, or one
+  spec whose ``slide_tuples`` < range) run under the amortized
+  ``SharedCostModel`` and their pane partials carry over across recurring
+  windows — window ``w+1`` reuses what window ``w`` scanned, and the
+  refcounted ``PaneStore`` evicts each pane the moment its last subscriber
+  has consumed it.
 
 Static policies run each window's plan on the same carried-over timeline
 (``execute_plan(carryover=True)``): window k+1 starts no earlier than both
@@ -38,7 +46,8 @@ from typing import Dict, List, Optional, Union
 
 from .api import Executor, SchedulingPolicy, get_policy
 from .arrivals import TraceArrival
-from .cost_model import CalibratingCostModel
+from .cost_model import CalibratingCostModel, SharedCostModel
+from .panes import PaneStats, SharedBook, pane_width
 from .runtime import (
     DynamicLoopCore,
     DynamicQuerySpec,
@@ -85,6 +94,11 @@ class _LiveSpec:
     calibrator: Optional[CalibratingCostModel] = None
     next_window: int = 0
     withdrawn: bool = False
+    # pane sharing: False when the stream's (first-registration-wins) pane
+    # width does not divide this spec's range/slide/offset — such a spec
+    # runs UNSHARED (no amortized cost model, no pane subscriptions) rather
+    # than promising amortization it cannot physically realize.
+    pane_ok: bool = True
     # dynamic path: instantiated window runtimes; static path: pending Queries
     runtimes: List[QueryRuntime] = dataclasses.field(default_factory=list)
     pending_static: List[Query] = dataclasses.field(default_factory=list)
@@ -161,6 +175,8 @@ class SessionRuntime:
         refit_every: int = 8,
         c_max: Optional[float] = None,
         admission_control: bool = True,
+        sharing: bool = False,
+        pane_tuples: Optional[int] = None,
         **policy_params,
     ):
         if isinstance(policy, str):
@@ -185,7 +201,18 @@ class SessionRuntime:
         self.refit_every = refit_every
         self.c_max = c_max if c_max is not None else getattr(policy, "c_max", None)
         self.admission_control = admission_control
+        # Pane sharing (repro.core.panes): ONE book for the whole session, so
+        # pane partials cached in window w carry over to every later window
+        # that overlaps it (slide < range), and across queries on the stream.
+        self.book: Optional[SharedBook] = (
+            SharedBook(pane_tuples=pane_tuples) if sharing else None
+        )
+        if pane_tuples is not None and not sharing:
+            raise ValueError("pane_tuples= only applies with sharing=True")
         self.trace = SessionTrace()
+        # live SharedCostModel wrappers per stream (query_id, model), kept
+        # in sync with the sharer count by _resync_sharers
+        self._shared_models: Dict[str, List] = {}
         self._live: Dict[str, _LiveSpec] = {}
         self._state = RuntimeState(
             runtimes=[],
@@ -217,10 +244,49 @@ class SessionRuntime:
 
     @property
     def live_ids(self) -> List[str]:
+        """Base ids of every submitted, not-yet-withdrawn query."""
         return [b for b, l in self._live.items() if not l.withdrawn]
 
     def calibrator(self, base_id: str) -> Optional[CalibratingCostModel]:
+        """The live ``CalibratingCostModel`` of ``base_id`` (None unless the
+        session runs with ``calibrate=True``)."""
         return self._live[base_id].calibrator
+
+    @property
+    def pane_stats(self) -> Optional[PaneStats]:
+        """Scan/hit/eviction counters of the session's pane cache (None
+        unless the session runs with ``sharing=True``)."""
+        return None if self.book is None else self.book.store.stats
+
+    def _stream_sharers(self, stream: str) -> int:
+        """Expected subscribers per pane of ``stream`` across the live
+        PANE-COMPATIBLE specs: each spec contributes its window-overlap
+        factor (how many of its own sliding windows cover one pane) — 1
+        for tumbling windows.  Incompatible specs run unshared and count
+        for nothing."""
+        return sum(
+            _spec_overlap(l.rspec) for l in self._live.values()
+            if not l.withdrawn and not l.exhausted and l.pane_ok
+            and l.rspec.base.stream == stream
+        )
+
+    def _resync_sharers(self, stream: str) -> None:
+        """Re-amortize every live window's SharedCostModel on ``stream`` to
+        the CURRENT sharer count (documented mutability of ``sharers``):
+        queries joining or leaving must not leave in-flight windows pricing
+        scans against a stale k.  Models of completed windows are pruned."""
+        if self.book is None:
+            return
+        k = max(self._stream_sharers(stream), 1)
+        models = self._shared_models.get(stream, [])
+        keep = []
+        for qid, m in models:
+            sub = self.book._subs.get(qid)
+            if sub is not None and sub.done:
+                continue
+            m.sharers = k
+            keep.append((qid, m))
+        self._shared_models[stream] = keep
 
     # ------------------------------------------------------------------
     # Admission / withdrawal
@@ -267,6 +333,38 @@ class SessionRuntime:
         live = _LiveSpec(rspec=rspec, calibrator=calibrator)
 
         first = rspec.window_query(0, cost_model=live.cost_model())
+        stream = rspec.base.stream
+        width = None
+        if self.book is not None and stream is not None:
+            # Pane grid of the stream: fixed by the first compatible
+            # submission as the GCD of its window range, slide and start
+            # offset (so every window lands on pane boundaries).  A LATER
+            # spec whose geometry the established width does not divide
+            # runs unshared — re-gridding a live stream would invalidate
+            # existing subscriptions, and wrapping an unalignable spec in
+            # SharedCostModel would promise amortization that never
+            # physically happens.
+            width = self.book.peek_width(
+                stream,
+                pane_width(
+                    (rspec.base.num_tuples_total,),
+                    (s for s in (rspec.slide_tuples, rspec.base.stream_offset)
+                     if s),
+                ),
+            )
+            live.pane_ok = _pane_compatible(rspec, width)
+            if live.pane_ok:
+                # The admission pre-flight must already see the SHARED
+                # cost — a query that is only feasible because its scans
+                # are amortized should be admitted under sharing.
+                k = self._stream_sharers(stream) + _spec_overlap(rspec)
+                if k >= 2:
+                    first = dataclasses.replace(
+                        first,
+                        cost_model=SharedCostModel(first.cost_model,
+                                                   sharers=k,
+                                                   pane_tuples=width),
+                    )
         report = admission_check(
             [first], self._active_snapshot(),
             c_max=self.c_max if self.c_max is not None else float("inf"),
@@ -278,6 +376,17 @@ class SessionRuntime:
             return AdmissionResult(False, report, base_id)
 
         self._register_true_cost(rspec)
+        if self.book is not None and stream is not None:
+            if live.pane_ok:
+                self.book.register_stream(stream, width)
+            else:
+                self.trace.log(
+                    "pane_incompatible", now, base_id,
+                    f"stream={stream};width={width};"
+                    f"range={rspec.base.num_tuples_total};"
+                    f"slide={rspec.slide_tuples};"
+                    f"offset={rspec.base.stream_offset}",
+                )
         self._live[base_id] = live
         self.trace.log(
             "submit", now, base_id,
@@ -297,6 +406,18 @@ class SessionRuntime:
         for rt in live.runtimes:
             if not rt.completed and rt.spec.delete_time is None:
                 rt.spec.delete_time = now
+        if self.book is not None:
+            # Release the withdrawn windows' pane references so shared
+            # panes they alone were pinning get evicted.
+            for rt in live.runtimes:
+                if not rt.completed:
+                    self.book.withdraw(rt.q.query_id)
+            for q in live.pending_static:
+                self.book.withdraw(q.query_id)
+            if live.rspec.base.stream is not None:
+                # Surviving windows must stop amortizing scans across a
+                # sharer that just left.
+                self._resync_sharers(live.rspec.base.stream)
         live.pending_static.clear()
         self.trace.log("withdraw", now, base_id)
 
@@ -418,6 +539,22 @@ class SessionRuntime:
             return
         w = live.next_window
         q = live.rspec.window_query(w, cost_model=live.cost_model())
+        if self.book is not None and q.stream is not None and live.pane_ok:
+            # Shared stream with actual overlap (other live specs and/or
+            # this spec's own sliding windows): the window query plans and
+            # runs under the amortized shared cost, and its panes join the
+            # session-wide store — partials cached by earlier windows are
+            # reused here (cache carry-over across recurring windows).
+            k = self._stream_sharers(q.stream)
+            if k >= 2:
+                q.cost_model = SharedCostModel(
+                    q.cost_model, sharers=k,
+                    pane_tuples=self.book.widths[q.stream],
+                )
+                self.book.register(q)
+                self._shared_models.setdefault(q.stream, []).append(
+                    (q.query_id, q.cost_model))
+                self._resync_sharers(q.stream)
         live.next_window += 1
         self.trace.log("window_open", q.submit_time, q.query_id)
         if self._is_dynamic:
@@ -456,8 +593,17 @@ class SessionRuntime:
     # Calibration feedback
     # ------------------------------------------------------------------
     def _observe(self, ex: BatchExecution) -> None:
+        shared = False
+        if self.book is not None:
+            shared = self.book.knows(ex.query_id)
+            self.book.observe(ex)
         live = self._live.get(split_window_id(ex.query_id)[0])
-        if live is None or live.calibrator is None:
+        if live is None or live.calibrator is None or shared:
+            # Shared windows skip calibration feedback: the modelled batch
+            # durations are amortized shared costs, which would mis-train a
+            # calibrator that predicts the UNSHARED base (see docs/API.md,
+            # "Pane sharing" — compose the two only on real backends whose
+            # wall seconds measure actual shared work).
             return
         cal = live.calibrator
         if ex.kind == "final_agg":
@@ -569,6 +715,38 @@ class SessionRuntime:
             f"SessionRuntime(policy={getattr(self.policy, 'name', '?')!r}, "
             f"now={self.now:.6g}, live={self.live_ids})"
         )
+
+
+def _pane_compatible(rspec: RecurringQuerySpec, width: int) -> bool:
+    """True when ``width`` divides the spec's window range, slide and start
+    offset — i.e. every window of the spec is an exact union of panes on
+    the stream's grid.  Anything else would subscribe few or zero panes
+    while still advertising amortized costs."""
+    if width < 1:
+        return False
+    slide = rspec.slide_tuples or 0
+    return (
+        rspec.base.num_tuples_total % width == 0
+        and rspec.base.stream_offset % width == 0
+        and (slide % width == 0 if slide else True)
+    )
+
+
+def _spec_overlap(rspec: RecurringQuerySpec) -> int:
+    """How many windows of ``rspec`` cover one stream pane in steady state:
+    ``ceil(range / slide)`` for sliding windows, 1 for tumbling (slide >=
+    range) or single-window specs."""
+    if rspec.base.stream is None or rspec.num_windows == 1:
+        return 1
+    slide = rspec.slide_tuples or 0
+    if slide <= 0:
+        ov = max(rspec.base.num_tuples_total, 1)  # identical windows
+    else:
+        ov = -(-rspec.base.num_tuples_total // slide)  # ceil
+    if rspec.num_windows is not None:
+        # No more windows than exist can ever cover one pane.
+        ov = min(ov, rspec.num_windows)
+    return max(ov, 1)
 
 
 def _remaining_query(rt: QueryRuntime, now: float) -> Optional[Query]:

@@ -4,8 +4,8 @@ The algorithms moved to ``repro.core.policies.single`` (registered as the
 ``single`` / ``single-no-agg`` / ``single-agg`` policies) and the execution
 loop to ``repro.core.runtime.execute_plan``; the ``schedule_*`` /
 ``execute_single`` functions below are thin deprecation shims kept for the
-pre-Planner API.  ``plan_cost`` and ``validate_schedule`` remain canonical
-here (they are plan utilities, not scheduling schemes).
+pre-Planner API.  ``plan_cost`` and ``validate_schedule`` moved to their
+canonical home ``repro.core.plans`` and are re-exported here unchanged.
 
 Migration:
 
@@ -20,14 +20,13 @@ from __future__ import annotations
 from typing import Optional
 
 from ._deprecation import warn_deprecated
+from .plans import plan_cost, validate_schedule  # noqa: F401  (re-export)
 from .policies.single import (  # canonical implementations
     plan_single,
     plan_with_agg_cost,
     plan_without_agg_cost,
 )
 from .types import ExecutionTrace, Query, Schedule
-
-_EPS = 1e-9
 
 
 def schedule_without_agg_cost(query: Query, deadline: float) -> Schedule:
@@ -48,45 +47,6 @@ def schedule_single(query: Query) -> Schedule:
     """Deprecated shim for the ``single`` policy (Algorithm 1)."""
     warn_deprecated("schedule_single()", 'Planner(policy="single")')
     return plan_single(query)
-
-
-def plan_cost(query: Query, plan: Schedule) -> float:
-    """Total computation cost of a plan = batch costs + final agg (Eq. 1/4)."""
-    cm = query.cost_model
-    c = sum(cm.cost(b.num_tuples) for b in plan.batches)
-    if plan.num_batches > 1:
-        c += cm.agg_cost(plan.num_batches)
-    return c
-
-
-def validate_schedule(query: Query, plan: Schedule) -> None:
-    """Assert the plan's invariants (used by tests and before execution):
-
-    * covers all tuples exactly once,
-    * batch k starts only after its tuples have arrived,
-    * batches do not overlap in time,
-    * last batch (+ final agg) completes by the deadline.
-    """
-    cm, arr = query.cost_model, query.arrival
-    if plan.total_tuples != query.num_tuples_total:
-        raise AssertionError(
-            f"plan covers {plan.total_tuples} != {query.num_tuples_total}"
-        )
-    done = 0
-    prev_end = float("-inf")
-    for b in plan.batches:
-        done += b.num_tuples
-        avail = arr.input_time(done)
-        if b.sched_time < avail - _EPS:
-            raise AssertionError(
-                f"batch at {b.sched_time} needs tuple #{done} available {avail}"
-            )
-        if b.sched_time < prev_end - _EPS:
-            raise AssertionError("overlapping batches")
-        prev_end = b.sched_time + cm.cost(b.num_tuples)
-    finish = prev_end + (cm.agg_cost(plan.num_batches) if plan.num_batches > 1 else 0.0)
-    if finish > query.deadline + 1e-6:
-        raise AssertionError(f"finish {finish} > deadline {query.deadline}")
 
 
 def execute_single(

@@ -80,6 +80,13 @@ class Query:
 
     ``cost_model`` maps tuples->processing cost for one batch;
     ``arrival`` models the input stream rate (InputTime / tuples_available).
+
+    ``stream``/``stream_offset`` place the query's window on a SHARED input
+    stream: tuple ``i`` of this query is tuple ``stream_offset + i`` of
+    stream ``stream``.  They are pure metadata until pane sharing is enabled
+    (``repro.core.panes``): queries naming the same stream can then share
+    pane partial aggregates across overlapping windows.  ``stream=None``
+    (the default) means "private stream" — never shared.
     """
 
     query_id: str
@@ -91,6 +98,8 @@ class Query:
     arrival: "ArrivalModel"  # noqa: F821  (arrivals.py)
     # Optional distinct final-aggregation model; defaults to cost_model.agg_cost.
     submit_time: Optional[float] = None  # when the query enters the system (§4)
+    stream: Optional[str] = None  # shared-stream name (pane sharing)
+    stream_offset: int = 0  # window start as a global stream tuple index
 
     def __post_init__(self) -> None:
         if self.wind_end < self.wind_start:
@@ -135,6 +144,42 @@ class Plan:
     @property
     def num_batches(self) -> int:
         return sum(s.num_batches for s in self.schedules.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class PaneSpec:
+    """One pane of a shared stream (pane/slice sharing for overlapping
+    windows, after Li et al.'s panes and Cutty/Scotty slices).
+
+    Streams are decomposed into fixed-width contiguous panes of
+    ``num_tuples`` tuples; pane ``index`` covers global stream tuples
+    ``[offset, offset + num_tuples)``.  When the pane width is the GCD of
+    every subscribed query's window range and slide (in tuples), each
+    query's window is an exact union of panes, so one pane partial
+    aggregate — computed ONCE — serves every overlapping window at merge
+    cost instead of scan cost (``repro.core.panes``).
+    """
+
+    stream: str
+    index: int
+    offset: int
+    num_tuples: int
+
+    def __post_init__(self) -> None:
+        if self.num_tuples <= 0:
+            raise ValueError(f"pane width must be positive, got {self.num_tuples}")
+        if self.index < 0 or self.offset < 0:
+            raise ValueError("pane index/offset must be non-negative")
+
+    @property
+    def end(self) -> int:
+        """Global stream tuple index one past the pane's last tuple."""
+        return self.offset + self.num_tuples
+
+    @property
+    def key(self) -> Tuple[str, int]:
+        """Store key: (stream, pane index)."""
+        return (self.stream, self.index)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,6 +310,12 @@ class ExecutionTrace:
     # re-queue events recorded by the shared runtime loop; empty in pure
     # simulation, where modelled batch costs respect C_max by construction).
     stragglers: List[str] = dataclasses.field(default_factory=list)
+    # Pane-sharing bookkeeping (repro.core.panes.SharedBook) when the run
+    # had sharing enabled; None otherwise.  Excluded from equality so shared
+    # and unshared traces compare on the executions/outcomes alone.
+    pane_book: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     @property
     def total_cost(self) -> float:
@@ -321,6 +372,14 @@ class RecurringQuerySpec:
     ``total_known`` carry the ``DynamicQuerySpec`` semantics through to every
     instantiated window (a scheduled deletion at an absolute instant; §4.4's
     unknown-total estimation).
+
+    ``slide_tuples`` is the recurrence expressed in STREAM tuples: window
+    ``w`` starts ``w * slide_tuples`` tuples after the base window on the
+    shared stream named by ``base.stream`` (defaults to
+    ``base.num_tuples_total``, i.e. tumbling windows).  A slide smaller than
+    the window range makes consecutive windows overlap, which is exactly
+    what pane sharing (``repro.core.panes``) exploits: pane partials
+    computed for window ``w`` carry over to window ``w+1``.
     """
 
     base: Query
@@ -332,6 +391,7 @@ class RecurringQuerySpec:
     num_groups: int = 0
     delete_time: Optional[float] = None
     total_known: bool = True
+    slide_tuples: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.period <= 0:
@@ -343,6 +403,10 @@ class RecurringQuerySpec:
         if self.deadline_offset < 0:
             raise ValueError("deadline_offset must be >= 0 (deadline before "
                              "window end is never schedulable)")
+        if self.slide_tuples is None:
+            self.slide_tuples = self.base.num_tuples_total
+        if self.slide_tuples < 0:
+            raise ValueError("slide_tuples must be >= 0")
 
     @property
     def base_id(self) -> str:
@@ -380,6 +444,8 @@ class RecurringQuerySpec:
             cost_model=self.base.cost_model if cost_model is None else cost_model,
             arrival=arr,
             submit_time=submit,
+            stream=self.base.stream,
+            stream_offset=self.base.stream_offset + window * self.slide_tuples,
         )
 
     def window_truth(self, window: int) -> Optional["ArrivalModel"]:  # noqa: F821

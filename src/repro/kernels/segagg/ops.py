@@ -47,3 +47,31 @@ def group_count(keys: jax.Array, num_groups: int,
 def combine(partials: jax.Array) -> jax.Array:
     """Final aggregation step over per-batch partials: (B, G, V) -> (G, V)."""
     return partials.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def pane_segagg(keys: jax.Array, values: jax.Array, pane_ids: jax.Array,
+                num_panes: int, num_groups: int,
+                interpret: bool = True) -> jax.Array:
+    """Pane-partial aggregation for shared execution (repro.core.panes):
+    one scan over (N,) keys + (N, V) values with per-row pane assignments
+    ``pane_ids`` -> (num_panes, num_groups, V) f32 per-pane group sums.
+
+    Runs through the SAME blocked segagg kernel via composite keys
+    ``pane * num_groups + group`` — the pane axis is just more segments, so
+    one kernel pass produces every pane's partial at once, ready to be
+    cached in a ``PaneStore`` and fanned out to subscribed windows with
+    ``merge_panes``.
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    composite = pane_ids.astype(jnp.int32) * num_groups + keys.astype(jnp.int32)
+    flat = segagg(composite, values, num_panes * num_groups, interpret)
+    return flat.reshape(num_panes, num_groups, values.shape[1])
+
+
+def merge_panes(pane_partials: jax.Array) -> jax.Array:
+    """Fan-out merge of cached pane partials into one window aggregate:
+    (P, G, V) -> (G, V).  The merge side of "one scan + k merges" — same
+    combine as the final aggregation, over panes instead of batches."""
+    return pane_partials.sum(axis=0)

@@ -15,3 +15,15 @@ def combine_ref(partials: jax.Array) -> jax.Array:
     """Final aggregation (paper §2.1): sum the per-batch partials.
     partials: (num_batches, G, V) -> (G, V)."""
     return partials.sum(axis=0)
+
+
+def pane_segagg_ref(keys: jax.Array, values: jax.Array, pane_ids: jax.Array,
+                    num_panes: int, num_groups: int) -> jax.Array:
+    """Oracle for the pane-partial aggregation op: ONE pass over (N,) keys /
+    (N, V) values / (N,) pane assignments -> (num_panes, num_groups, V)
+    per-pane group sums (pane sharing, repro.core.panes)."""
+    composite = pane_ids.astype(jnp.int32) * num_groups + keys.astype(jnp.int32)
+    flat = jax.ops.segment_sum(
+        values.astype(jnp.float32), composite,
+        num_segments=num_panes * num_groups)
+    return flat.reshape(num_panes, num_groups, values.shape[-1])

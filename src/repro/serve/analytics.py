@@ -34,6 +34,7 @@ import numpy as np
 from ..core import (
     CostModelBase,
     LinearCostModel,
+    Planner,
     Query,
     RecurringQuerySpec,
     Schedule,
@@ -162,6 +163,160 @@ class AnalyticsRuntimeExecutor(BaseExecutor):
         return agg_s
 
 
+class SharedAnalyticsExecutor(BaseExecutor):
+    """``Executor`` over real segagg jobs with PANE SHARING: every job is a
+    window over ONE shared stream of record files, and pane partial
+    aggregates are computed once, cached in the ``SharedBook``'s
+    ``PaneStore``, and fanned out to every subscribed window.
+
+    ``_execute`` decomposes a batch's global file range into full panes and
+    edge fragments.  Cached panes are folded in at merge cost (a numpy add
+    — no device scan); runs of uncomputed panes are scanned in ONE
+    ``pane_segagg`` pass (composite pane x group keys through the same
+    blocked kernel) and each pane's partial is deposited for later
+    subscribers.  Fragments are scanned directly and never cached (only a
+    fully covered pane is valid for reuse).  Per-query accumulators stay
+    offset-keyed exactly like ``AnalyticsExecutor.partials``, so C_max
+    straggler re-queues overwrite instead of double-counting, and
+    ``_finalize`` combines them into ``results[query_id]`` — the fan-out
+    finalize.
+
+    The modelled clock still advances by the scheduler-visible cost models
+    (``SharedCostModel`` when the workload was share-transformed); this
+    class deduplicates the PHYSICAL work and records measured wall seconds,
+    which is where a real backend shows the one-scan-+-k-merges win.
+    """
+
+    def __init__(
+        self,
+        query: AnalyticsQuery,
+        stream_files: Sequence[Dict[str, np.ndarray]],
+        scale: StreamScale,
+        book,  # repro.core.panes.SharedBook (shared with the runtime loop)
+        use_kernel: bool = False,
+    ):
+        super().__init__()
+        self.aquery = query
+        self.files = list(stream_files)
+        self.num_groups = query.num_groups(scale)
+        self.book = book
+        self.use_kernel = use_kernel
+        # query_id -> {local offset: partial}: straggler-idempotent, like
+        # AnalyticsExecutor.partials.
+        self._acc: Dict[str, Dict[int, np.ndarray]] = {}
+        self.results: Dict[str, np.ndarray] = {}
+        self.agg_seconds: Dict[str, float] = {}
+
+    # -- physical helpers ------------------------------------------------
+    def _scan(self, records: Dict[str, np.ndarray]) -> np.ndarray:
+        from ..kernels.segagg.ops import segagg
+
+        keys = np.asarray(self.aquery.key_fn(records), np.int32)
+        vals = np.asarray(self.aquery.value_fn(records), np.float32)
+        if self.use_kernel:
+            part = segagg(jnp.asarray(keys), jnp.asarray(vals),
+                          self.num_groups, True)
+        else:
+            part = _segagg_ref_jit(jnp.asarray(keys), jnp.asarray(vals),
+                                   self.num_groups)
+        return np.asarray(part)
+
+    def _scan_panes(self, stream: str, first_pane: int, count: int,
+                    width: int, by: str) -> np.ndarray:
+        """Scan ``count`` contiguous panes in one ``pane_segagg`` pass,
+        deposit each pane's partial, and return their sum (this caller's
+        share of the batch)."""
+        from ..kernels.segagg.ops import pane_segagg
+
+        lo = first_pane * width
+        chunk = self.files[lo: lo + count * width]
+        records = concat_files(chunk)
+        keys = np.asarray(self.aquery.key_fn(records), np.int32)
+        vals = np.asarray(self.aquery.value_fn(records), np.float32)
+        # Row counts straight from the record arrays (every field of a file
+        # has one row per record) — running key_fn per file would pay a
+        # second full key pass inside the timed region.
+        sizes = [len(next(iter(f.values()))) for f in chunk]
+        pane_of_file = np.repeat(
+            np.arange(count, dtype=np.int32), width)[: len(chunk)]
+        pane_ids = np.repeat(pane_of_file, sizes).astype(np.int32)
+        parts = np.asarray(pane_segagg(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(pane_ids),
+            count, self.num_groups, True,
+        ))
+        for j in range(count):
+            self.book.store.deposit(stream, first_pane + j, by=by,
+                                    data=parts[j])
+        return parts.sum(axis=0)
+
+    # -- BaseExecutor hooks ----------------------------------------------
+    def _execute(self, query: Query, num_tuples: int, offset: int) -> Optional[float]:
+        if num_tuples <= 0:
+            return None
+        stream = query.stream
+        if stream is None:
+            raise ValueError(
+                f"{query.query_id}: SharedAnalyticsExecutor needs stream-"
+                "placed queries (Query.stream/stream_offset)"
+            )
+        width = self.book.widths.get(stream, max(query.num_tuples_total, 1))
+        store = self.book.store
+        g0 = query.stream_offset + offset
+        g1 = g0 + num_tuples
+        t0 = time.perf_counter()
+        acc: Optional[np.ndarray] = None
+        pos = g0
+        pending_scan: Optional[int] = None  # first pane of an uncached run
+
+        def fold(part: np.ndarray) -> None:
+            nonlocal acc
+            acc = part if acc is None else acc + part
+
+        def flush(upto_pane: int) -> None:
+            nonlocal pending_scan
+            if pending_scan is not None:
+                fold(self._scan_panes(stream, pending_scan,
+                                      upto_pane - pending_scan, width,
+                                      by=query.query_id))
+                pending_scan = None
+
+        while pos < g1:
+            pane_idx = pos // width
+            pane_lo, pane_hi = pane_idx * width, (pane_idx + 1) * width
+            if pos == pane_lo and pane_hi <= g1:
+                entry = store.entry(stream, pane_idx)
+                if entry is not None and entry.computed and entry.data is not None:
+                    flush(pane_idx)
+                    fold(entry.data)  # cache hit: merge, no scan
+                else:
+                    if pending_scan is None:
+                        pending_scan = pane_idx
+                pos = pane_hi
+            else:
+                # Edge fragment (batch boundary inside a pane): scan
+                # directly, never cached.
+                flush(pane_idx)
+                frag_hi = min(pane_hi, g1)
+                fold(self._scan(concat_files(self.files[pos:frag_hi])))
+                pos = frag_hi
+        flush(-(-g1 // width))
+        self._acc.setdefault(query.query_id, {})[offset] = (
+            acc if acc is not None
+            else np.zeros((self.num_groups, 1), np.float32)
+        )
+        return time.perf_counter() - t0
+
+    def _finalize(self, query: Query, num_batches: int) -> Optional[float]:
+        t0 = time.perf_counter()
+        parts = list(self._acc.get(query.query_id, {}).values())
+        total = (np.sum(np.stack(parts), axis=0) if parts
+                 else np.zeros((self.num_groups, 1), np.float32))
+        self.results[query.query_id] = total
+        dt = time.perf_counter() - t0
+        self.agg_seconds[query.query_id] = dt
+        return dt
+
+
 def _plan_query(query_id: str, num_files: int) -> Query:
     """Untimed stand-in Query for replaying a vetted plan over materialized
     files (all inputs present; modelled costs zero)."""
@@ -278,6 +433,70 @@ def run_session(
         if rspec.window_query(w).query_id in executor.results
     }
     return results, trace
+
+
+def run_shared_jobs(
+    query: AnalyticsQuery,
+    files: Sequence[Dict[str, np.ndarray]],
+    windows: Sequence[Tuple[int, int]],
+    scale: StreamScale,
+    cost_model: CostModelBase,
+    *,
+    policy: str = "llf-dynamic",
+    share: bool = True,
+    pane_tuples: Optional[int] = None,
+    deadline_frac: float = 3.0,
+    use_kernel: bool = False,
+    **policy_params,
+):
+    """Overlapping GROUP-BY windows over ONE real stream, end to end.
+
+    ``windows[i] = (stream_offset, num_files)`` places job ``i``'s window on
+    the shared stream (one file arrives per modelled time unit).  With
+    ``share=True`` the workload is pane-share-transformed
+    (``repro.core.panes.share_workload``) and executed on a
+    ``SharedAnalyticsExecutor``: overlapping windows reuse cached pane
+    partials, so shared files are scanned once.  With ``share=False`` the
+    same executor class runs with an empty book — every window rescans its
+    own files — which is the apples-to-apples unshared baseline.
+
+    Returns ``({job_id: (num_groups, V) aggregate}, trace, book)``.
+    """
+    from ..core.panes import SharedBook, share_workload
+    from ..core.runtime import run as run_loop
+
+    stream = f"{query.query_id}-stream"
+    qs = []
+    for i, (off, n) in enumerate(windows):
+        if off < 0 or off + n > len(files):
+            raise ValueError(
+                f"window {i} [{off}, {off + n}) outside the stream "
+                f"(0..{len(files)})"
+            )
+        arr = TraceArrival(timestamps=tuple(float(t) for t in range(off, off + n)))
+        qs.append(Query(
+            query_id=f"{query.query_id}-w{i}",
+            wind_start=arr.wind_start,
+            wind_end=arr.wind_end,
+            deadline=arr.wind_end + deadline_frac * cost_model.cost(n),
+            num_tuples_total=n,
+            cost_model=cost_model,
+            arrival=arr,
+            stream=stream,
+            stream_offset=off,
+        ))
+    pol = Planner(policy=policy, **policy_params).policy
+    if share:
+        specs, book = share_workload(qs, pane_tuples=pane_tuples)
+    else:
+        specs, book = qs, SharedBook(pane_tuples=pane_tuples)
+    executor = SharedAnalyticsExecutor(query, files, scale, book,
+                                       use_kernel=use_kernel)
+    trace = run_loop(pol, specs, executor,
+                     sharing=book if share else None)
+    if share:
+        book.close()
+    return executor.results, trace, book
 
 
 def measure_cost_model(query: AnalyticsQuery,

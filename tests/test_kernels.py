@@ -10,8 +10,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rglru.ops import rglru as rglru_kernel
 from repro.kernels.rglru.ref import rglru_rec_ref
 from repro.kernels.rglru.rglru import rglru_pallas
-from repro.kernels.segagg.ops import group_count, segagg
-from repro.kernels.segagg.ref import combine_ref, segagg_ref
+from repro.kernels.segagg.ops import group_count, merge_panes, pane_segagg, segagg
+from repro.kernels.segagg.ref import combine_ref, pane_segagg_ref, segagg_ref
 from repro.kernels.ssd.ops import ssd as ssd_kernel
 from repro.kernels.ssd.ref import ssd_rec_ref
 
@@ -49,6 +49,40 @@ class TestSegAgg:
         total = combine_ref(parts)
         np.testing.assert_allclose(np.asarray(total[:, 0]),
                                    np.asarray(counts), rtol=1e-6)
+
+    @pytest.mark.parametrize("n,panes,groups,width", [
+        (300, 5, 7, 3), (1024, 8, 16, 1), (777, 3, 41, 2),
+    ])
+    def test_pane_segagg_matches_ref(self, n, panes, groups, width):
+        key = jax.random.PRNGKey(n + panes)
+        keys = jax.random.randint(key, (n,), 0, groups)
+        pane_ids = jnp.sort(jax.random.randint(key, (n,), 0, panes))
+        vals = jax.random.normal(key, (n, width))
+        got = pane_segagg(keys, vals, pane_ids, panes, groups)
+        want = pane_segagg_ref(keys, vals, pane_ids, panes, groups)
+        assert got.shape == (panes, groups, width)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_tol(jnp.float32))
+
+    def test_pane_merge_equals_whole_range_scan(self):
+        # The shared-execution identity: per-pane partials merged over the
+        # pane axis == one direct scan of the whole range.
+        key = jax.random.PRNGKey(3)
+        keys = jax.random.randint(key, (2000,), 0, 31)
+        pane_ids = jnp.repeat(jnp.arange(8), 250)
+        vals = jax.random.normal(key, (2000, 2))
+        parts = pane_segagg(keys, vals, pane_ids, 8, 31)
+        np.testing.assert_allclose(
+            np.asarray(merge_panes(parts)),
+            np.asarray(segagg(keys, vals, 31)),
+            rtol=1e-4, atol=1e-4,
+        )
+        # ...and any window (a contiguous subset of panes) merges to the
+        # scan of exactly its tuples.
+        window = merge_panes(parts[2:6])
+        direct = segagg(keys[500:1500], vals[500:1500], 31)
+        np.testing.assert_allclose(np.asarray(window), np.asarray(direct),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestFlashAttention:

@@ -1,0 +1,536 @@
+"""Pane-based shared execution (repro.core.panes).
+
+Covers: pane-width GCD decomposition, PaneStore refcount/eviction
+semantics, the SharedCostModel one-scan-+-k-merges identity, the
+share-disabled byte-identity guarantee for all registered policies, the
+>=3x cost reduction at 8 overlapping queries (the bench_shared_panes
+acceptance gate), session cache carry-over across recurring windows, and —
+on the real segagg backend — equality of shared fan-out results with
+per-query unshared aggregation over random window sets.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LinearCostModel,
+    Planner,
+    Query,
+    RecurringQuerySpec,
+    Session,
+    SublinearCostModel,
+    UniformWindowArrival,
+    list_policies,
+    run,
+)
+from repro.core.cost_model import SharedCostModel
+from repro.core.panes import (
+    PaneStore,
+    SharedBook,
+    pane_width,
+    panes_in,
+    run_shared,
+    share_workload,
+)
+from repro.core.runtime import DynamicQuerySpec, QueryRuntime
+from repro.core.types import PaneSpec
+
+COST = LinearCostModel(tuple_cost=0.05, overhead=0.5, agg_per_batch=0.02)
+
+
+def shared_queries(k: int, n: int = 64, slide: int = 16,
+                   stream: str = "s") -> list:
+    """k overlapping windows over one stream, staggered by ``slide``."""
+    qs = []
+    for i in range(k):
+        off = i * slide
+        arr = UniformWindowArrival(wind_start=float(off),
+                                   wind_end=float(off + n),
+                                   num_tuples_total=n)
+        qs.append(Query(f"q{i}", arr.wind_start, arr.wind_end,
+                        arr.wind_end + 3.0 * COST.cost(n), n, COST, arr,
+                        stream=stream, stream_offset=off))
+    return qs
+
+
+# ---------------------------------------------------------------------------
+# Decomposition
+# ---------------------------------------------------------------------------
+
+
+class TestDecomposition:
+    def test_pane_width_gcd(self):
+        assert pane_width([64], [16]) == 16
+        assert pane_width([64, 48], [8]) == 8
+        assert pane_width([60, 90], []) == 30
+        assert pane_width([], []) == 1  # degenerate: no subscribers yet
+        assert pane_width([64], [0]) == 64  # zero slide contributes nothing
+
+    def test_panes_in_exact_cover(self):
+        panes = panes_in("s", 16, 32, 96)
+        assert [p.index for p in panes] == [2, 3, 4, 5]
+        assert panes[0].offset == 32 and panes[-1].end == 96
+        assert all(p.num_tuples == 16 for p in panes)
+
+    def test_panes_in_misaligned_keeps_fragments_unshared(self):
+        # [10, 50) over width 16: only pane 1 ([16,32)) and pane 2 ([32,48))
+        # are fully contained; the [10,16) and [48,50) fragments stay out.
+        panes = panes_in("s", 16, 10, 50)
+        assert [p.index for p in panes] == [1, 2]
+        assert panes_in("s", 16, 10, 12) == []
+
+    def test_pane_spec_validation(self):
+        with pytest.raises(ValueError):
+            PaneSpec(stream="s", index=0, offset=0, num_tuples=0)
+        with pytest.raises(ValueError):
+            PaneSpec(stream="s", index=-1, offset=0, num_tuples=4)
+
+
+# ---------------------------------------------------------------------------
+# PaneStore refcounts / eviction
+# ---------------------------------------------------------------------------
+
+
+class TestPaneStore:
+    def pane(self, i: int) -> PaneSpec:
+        return PaneSpec(stream="s", index=i, offset=i * 4, num_tuples=4)
+
+    def test_refcounted_eviction(self):
+        store = PaneStore()
+        p = self.pane(0)
+        store.subscribe(p, "a")
+        store.subscribe(p, "b")
+        assert store.refcount("s", 0) == 2
+        assert store.deposit("s", 0, by="a", data="partial")
+        assert store.resident == 1
+        assert store.entry("s", 0).data == "partial"
+        store.release("s", 0, "a")
+        assert store.refcount("s", 0) == 1  # b still needs it: cached
+        assert store.resident == 1
+        store.release("s", 0, "b")
+        assert store.refcount("s", 0) == 0
+        assert store.entry("s", 0) is None  # last ref gone: evicted
+        assert store.resident == 0
+        assert store.stats.scans == 1
+        assert store.stats.evictions == 1
+        assert store.stats.peak_resident == 1
+
+    def test_deposit_is_idempotent(self):
+        store = PaneStore()
+        store.subscribe(self.pane(0), "a")
+        assert store.deposit("s", 0, by="a", data=1)
+        assert not store.deposit("s", 0, by="b", data=2)  # straggler/no-op
+        assert store.entry("s", 0).data == 1
+        assert store.entry("s", 0).depositor == "a"
+        assert store.stats.scans == 1
+
+    def test_unsubscribed_deposit_not_cached(self):
+        store = PaneStore()
+        assert not store.deposit("s", 7, by="a", data=1)
+        assert store.entry("s", 7) is None
+        assert store.stats.scans == 0
+
+    def test_release_before_compute_vanishes_silently(self):
+        store = PaneStore()
+        store.subscribe(self.pane(1), "a")
+        store.release("s", 1, "a")
+        assert store.entry("s", 1) is None
+        assert store.stats.evictions == 0  # nothing was ever cached
+
+    def test_peak_resident_tracks_high_water_mark(self):
+        store = PaneStore()
+        for i in range(3):
+            store.subscribe(self.pane(i), "a")
+            store.subscribe(self.pane(i), "b")
+            store.deposit("s", i, by="a")
+        assert store.stats.peak_resident == 3
+        for i in range(3):
+            store.release("s", i, "a")
+            store.release("s", i, "b")
+        assert store.resident == 0
+        assert store.stats.peak_resident == 3
+
+
+# ---------------------------------------------------------------------------
+# SharedCostModel
+# ---------------------------------------------------------------------------
+
+
+class TestSharedCostModel:
+    def test_one_scan_plus_k_merges_identity(self):
+        k, pane, n = 8, 16, 64
+        shared = SharedCostModel(COST, sharers=k, pane_tuples=pane)
+        merges = COST.merge_cost(n // pane)
+        assert shared.cost(n) == pytest.approx(COST.cost(n) / k + merges)
+        # summed over the k subscribers: one scan + k merge folds
+        assert k * shared.cost(n) == pytest.approx(
+            COST.cost(n) + k * merges)
+
+    def test_agg_and_merge_pass_through(self):
+        shared = SharedCostModel(COST, sharers=4, pane_tuples=8)
+        assert shared.agg_cost(5) == COST.agg_cost(5)
+        assert shared.merge_cost(3) == COST.merge_cost(3)
+        assert COST.merge_cost(0) == 0.0
+        assert COST.merge_cost(1) == COST.agg_cost(2)
+
+    def test_monotone_and_invertible(self):
+        shared = SharedCostModel(SublinearCostModel(scale=0.3, overhead=0.4,
+                                                    agg_per_batch=0.05),
+                                 sharers=3, pane_tuples=8)
+        costs = [shared.cost(n) for n in range(0, 120)]
+        assert all(b >= a - 1e-12 for a, b in zip(costs, costs[1:]))
+        for d in (0.5, 1.0, 3.0):
+            n = shared.tuples_processable(d)
+            assert shared.cost(n) <= d + 1e-9
+            assert shared.cost(n + 1) > d - 1e-9
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SharedCostModel(COST, sharers=0, pane_tuples=4)
+        with pytest.raises(ValueError):
+            SharedCostModel(COST, sharers=2, pane_tuples=0)
+
+
+# ---------------------------------------------------------------------------
+# Workload transform
+# ---------------------------------------------------------------------------
+
+
+class TestShareWorkload:
+    def test_wraps_groups_and_leaves_rest_alone(self):
+        qs = shared_queries(2)
+        lone = dataclasses.replace(qs[0], query_id="lone", stream="other")
+        private = dataclasses.replace(qs[0], query_id="priv", stream=None)
+        specs, book = share_workload([*qs, lone, private])
+        by_id = {s.query.query_id: s.query for s in specs}
+        assert isinstance(by_id["q0"].cost_model, SharedCostModel)
+        assert isinstance(by_id["q1"].cost_model, SharedCostModel)
+        assert by_id["q0"].cost_model.sharers == 2
+        assert by_id["lone"].cost_model is COST   # alone on its stream
+        assert by_id["priv"].cost_model is COST   # no stream at all
+        assert book.widths == {"s": pane_width([64], [16])}
+        # inputs never mutated
+        assert all(q.cost_model is COST for q in qs)
+
+    def test_pane_tuples_override(self):
+        specs, book = share_workload(shared_queries(2), pane_tuples=8)
+        assert book.widths["s"] == 8
+        assert specs[0].query.cost_model.pane_tuples == 8
+
+    def test_pane_aligned_min_batch(self):
+        specs, book = share_workload(shared_queries(2))
+        policy = Planner(policy="llf-dynamic", c_max=10.0).policy
+        rt = QueryRuntime(spec=specs[0])
+        policy.on_admit(rt, 0.0)
+        width = book.widths["s"]
+        assert rt.min_batch % width == 0 or rt.min_batch == rt.q.num_tuples_total
+        # unshared sizing is untouched
+        rt_u = QueryRuntime(spec=DynamicQuerySpec(query=shared_queries(2)[0]))
+        policy.on_admit(rt_u, 0.0)
+        assert rt_u.min_batch >= 1
+
+
+# ---------------------------------------------------------------------------
+# Runtime behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestSharedRuntime:
+    def test_disabled_sharing_is_trace_identical_for_all_policies(self):
+        # Queries may carry stream placement; with share off the runtime
+        # must produce byte-identical traces to a plain run for every
+        # registered policy.
+        qs = shared_queries(3)
+        for name in list_policies():
+            kw = {"c_max": 10.0} if name.endswith("-dynamic") else {}
+            if name == "brute-force":
+                continue  # exponential in N=64 — covered by its own suite
+            planner = Planner(policy=name, **kw)
+            a = planner.run(qs)
+            b = run(Planner(policy=name, **kw).policy, qs)
+            assert a == b, name
+            assert a.pane_book is None
+
+    def test_shared_cost_reduction_floor_at_8_queries(self):
+        # The bench_shared_panes acceptance gate, pinned as a test.
+        for pane_tuples, regime in ((16, "aligned"), (None, "sliding")):
+            qs = shared_queries(8, slide=0 if regime == "aligned" else 8)
+            if regime == "aligned":
+                qs = [dataclasses.replace(q, stream_offset=0) for q in qs]
+            planner = Planner(policy="llf-dynamic", c_max=10.0)
+            unshared = planner.run(qs)
+            shared, book = run_shared(planner.policy, qs,
+                                      pane_tuples=pane_tuples)
+            assert shared.all_met
+            ratio = unshared.total_cost / shared.total_cost
+            assert ratio >= 3.0, (regime, ratio)
+            assert book.store.stats.hits > 0
+
+    def test_book_drains_and_counts(self):
+        qs = shared_queries(4, n=64, slide=16)
+        _, book = run_shared(Planner(policy="llf-dynamic", c_max=10.0).policy,
+                             qs)
+        stats = book.store.stats
+        # distinct panes scanned once each; everything else served as hits
+        n_panes = (64 + 3 * 16) // 16
+        assert stats.scans == n_panes
+        assert stats.hits == 4 * (64 // 16) - n_panes
+        assert stats.evictions == stats.scans
+        assert book.store.resident == 0 and len(book.store) == 0
+
+    def test_static_policy_shares_too(self):
+        qs = shared_queries(4)
+        planner = Planner(policy="single")
+        unshared = planner.run(qs)
+        shared, book = run_shared(planner.policy, qs)
+        assert shared.total_cost < unshared.total_cost / 2
+        assert book.store.stats.hits > 0
+        assert len(book.store) == 0
+
+    def test_unaligned_offsets_still_share(self):
+        # Regression: the pane grid is anchored at global stream index 0,
+        # so the width must divide the ABSOLUTE offsets — windows at
+        # offsets 5/15 with range 10 must land on a 5-tuple grid (not a
+        # 10-tuple grid nothing aligns to).
+        qs = []
+        for i, off in enumerate((5, 10)):
+            arr = UniformWindowArrival(float(off), float(off + 10), 10)
+            qs.append(Query(f"q{i}", arr.wind_start, arr.wind_end,
+                            arr.wind_end + 3.0 * COST.cost(10), 10, COST,
+                            arr, stream="s", stream_offset=off))
+        specs, book = share_workload(qs)
+        assert book.widths["s"] == 5
+        assert all(len(book._subs[q.query_id].panes) == 2 for q in qs)
+        trace, book = run_shared(
+            Planner(policy="llf-dynamic", c_max=10.0).policy, qs)
+        assert book.store.stats.hits > 0  # the shared pane actually shared
+
+    def test_fragment_covered_pane_not_cached_and_no_phantom_hits(self):
+        # Regression: a pane covered across two batches of one query has
+        # no reusable whole-pane partial — it must stay undeposited (a
+        # later subscriber computes it properly) and never masquerade as
+        # cache activity.
+        from repro.core.types import BatchExecution
+
+        book = SharedBook(pane_tuples=8)
+        book.register_stream("s", 8)
+        qs = shared_queries(3, n=8, slide=0)
+        for q in qs:
+            q.stream_offset = 0
+            book.register(q)
+        # q0 straddles the pane: 5 + 3 tuples
+        book.observe(BatchExecution("q0", 0.0, 1.0, 5))
+        book.observe(BatchExecution("q0", 1.0, 2.0, 3))
+        stats = book.store.stats
+        assert stats.fragment_scans == 1
+        assert stats.scans == 0 and stats.hits == 0
+        entry = book.store.entry("s", 0)
+        assert entry is not None and not entry.computed
+        # q1 covers the pane in ONE batch: deposits it...
+        book.observe(BatchExecution("q1", 2.0, 3.0, 8))
+        assert stats.scans == 1 and stats.hits == 0
+        # ...and q2 gets a genuine hit; last release evicts.
+        book.observe(BatchExecution("q2", 3.0, 4.0, 8))
+        assert stats.hits == 1
+        assert book.store.resident == 0
+
+    def test_withdraw_releases_refs(self):
+        specs, book = share_workload(shared_queries(2))
+        sub = book._subs["q1"]
+        assert book.store.refcount("s", sub.panes[0].index) >= 1
+        book.withdraw("q1")
+        assert all(book.store.refcount("s", p.index) <= 1 for p in sub.panes)
+        book.withdraw("q1")  # idempotent
+        book.close()
+        assert len(book.store) == 0
+
+
+# ---------------------------------------------------------------------------
+# Session: cache carry-over across recurring windows
+# ---------------------------------------------------------------------------
+
+
+class TestSessionSharing:
+    def sliding_spec(self, n=32, slide=8, windows=6):
+        arr = UniformWindowArrival(wind_start=0.0, wind_end=float(n),
+                                   num_tuples_total=n)
+        base = Query("recur", 0.0, arr.wind_end,
+                     arr.wind_end + 4.0 * COST.cost(n), n, COST, arr,
+                     stream="sensor", stream_offset=0)
+        # period == slide's share of the window: windows overlap in BOTH
+        # time and stream position, exactly the pane-sharing regime.
+        return RecurringQuerySpec(base=base, period=float(slide),
+                                  num_windows=windows, slide_tuples=slide)
+
+    def test_panes_carry_over_across_windows(self):
+        s = Session(policy="llf-dynamic", c_max=10.0, sharing=True)
+        res = s.submit(self.sliding_spec())
+        assert res.admitted
+        s.run()
+        stats = s.pane_stats
+        # windows 1.. reuse the panes their predecessors scanned
+        assert stats.hits > 0
+        assert stats.scans < stats.scans + stats.hits
+        # refcounted eviction drained the cache with the last window
+        assert s.book.store.resident == 0
+        series = s.trace.outcome_series("recur")
+        assert len(series) == 6 and all(o.complete for o in series)
+
+    def test_session_sharing_cheaper_than_unshared(self):
+        spec = self.sliding_spec()
+        su = Session(policy="llf-dynamic", c_max=10.0)
+        su.submit(spec)
+        su.run()
+        ss = Session(policy="llf-dynamic", c_max=10.0, sharing=True)
+        ss.submit(self.sliding_spec())
+        ss.run()
+        assert ss.trace.total_cost < su.trace.total_cost
+
+    def test_tumbling_single_spec_does_not_share(self):
+        # slide == range: no overlap, nothing to share — the session must
+        # not wrap cost models or touch the store.
+        arr = UniformWindowArrival(wind_start=0.0, wind_end=32.0,
+                                   num_tuples_total=32)
+        base = Query("tumble", 0.0, 32.0, 32.0 + 4.0 * COST.cost(32), 32,
+                     COST, arr, stream="sensor")
+        spec = RecurringQuerySpec(base=base, period=32.0, num_windows=3)
+        s = Session(policy="llf-dynamic", c_max=10.0, sharing=True)
+        s.submit(spec)
+        s.run()
+        assert s.pane_stats.scans == 0 and s.pane_stats.hits == 0
+
+    def test_session_withdraw_releases_panes(self):
+        s = Session(policy="llf-dynamic", c_max=10.0, sharing=True)
+        s.submit(self.sliding_spec(windows=None))
+        s.run_until(20.0)
+        s.withdraw("recur")
+        s.run_until(200.0)
+        assert s.book.store.resident == 0
+
+    def test_incompatible_spec_runs_unshared(self):
+        # Regression: a later spec whose geometry the established pane
+        # width does not divide must run UNSHARED (no amortized cost
+        # model, no subscriptions) instead of promising amortization the
+        # grid cannot deliver — and it must not inflate the sharer count.
+        s = Session(policy="llf-dynamic", c_max=10.0, sharing=True)
+        s.submit(self.sliding_spec(n=32, slide=8))          # width -> 8
+        arr = UniformWindowArrival(0.0, 12.0, 12)           # range 12: 12 % 8 != 0
+        base = Query("odd", 0.0, 12.0, 12.0 + 4.0 * COST.cost(12), 12,
+                     COST, arr, stream="sensor")
+        s.submit(RecurringQuerySpec(base=base, period=12.0, num_windows=2))
+        assert s.trace.events_for("pane_incompatible")
+        assert s._runtime._live["odd"].pane_ok is False
+        assert not s.book.knows("odd#w0")  # no pane subscriptions
+        s.run()
+        # every window of the incompatible spec ran on its plain model
+        for o in s.trace.outcome_series("odd"):
+            assert o.complete
+
+    def test_withdraw_resyncs_sharers(self):
+        # Regression: withdrawing a sharer must re-amortize the surviving
+        # in-flight windows' SharedCostModels (documented mutability).
+        s = Session(policy="llf-dynamic", c_max=10.0, sharing=True)
+        s.submit(self.sliding_spec(n=32, slide=8, windows=None))
+        arr = UniformWindowArrival(0.0, 32.0, 32)
+        other = Query("other", 0.0, 32.0, 32.0 + 4.0 * COST.cost(32), 32,
+                      COST, arr, stream="sensor")
+        s.submit(RecurringQuerySpec(base=other, period=8.0,
+                                    num_windows=None, slide_tuples=8))
+        s.run_until(10.0)
+        models = [m for _, m in s._runtime._shared_models["sensor"]]
+        assert models and all(m.sharers == 8 for m in models)  # 4 + 4
+        s.withdraw("other")
+        live = [m for qid, m in s._runtime._shared_models["sensor"]
+                if not s.book._subs[qid].done]
+        assert live and all(m.sharers == 4 for m in live)
+        s.withdraw("recur")
+
+    def test_pane_tuples_requires_sharing(self):
+        with pytest.raises(ValueError):
+            Session(policy="llf-dynamic", pane_tuples=8)
+        with pytest.raises(ValueError):
+            Planner(policy="single").run(shared_queries(2), pane_tuples=8)
+
+
+# ---------------------------------------------------------------------------
+# Real-backend fan-out equality (property-style)
+# ---------------------------------------------------------------------------
+
+
+def _real_stream(num_files: int):
+    from repro.data.tpch import PAPER_QUERIES, StreamScale, stream_files
+
+    scale = StreamScale(scale=0.005)
+    aq = PAPER_QUERIES[1]  # CQ2: small group count
+    files = [l if aq.stream == "lineitem" else o
+             for _, o, l in stream_files(seed=11, num_files=num_files,
+                                         sc=scale)]
+    return aq, files, scale
+
+
+def _direct_groupby(aq, files, scale, lo, hi):
+    recs = {k: np.concatenate([f[k] for f in files[lo:hi]])
+            for k in files[0]}
+    keys = np.asarray(aq.key_fn(recs))
+    vals = np.asarray(aq.value_fn(recs), np.float32)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    out = np.zeros((aq.num_groups(scale), vals.shape[1]), np.float32)
+    np.add.at(out, keys, vals)
+    return out
+
+
+def _check_windows(windows):
+    from repro.serve.analytics import run_shared_jobs
+
+    aq, files, scale = _real_stream(max(hi for lo, n in windows
+                                        for hi in (lo + n,)))
+    cm = LinearCostModel(tuple_cost=0.02, overhead=0.1, agg_per_batch=0.01)
+    shared, _, book = run_shared_jobs(aq, files, windows, scale, cm,
+                                      share=True, c_max=5.0)
+    unshared, _, _ = run_shared_jobs(aq, files, windows, scale, cm,
+                                     share=False, c_max=5.0)
+    for i, (lo, n) in enumerate(windows):
+        qid = f"{aq.query_id}-w{i}"
+        np.testing.assert_allclose(shared[qid], unshared[qid],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            shared[qid], _direct_groupby(aq, files, scale, lo, lo + n),
+            rtol=1e-4, atol=1e-4,
+        )
+    return book
+
+
+class TestSharedFanOutEquality:
+    def test_overlapping_windows_match_unshared(self):
+        book = _check_windows([(0, 16), (4, 16), (8, 16)])
+        assert book.store.stats.hits > 0
+
+    def test_random_window_sets(self):
+        # Deterministic sweep over random window sets; the hypothesis
+        # variant below widens the net when the dependency is installed.
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            k = int(rng.integers(2, 5))
+            windows = []
+            for _ in range(k):
+                n = int(rng.integers(2, 13))
+                lo = int(rng.integers(0, 20 - n))
+                windows.append((lo, n))
+            _check_windows(windows)
+
+    def test_hypothesis_random_window_sets(self):
+        hypothesis = pytest.importorskip(
+            "hypothesis", reason="hypothesis not installed"
+        )
+        from hypothesis import given, settings, strategies as st
+
+        window = st.tuples(st.integers(0, 12), st.integers(2, 8))
+
+        @settings(max_examples=5, deadline=None)
+        @given(st.lists(window, min_size=2, max_size=4))
+        def inner(windows):
+            _check_windows([(lo, n) for lo, n in windows])
+
+        inner()
