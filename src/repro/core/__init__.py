@@ -33,6 +33,14 @@ around three first-class pieces:
   amortized ``SharedCostModel`` makes the cheaper shared cost visible to
   every policy and to ``admission_check`` (``Planner.run(share=True)``,
   ``Session(sharing=True)``, ``run_shared`` — docs/API.md "Pane sharing").
+* **Overload control** — opt-in handling of the INFEASIBLE regime
+  (``repro.core.overload``): strict priority tiers (``Query.tier``),
+  bounded-error load shedding (minimum uniform-sample drop restoring the
+  schedulability conditions, lowest tiers first; answers become scaled
+  estimates with reported ``QueryOutcome.shed_fraction``/``error_bound``)
+  and deadline renegotiation for ``shed=False`` queries
+  (``Session(overload=..., on_renegotiate=...)`` — docs/API.md "Overload
+  control").
 
 Pure-Python/numpy and executor-agnostic; the legacy ``schedule_*`` free
 functions remain as deprecation shims (see docs/API.md for the migration
@@ -52,6 +60,7 @@ from .arrivals import (
     ArrivalModel,
     ConstantRateArrival,
     ShiftedArrival,
+    ThinnedArrival,
     TraceArrival,
     UniformWindowArrival,
     jittered_trace,
@@ -79,6 +88,17 @@ from .panes import (
     run_shared,
     share_workload,
 )
+from .overload import (
+    OverloadConfig,
+    RenegotiationProposal,
+    SheddingPlan,
+    apply_shed,
+    min_deadline_extension,
+    overload_check,
+    plan_shedding,
+    shed_error_bound,
+    tiered_work_demand_condition,
+)
 from .plans import plan_cost, validate_schedule
 from .runtime import (
     LARGE_NUMBER,
@@ -99,6 +119,7 @@ from .schedulability import (
     check as check_schedulability,
     min_post_window_work,
     post_window_condition,
+    work_demand_condition,
 )
 from .simulator import (
     MemoryModel,
@@ -161,6 +182,7 @@ __all__ = [
     "LinearCostModel",
     "MemoryModel",
     "OracleCostExecutor",
+    "OverloadConfig",
     "PaneSpec",
     "PaneStats",
     "PaneStore",
@@ -172,6 +194,7 @@ __all__ = [
     "QueryOutcome",
     "QueryRuntime",
     "RecurringQuerySpec",
+    "RenegotiationProposal",
     "RuntimeState",
     "Schedule",
     "SchedulingEvent",
@@ -182,13 +205,16 @@ __all__ = [
     "SessionTrace",
     "SharedBook",
     "SharedCostModel",
+    "SheddingPlan",
     "SimulatedExecutor",
     "Strategy",
+    "ThinnedArrival",
     "SublinearCostModel",
     "TraceArrival",
     "UniformWindowArrival",
     "ShiftedArrival",
     "admission_check",
+    "apply_shed",
     "batched_cost_curve",
     "brute_force_optimal",
     "check_schedulability",
@@ -201,22 +227,28 @@ __all__ = [
     "jittered_trace",
     "list_policies",
     "micro_batch_trace",
+    "min_deadline_extension",
     "min_post_window_work",
     "one_shot_trace",
+    "overload_check",
     "pane_width",
     "plan_cost",
+    "plan_shedding",
     "post_window_condition",
     "register_policy",
     "run",
     "run_shared",
     "share_workload",
     "schedule_dynamic",
+    "shed_error_bound",
     "schedule_single",
     "schedule_via_constraints",
     "schedule_with_agg_cost",
     "schedule_without_agg_cost",
     "split_window_id",
     "staggered_deadlines",
+    "tiered_work_demand_condition",
     "validate_schedule",
+    "work_demand_condition",
     "window_query_id",
 ]

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 # All arrival-boundary comparisons share the module-level tolerance from
 # repro.core.types: a tuple arriving exactly at instant t counts as available
@@ -172,6 +172,82 @@ class ShiftedArrival(ArrivalModel):
 
     def tuples_available(self, t: float) -> int:
         return self.base.tuples_available(t - self.shift)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThinnedArrival(ArrivalModel):
+    """``base`` uniformly thinned past a prefix: load shedding's arrival view
+    (``repro.core.overload``).
+
+    The first ``prefix`` base tuples pass through 1:1 (work already processed
+    before the shed was applied); of the remaining ``tail = base.N - prefix``
+    base tuples only ``keep`` survive, sampled SYSTEMATICALLY — kept tail
+    tuple ``j`` (1-based) is base tuple ``prefix + ceil(j * tail / keep)``,
+    so the sample is uniform over the tail and the LAST base tuple is always
+    kept (the thinned window ends exactly where the base window does).
+    ``input_time``/``tuples_available`` stay exact inverses of each other,
+    which every planner and the runtime's readiness logic rely on.
+
+    ``base_index(k)`` exposes the kept->base tuple mapping (1-based both
+    sides); real backends use it to fetch the sampled records and scale the
+    aggregates by ``tail / keep`` (``repro.serve.analytics`` sampled scans).
+    """
+
+    base: ArrivalModel
+    keep: int
+    prefix: int = 0
+
+    def __post_init__(self) -> None:
+        if self.prefix < 0:
+            raise ValueError(f"prefix must be >= 0, got {self.prefix}")
+        tail = self.base.num_tuples_total - self.prefix
+        if tail < 0:
+            raise ValueError(
+                f"prefix {self.prefix} exceeds base total "
+                f"{self.base.num_tuples_total}"
+            )
+        if not 0 <= self.keep <= tail:
+            raise ValueError(f"keep must be in [0, {tail}], got {self.keep}")
+
+    @property
+    def tail(self) -> int:
+        """Base tuples subject to thinning (everything past the prefix)."""
+        return self.base.num_tuples_total - self.prefix
+
+    @property
+    def wind_start(self) -> float:  # type: ignore[override]
+        return self.base.wind_start
+
+    @property
+    def wind_end(self) -> float:  # type: ignore[override]
+        return self.input_time(self.num_tuples_total)
+
+    @property
+    def num_tuples_total(self) -> int:  # type: ignore[override]
+        return self.prefix + self.keep
+
+    def base_index(self, num_tuples: int) -> int:
+        """Base-stream index (1-based) of the ``num_tuples``-th kept tuple."""
+        if num_tuples <= self.prefix or self.keep == 0:
+            return min(num_tuples, self.prefix)
+        j = min(num_tuples - self.prefix, self.keep)
+        return self.prefix + -(-j * self.tail // self.keep)  # ceil
+
+    def input_time(self, num_tuples: int) -> float:
+        if num_tuples <= 0:
+            return self.base.input_time(0)
+        return self.base.input_time(self.base_index(num_tuples))
+
+    def tuples_available(self, t: float) -> int:
+        a = self.base.tuples_available(t)
+        if a <= self.prefix:
+            return a
+        if self.keep == 0:
+            return self.prefix
+        # Exact inverse of ``base_index``: kept tail tuple j has arrived iff
+        # ceil(j * tail / keep) <= a - prefix, i.e. j <= (a-prefix)*keep/tail.
+        return self.prefix + min((a - self.prefix) * self.keep // self.tail,
+                                 self.keep)
 
 
 def jittered_trace(

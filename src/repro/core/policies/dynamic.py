@@ -110,10 +110,18 @@ class DynamicPolicy:
         override this."""
 
     def on_recalibrate(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
-        """Cost-model recalibration (a session detected drift and refitted):
-        re-run MinBatch sizing so future batches of ``rt`` reflect the
-        corrected costs.  Only affects batch SIZING going forward — the NINP
-        invariant is untouched."""
+        """Cost-model recalibration (a session detected drift and refitted,
+        or a sharer left the stream and the amortized cost jumped): re-run
+        MinBatch sizing so future batches of ``rt`` reflect the corrected
+        costs.  Only affects batch SIZING going forward — the NINP invariant
+        is untouched."""
+        self.on_admit(rt, now)
+
+    def on_shed(self, rt: "QueryRuntime", now: float) -> None:  # noqa: F821
+        """Load shedding thinned ``rt``'s remaining stream
+        (``repro.core.overload``): re-run MinBatch sizing against the new —
+        smaller — total so batch sizes track the shed workload (Eq. 9 is
+        relative to the single-batch cost of what will actually run)."""
         self.on_admit(rt, now)
 
     def priority(self, rt: "QueryRuntime", now: float) -> Tuple:  # noqa: F821
@@ -122,7 +130,14 @@ class DynamicPolicy:
 
     def replan(self, event: SchedulingEvent, state: "RuntimeState") -> PolicyDecision:  # noqa: F821
         """Algorithm 2's decision instant: pick the ready winner, or report
-        when readiness can next change, or stop."""
+        when readiness can next change, or stop.
+
+        Priority tiers (``Query.tier``, overload control) are STRICT: a
+        ready query of a lower tier number always wins over any higher
+        tier; the strategy's own order applies within a tier.  With every
+        query on the default tier 0 the ordering — hence the trace — is
+        byte-identical to the tierless sort.
+        """
         now = event.now
         ready = [r for r in state.active() if r.ready(now)]
         if not ready:
@@ -133,7 +148,7 @@ class DynamicPolicy:
             if not math.isfinite(nxt):
                 return PolicyDecision()  # stop: nothing will ever be ready
             return PolicyDecision(wake_at=nxt)
-        ready.sort(key=lambda r: self.priority(r, now))
+        ready.sort(key=lambda r: (r.q.tier, *self.priority(r, now)))
         rt = ready[0]
         take = min(rt.avail(now), rt.min_batch)
         ways = min(self.shard_across, state.free_workers(now), take)

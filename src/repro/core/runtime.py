@@ -72,6 +72,11 @@ class DynamicQuerySpec:
     ``truth`` is the actual arrival process; planners only ever consult
     ``query.arrival`` (the predicted model).  ``delete_time`` models §4's
     "queries may be added or removed at any point".
+
+    ``shed_fraction``/``error_bound`` record that overload control
+    (``repro.core.overload``) thinned this query's stream before/while it
+    ran; the loop stamps them onto the ``QueryOutcome`` so degraded answers
+    are visibly estimates, not silent truncations.
     """
 
     query: Query
@@ -79,6 +84,8 @@ class DynamicQuerySpec:
     delete_time: Optional[float] = None
     num_groups: int = 0
     total_known: bool = True
+    shed_fraction: float = 0.0
+    error_bound: float = 0.0
 
     def __post_init__(self) -> None:
         if self.truth is None:
@@ -287,12 +294,17 @@ class BaseExecutor:
 
     def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
         """Straggler re-dispatch: redo the REAL work of an idempotent batch
-        without touching the modelled clock."""
+        without touching the modelled clock.  ``last_batch_wall`` is updated
+        to the re-execution's wall time — the loop requeues BEFORE invoking
+        ``on_batch`` observers, so downstream consumers (calibration
+        feedback) see exactly one settled measurement per batch, not the
+        straggling outlier."""
         wall = self._execute(query, num_tuples, offset)
         if wall is not None:
             self.wall_seconds[query.query_id] = (
                 self.wall_seconds.get(query.query_id, 0.0) + wall
             )
+            self.last_batch_wall = wall
 
     # -- backend hooks ---------------------------------------------------
     def _modelled_batch_cost(self, query: Query, num_tuples: int) -> float:
@@ -558,17 +570,22 @@ def _record_batch(
     else:
         ex = BatchExecution(query.query_id, start, start + dur, num_tuples)
     trace.executions.append(ex)
-    if on_batch:
-        on_batch(ex)
     wall = getattr(executor, "last_batch_wall", None)
     if c_max is not None and wall is not None and wall > c_max:
         # C_max straggler: the batch's REAL execution blew the blocking
         # bound of §4.2-4.3.  Re-dispatch the (idempotent) batch once and
-        # flag the event; modelled time is unaffected.
+        # flag the event; modelled time is unaffected.  The requeue runs
+        # BEFORE ``on_batch`` so observers see only the settled batch: a
+        # SharedBook would otherwise release/evict the batch's panes first
+        # and force the re-execution into a full rescan (and re-deposit) of
+        # partials it had already shared, and calibration feedback would
+        # sample the straggling outlier instead of the final execution.
         trace.stragglers.append(query.query_id)
         requeue = getattr(executor, "requeue_batch", None)
         if requeue is not None:
             requeue(query, num_tuples, offset)
+    if on_batch:
+        on_batch(ex)
     return ex
 
 
@@ -605,6 +622,8 @@ def _record_outcome(
     completion: float,
     *,
     tuples_processed: int = -1,
+    shed_fraction: float = 0.0,
+    error_bound: float = 0.0,
 ) -> QueryOutcome:
     out = QueryOutcome(
         query_id=query.query_id,
@@ -618,6 +637,8 @@ def _record_outcome(
         num_batches=num_batches,
         tuples_processed=tuples_processed,
         num_tuples_total=query.num_tuples_total,
+        shed_fraction=shed_fraction,
+        error_bound=error_bound,
     )
     trace.outcomes.append(out)
     return out
@@ -639,6 +660,8 @@ def execute_plan(
     on_batch: Optional[Callable[[BatchExecution], None]] = None,
     c_max: Optional[float] = None,
     carryover: bool = False,
+    shed_fraction: float = 0.0,
+    error_bound: float = 0.0,
 ) -> ExecutionTrace:
     """Execute one query's plan on ``executor`` (simulated by default).
 
@@ -739,7 +762,8 @@ def execute_plan(
 
     completion = _record_final_agg(trace, executor, query, n_batches, on_batch)
     _record_outcome(
-        trace, query, n_batches, completion, tuples_processed=processed
+        trace, query, n_batches, completion, tuples_processed=processed,
+        shed_fraction=shed_fraction, error_bound=error_bound,
     )
     return trace
 
@@ -826,6 +850,7 @@ def _run_static(
             spec.query, plan, executor,
             truth=spec.truth, strict=strict, trace=trace,
             on_batch=on_batch, c_max=c_max,
+            shed_fraction=spec.shed_fraction, error_bound=spec.error_bound,
         )
     return trace
 
@@ -982,6 +1007,8 @@ class DynamicLoopCore:
             _record_outcome(
                 trace, rt.q, rt.batches_done, completion,
                 tuples_processed=rt.processed,
+                shed_fraction=rt.spec.shed_fraction,
+                error_bound=rt.spec.error_bound,
             )
         return "ran"
 

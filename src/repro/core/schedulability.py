@@ -5,14 +5,22 @@ al., paper ref [21]), so — like the paper — we provide *necessary* condition
 used as a pre-flight check and in experiments to explain infeasible cases
 (the paper's §7.4 "sum of last-batch costs was ~105, so the largest deadline
 must be >= windowEnd + 105" analysis is exactly `post_window_condition`).
+
+Every check takes an optional ``now``: the instant the verdict is being made
+(an online admission).  Work cannot be scheduled in the past, so prewindow
+capacity before ``now`` — a "phantom prefix" that previously let mid-session
+admissions credit processing time that had already elapsed — does not count,
+and neither does post-window budget before ``now``.  ``now=None`` (the
+default) is the offline pre-run case: the whole timeline is still ahead.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+import math
+from typing import List, Optional, Sequence, Tuple
 
 from .policies.single import plan_single, plan_without_agg_cost
-from .types import InfeasibleDeadline, Query
+from .types import EPS, InfeasibleDeadline, Query
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,26 +32,36 @@ class FeasibilityReport:
         return self.feasible
 
 
-def max_prewindow_tuples(q: Query) -> int:
+def max_prewindow_tuples(q: Query, now: Optional[float] = None) -> int:
     """Largest stream prefix a dedicated executor could finish strictly by
-    q's window end (in-order batches, arrivals respected).  Monotone in k, so
-    binary-searchable via the backward planner on the k-tuple prefix."""
+    q's window end (in-order batches, arrivals respected, nothing scheduled
+    before ``now``).  Monotone in k, so binary-searchable via the backward
+    planner on the k-tuple prefix."""
     import dataclasses as _dc
+
+    floor = -math.inf if now is None else now
 
     def feasible(k: int) -> bool:
         if k == 0:
             return True
+        # The k-prefix as its own query.  ``wind_end`` is inert to the
+        # backward planner (it plans against the explicit deadline below)
+        # but must satisfy the Query invariant wind_end >= wind_start even
+        # for arrival models whose early instants precede the declared
+        # window start (session remaining-work snapshots, ShiftedArrival
+        # windows) — clamp instead of crashing the admission path.
         qk = _dc.replace(
             q,
             num_tuples_total=k,
-            wind_end=q.arrival.input_time(k),
+            wind_end=max(q.arrival.input_time(k), q.wind_start),
             deadline=q.wind_end,
         )
         try:
-            plan_without_agg_cost(qk, q.wind_end)
-            return True
+            plan = plan_without_agg_cost(qk, q.wind_end)
         except InfeasibleDeadline:
             return False
+        # No phantom prefix: the plan must be executable from ``now`` on.
+        return not plan.batches or plan.batches[0].sched_time >= floor - EPS
 
     lo, hi = 0, q.num_tuples_total
     while lo < hi:
@@ -55,39 +73,82 @@ def max_prewindow_tuples(q: Query) -> int:
     return lo
 
 
-def min_post_window_work(q: Query) -> float:
+def min_post_window_work(q: Query, now: Optional[float] = None) -> float:
     """Lower bound on the work that MUST run after q's window end: even if a
-    dedicated executor maximally front-loads the stream prefix, the remaining
-    tuples still cost at least one batch after the window (final-aggregation
-    cost excluded to keep the bound valid for single-batch completions)."""
-    k = max_prewindow_tuples(q)
+    dedicated executor maximally front-loads the stream prefix (from ``now``
+    on), the remaining tuples still cost at least one batch after the window
+    (final-aggregation cost excluded to keep the bound valid for
+    single-batch completions)."""
+    k = max_prewindow_tuples(q, now)
     rest = q.num_tuples_total - k
     return q.cost_model.cost(rest) if rest > 0 else 0.0
 
 
-def post_window_condition(queries: Sequence[Query]) -> FeasibilityReport:
+def post_window_condition(
+    queries: Sequence[Query], now: Optional[float] = None
+) -> FeasibilityReport:
     """§7.4's necessary condition, generalised to EDF prefixes.
 
     Sort by deadline; for every deadline-prefix, the sum of minimum
     post-window work must fit between the EARLIEST window end in the prefix
-    (before which none of that work can start) and the prefix's deadline.
-    A single shared executor cannot do better regardless of strategy, so
-    failure proves infeasibility.  (The paper's §7.4 instance — identical
-    windows, sum of last-batch costs 105 vs largest deadline — is the
-    degenerate case of this check.)
+    (before which none of that work can start — and never before ``now``)
+    and the prefix's deadline.  A single shared executor cannot do better
+    regardless of strategy, so failure proves infeasibility.  (The paper's
+    §7.4 instance — identical windows, sum of last-batch costs 105 vs
+    largest deadline — is the degenerate case of this check.)
     """
     reasons: List[str] = []
     qs = sorted(queries, key=lambda q: q.deadline)
     for i in range(len(qs)):
         prefix = qs[: i + 1]
         anchor = min(q.wind_end for q in prefix)
-        work = sum(min_post_window_work(q) for q in prefix)
+        if now is not None:
+            anchor = max(anchor, now)
+        work = sum(min_post_window_work(q, now) for q in prefix)
         budget = qs[i].deadline - anchor
         if work > budget + 1e-9:
             reasons.append(
                 f"deadline-prefix through {qs[i].query_id}: post-window work "
                 f"{work:.4g} exceeds budget {budget:.4g} "
-                f"(deadline {qs[i].deadline:.6g} - earliest window end {anchor:.6g})"
+                f"(deadline {qs[i].deadline:.6g} - work start {anchor:.6g})"
+            )
+    return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))
+
+
+def work_demand_condition(
+    queries: Sequence[Query], now: Optional[float] = None
+) -> FeasibilityReport:
+    """Processor-demand bound (classic single-machine necessary condition):
+    for every deadline-prefix, the prefix's TOTAL minimum work must fit
+    between the earliest instant any of it could start — no query can run
+    before its first tuple arrives, and nothing runs before ``now`` — and
+    the prefix's deadline.  One shared executor must complete ALL of the
+    prefix's work by then regardless of strategy, so failure proves
+    infeasibility.
+
+    This complements ``post_window_condition``, which bounds only the work
+    pinned AFTER each window's end: under smooth arrivals the per-query
+    prewindow capacity of that check assumes a dedicated executor, so k
+    overlapping queries that individually keep up — but jointly offer k
+    times the executor's capacity — pass it while failing this one.  The
+    overloaded regime (``repro.core.overload``) is detected here.
+    """
+    reasons: List[str] = []
+    qs = sorted(queries, key=lambda q: q.deadline)
+    work = 0.0
+    start = math.inf
+    for i, q in enumerate(qs):
+        # min_comp_cost is each query's cheapest possible processing (one
+        # batch, no final agg) — a lower bound on its demand.
+        work += q.min_comp_cost
+        start = min(start, q.arrival.input_time(1))
+        anchor = start if now is None else max(start, now)
+        budget = q.deadline - anchor
+        if work > budget + 1e-9:
+            reasons.append(
+                f"deadline-prefix through {q.query_id}: total work "
+                f"{work:.4g} exceeds budget {budget:.4g} "
+                f"(deadline {q.deadline:.6g} - work start {anchor:.6g})"
             )
     return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))
 
@@ -120,11 +181,16 @@ def blocking_period_bound(queries: Sequence[Query], c_max: float) -> Feasibility
     return FeasibilityReport(feasible=True, reasons=tuple(reasons))
 
 
-def check(queries: Sequence[Query], c_max: float = float("inf")) -> FeasibilityReport:
+def check(
+    queries: Sequence[Query],
+    c_max: float = float("inf"),
+    now: Optional[float] = None,
+) -> FeasibilityReport:
     """Combined pre-flight: necessary conditions + blocking warnings."""
     parts = [
         single_query_condition(queries),
-        post_window_condition(queries),
+        post_window_condition(queries, now),
+        work_demand_condition(queries, now),
         blocking_period_bound(queries, c_max),
     ]
     return FeasibilityReport(
@@ -137,16 +203,21 @@ def admission_check(
     incoming: Sequence[Query],
     active: Sequence[Query] = (),
     c_max: float = float("inf"),
+    now: Optional[float] = None,
 ) -> FeasibilityReport:
     """Online admission pre-flight: may ``incoming`` join the LIVE set?
 
     ``active`` are remaining-work snapshots of the currently admitted
     queries (a session builds them from its runtime state: pending tuples
-    and their remaining arrival instants).  The checks stay NECESSARY
-    conditions, so ``feasible=False`` proves the union cannot be scheduled
-    by any NINP strategy on one executor — the caller should reject the
-    submission (§4.3: exact schedulability is NP-complete, so the gate errs
-    on the admitting side; deadline misses remain a measured outcome).
+    and their remaining arrival instants).  ``now`` is the admission
+    instant: snapshots carry arrival timestamps of already-arrived-but-
+    unprocessed tuples in the past, and without the ``now`` floor the
+    prewindow analysis would credit a phantom prefix of processing time
+    that has already elapsed.  The checks stay NECESSARY conditions, so
+    ``feasible=False`` proves the union cannot be scheduled by any NINP
+    strategy on one executor — the caller should reject the submission
+    (§4.3: exact schedulability is NP-complete, so the gate errs on the
+    admitting side; deadline misses remain a measured outcome).
 
     * each incoming query must be feasible in isolation (the active ones
       passed this gate at their own admission);
@@ -155,7 +226,8 @@ def admission_check(
     """
     parts = [
         single_query_condition(incoming),
-        post_window_condition([*active, *incoming]),
+        post_window_condition([*active, *incoming], now),
+        work_demand_condition([*active, *incoming], now),
         blocking_period_bound(incoming, c_max),
     ]
     return FeasibilityReport(

@@ -42,11 +42,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 from .api import Executor, SchedulingPolicy, get_policy
-from .arrivals import TraceArrival
+from .arrivals import ArrivalModel, ThinnedArrival, TraceArrival
 from .cost_model import CalibratingCostModel, SharedCostModel
+from .overload import (
+    OverloadConfig,
+    RenegotiationProposal,
+    apply_shed,
+    min_deadline_extension,
+    overload_check,
+    plan_shedding,
+    tiered_work_demand_condition,
+)
 from .panes import PaneStats, SharedBook, pane_width
 from .runtime import (
     DynamicLoopCore,
@@ -76,11 +85,24 @@ _SNAPSHOT_CAP = 20_000
 
 @dataclasses.dataclass(frozen=True)
 class AdmissionResult:
-    """Outcome of ``SessionRuntime.submit``."""
+    """Outcome of ``SessionRuntime.submit``.
+
+    ``decision`` refines the boolean: ``"admit"`` (feasible as submitted),
+    ``"shed"`` (admitted with load shedding — ``shed_fraction`` of the
+    stream dropped, answers are estimates within ``error_bound``),
+    ``"renegotiate"`` (admitted after the accept hook took the proposed
+    deadline extension in ``proposal``), or ``"reject"``.  Without overload
+    control only ``"admit"``/``"reject"`` occur, and a declined proposal is
+    a ``"reject"`` whose ``proposal`` records what was offered.
+    """
 
     admitted: bool
     report: FeasibilityReport
     base_id: str
+    decision: str = ""
+    shed_fraction: float = 0.0
+    error_bound: float = 0.0
+    proposal: Optional[RenegotiationProposal] = None
 
     def __bool__(self) -> bool:
         return self.admitted
@@ -99,6 +121,11 @@ class _LiveSpec:
     # runs UNSHARED (no amortized cost model, no pane subscriptions) rather
     # than promising amortization it cannot physically realize.
     pane_ok: bool = True
+    # overload control: admission-time load shed applied to this spec (every
+    # window samples its stream at rate 1 - shed_fraction; answers are
+    # scaled estimates within error_bound).
+    shed_fraction: float = 0.0
+    error_bound: float = 0.0
     # dynamic path: instantiated window runtimes; static path: pending Queries
     runtimes: List[QueryRuntime] = dataclasses.field(default_factory=list)
     pending_static: List[Query] = dataclasses.field(default_factory=list)
@@ -115,12 +142,32 @@ class _LiveSpec:
         return nw is not None and self.next_window >= nw
 
     @property
+    def in_flight(self) -> bool:
+        """Any instantiated window still running (or waiting to run)."""
+        if self.pending_static:
+            return True
+        return any(not (rt.completed or rt.deleted) for rt in self.runtimes)
+
+    @property
     def open_ended(self) -> bool:
         return self.rspec.num_windows is None and not self.withdrawn
 
     def cost_model(self):
         return (self.calibrator if self.calibrator is not None
                 else self.rspec.base.cost_model)
+
+    def window_truth(self, window: int) -> Optional[ArrivalModel]:
+        """Window ``window``'s TRUE arrival process, thinned to this spec's
+        shed rate when overload control degraded it: shedding is an
+        actuation — the dropped tuples are never ingested, so the loop's
+        availability/readiness logic must see the sampled stream."""
+        truth = self.rspec.window_truth(window)
+        if truth is None or self.shed_fraction <= 0:
+            return truth
+        keep = self.rspec.base.num_tuples_total  # base already thinned
+        if truth.num_tuples_total <= keep:
+            return truth
+        return ThinnedArrival(base=truth, keep=keep)
 
 
 def as_recurring(
@@ -177,6 +224,9 @@ class SessionRuntime:
         admission_control: bool = True,
         sharing: bool = False,
         pane_tuples: Optional[int] = None,
+        overload: Union[bool, OverloadConfig] = False,
+        on_renegotiate: Optional[
+            Callable[[RenegotiationProposal], bool]] = None,
         **policy_params,
     ):
         if isinstance(policy, str):
@@ -201,6 +251,16 @@ class SessionRuntime:
         self.refit_every = refit_every
         self.c_max = c_max if c_max is not None else getattr(policy, "c_max", None)
         self.admission_control = admission_control
+        # Overload control (repro.core.overload): None == disabled — the
+        # admission gate stays the plain admit/reject of the feasible-regime
+        # runtime.  Enabled, an infeasible submission is degraded instead of
+        # rejected: minimum load shed (lowest tiers first), else the
+        # smallest deadline extension offered through ``on_renegotiate``.
+        if isinstance(overload, OverloadConfig):
+            self.overload: Optional[OverloadConfig] = overload
+        else:
+            self.overload = OverloadConfig() if overload else None
+        self.on_renegotiate = on_renegotiate
         # Pane sharing (repro.core.panes): ONE book for the whole session, so
         # pane partials cached in window w carry over to every later window
         # that overlaps it (slide < range), and across queries on the stream.
@@ -231,6 +291,9 @@ class SessionRuntime:
         # per-window batch counts for final-agg calibration feedback (O(1)
         # instead of re-scanning the whole session trace per window)
         self._batch_counts: Dict[str, int] = {}
+        # window-level (mid-run) sheds on the static path: query_id ->
+        # (cumulative fraction, error bound), stamped onto the outcome
+        self._window_shed: Dict[str, tuple] = {}
         if start_time is not None:
             executor.reset(start_time)
 
@@ -263,10 +326,14 @@ class SessionRuntime:
         PANE-COMPATIBLE specs: each spec contributes its window-overlap
         factor (how many of its own sliding windows cover one pane) — 1
         for tumbling windows.  Incompatible specs run unshared and count
-        for nothing."""
+        for nothing.  A spec whose last window has been INSTANTIATED but is
+        still in flight keeps counting: its windows still subscribe panes,
+        so dropping it from the divisor would re-price the other sharers'
+        scans as if the sharing had already ended."""
         return sum(
             _spec_overlap(l.rspec) for l in self._live.values()
-            if not l.withdrawn and not l.exhausted and l.pane_ok
+            if not l.withdrawn and l.pane_ok
+            and (not l.exhausted or l.in_flight)
             and l.rspec.base.stream == stream
         )
 
@@ -300,10 +367,23 @@ class SessionRuntime:
         """Admit a (recurring) query into the live session.
 
         The schedulability pre-flight checks the spec's FIRST window against
-        remaining-work snapshots of everything currently admitted (necessary
-        conditions only: rejection proves infeasibility, acceptance promises
-        nothing — deadline misses remain a measured outcome).  ``force=True``
-        records the report but admits regardless.
+        remaining-work snapshots of everything currently admitted, evaluated
+        AT the submission instant — work cannot run in the past, so backlog
+        that already arrived counts in full (necessary conditions only:
+        rejection proves infeasibility, acceptance promises nothing —
+        deadline misses remain a measured outcome).  ``force=True`` records
+        the report but admits regardless.
+
+        With overload control enabled (``overload=``), an infeasible
+        submission is degraded instead of rejected: the minimum load shed
+        (lowest priority tiers first, incoming and active queries alike)
+        that restores the necessary conditions is applied — answers become
+        scaled sample estimates, reported through
+        ``QueryOutcome.shed_fraction``/``error_bound`` and ``"shed"``
+        session events; when shedding is disallowed (``Query.shed=False``)
+        or insufficient, the smallest feasible deadline extension is
+        offered to the ``on_renegotiate`` hook (``"renegotiate"`` events).
+        Only then does the submission fall through to rejection.
         """
         rspec = as_recurring(spec)
         base_id = rspec.base_id
@@ -365,15 +445,41 @@ class SessionRuntime:
                                                    sharers=k,
                                                    pane_tuples=width),
                     )
-        report = admission_check(
-            [first], self._active_snapshot(),
-            c_max=self.c_max if self.c_max is not None else float("inf"),
-        )
+        snaps = self._active_snapshot()
+        c_max = self.c_max if self.c_max is not None else float("inf")
         now = self.now
-        if self.admission_control and not report.feasible and not force:
-            self.trace.log("reject", now, base_id,
-                           "; ".join(report.reasons))
-            return AdmissionResult(False, report, base_id)
+        report = admission_check([first], snaps, c_max=c_max, now=now)
+        decision, shed_fraction, error_bound, proposal = "admit", 0.0, 0.0, None
+        if self.admission_control and not force:
+            if self.overload is not None:
+                # Overload activation additionally consults the tier-strict
+                # demand bound: THIS runtime protects low tier numbers, so
+                # a submission the generic (policy-agnostic) conditions
+                # accept can still be doomed behind higher-priority work.
+                needs = (not report.feasible or not
+                         tiered_work_demand_condition([*snaps, first],
+                                                      now).feasible)
+            else:
+                needs = not report.feasible
+            if needs:
+                outcome = None
+                if self.overload is not None:
+                    outcome = self._overload_admit(
+                        live, first, snaps, c_max, now)
+                if outcome is None:
+                    self.trace.log("reject", now, base_id,
+                                   "; ".join(report.reasons))
+                    return AdmissionResult(False, report, base_id,
+                                           decision="reject",
+                                           proposal=proposal)
+                decision, report, shed_fraction, error_bound, proposal = outcome
+                if decision == "reject":
+                    self.trace.log("reject", now, base_id,
+                                   "; ".join(report.reasons))
+                    return AdmissionResult(False, report, base_id,
+                                           decision="reject",
+                                           proposal=proposal)
+                rspec = live.rspec  # shed/renegotiation may have replaced it
 
         self._register_true_cost(rspec)
         if self.book is not None and stream is not None:
@@ -393,7 +499,11 @@ class SessionRuntime:
             f"period={rspec.period};windows={rspec.num_windows or 'inf'}",
         )
         self._instantiate_next(live)
-        return AdmissionResult(True, report, base_id)
+        return AdmissionResult(
+            True, report, base_id, decision=decision,
+            shed_fraction=shed_fraction, error_bound=error_bound,
+            proposal=proposal,
+        )
 
     def withdraw(self, base_id: str) -> None:
         """Remove a live query mid-run: active windows are deleted at the
@@ -416,10 +526,184 @@ class SessionRuntime:
                 self.book.withdraw(q.query_id)
             if live.rspec.base.stream is not None:
                 # Surviving windows must stop amortizing scans across a
-                # sharer that just left.
-                self._resync_sharers(live.rspec.base.stream)
+                # sharer that just left: re-amortize their SharedCostModels
+                # AND re-size their MinBatches — remaining-cost and laxity
+                # recompute from the live model at every decision instant,
+                # but a MinBatch sized under the cheaper pre-withdraw
+                # amortization can now cost more than C_max per batch,
+                # breaking the §4.2-4.3 blocking bound for everyone else.
+                stream = live.rspec.base.stream
+                self._resync_sharers(stream)
+                self._resize_stream_minbatches(stream, now)
         live.pending_static.clear()
         self.trace.log("withdraw", now, base_id)
+
+    def _resize_stream_minbatches(self, stream: str, now: float) -> None:
+        """Re-run MinBatch sizing for every live runtime on ``stream`` (its
+        amortized cost just changed — a sharer joined or left)."""
+        hook = getattr(self.policy, "on_recalibrate", None)
+        if hook is None:
+            return
+        for l in self._live.values():
+            if l.withdrawn or l.rspec.base.stream != stream:
+                continue
+            for rt in l.runtimes:
+                if rt.admitted and not (rt.completed or rt.deleted):
+                    try:
+                        hook(rt, now)
+                    except InfeasibleDeadline:
+                        pass  # keep the previous MinBatch; sizing is advisory
+
+    # ------------------------------------------------------------------
+    # Overload control (repro.core.overload)
+    # ------------------------------------------------------------------
+    def _overload_admit(self, live, first: Query, snaps: List[Query],
+                        c_max: float, now: float):
+        """The infeasible-admission escalation ladder: minimum load shed
+        (lowest tiers first, incoming and actives alike), else smallest
+        deadline extension through the ``on_renegotiate`` hook, else None
+        (fall through to rejection).  Returns ``(decision, report,
+        shed_fraction, error_bound, proposal)`` and mutates ``live`` (and
+        shed active runtimes) accordingly."""
+        cfg = self.overload
+        rspec = live.rspec
+        base_id = rspec.base_id
+        plan = plan_shedding([first, *snaps], c_max=c_max, now=now,
+                             config=cfg, prior_shed=self._prior_shed())
+        if plan.feasible and not plan.fractions:
+            return "admit", plan.report, 0.0, 0.0, None
+        # ``plan.report`` explains every rejection below: it is the FAILING
+        # feasibility report (shedding could not restore the conditions).
+        if plan.feasible and plan.fractions:
+            f_in = plan.fractions.get(first.query_id, 0.0)
+            shed_fr = bound = 0.0
+            if f_in > 0:
+                thin_base, shed_fr, bound = apply_shed(rspec.base, f_in)
+                live.rspec = dataclasses.replace(rspec, base=thin_base)
+                live.shed_fraction, live.error_bound = shed_fr, bound
+                # A thinned window no longer lands on the stream's pane
+                # grid: run it unshared rather than promising amortization
+                # the sampled scan cannot realize.
+                live.pane_ok = False
+                self.trace.log(
+                    "shed", now, base_id,
+                    f"fraction={shed_fr:.4f};error_bound={bound:.4f}",
+                )
+            for qid, f in plan.fractions.items():
+                if qid != first.query_id:
+                    self._shed_active(qid, f, now)
+            return "shed", plan.report, shed_fr, bound, None
+        if cfg.renegotiate:
+            proposal = min_deadline_extension(
+                first, snaps, c_max=c_max, now=now, config=cfg)
+            if proposal is not None:
+                accepted = (bool(self.on_renegotiate(proposal))
+                            if self.on_renegotiate is not None else False)
+                self.trace.log(
+                    "renegotiate", now, base_id,
+                    f"extension={proposal.extension:.6g};accepted={accepted}",
+                )
+                if accepted:
+                    ext = proposal.extension
+                    live.rspec = dataclasses.replace(
+                        rspec,
+                        deadline_offset=rspec.deadline_offset + ext,
+                        base=dataclasses.replace(
+                            rspec.base, deadline=rspec.base.deadline + ext),
+                    )
+                    return "renegotiate", proposal.report, 0.0, 0.0, proposal
+                return "reject", plan.report, 0.0, 0.0, proposal
+        return "reject", plan.report, 0.0, 0.0, None
+
+    def _shed_active(self, qid: str, fraction: float, now: float) -> None:
+        """Apply a shed fraction to one LIVE window (dynamic runtime or
+        pending static window) — the dropped tuples are never ingested."""
+        for l in self._live.values():
+            if l.withdrawn:
+                continue
+            for rt in l.runtimes:
+                if rt.q.query_id == qid and not (rt.completed or rt.deleted):
+                    self._apply_runtime_shed(rt, fraction, now)
+                    return
+            for i, q in enumerate(l.pending_static):
+                if q.query_id == qid:
+                    thin, cum, bound = apply_shed(q, fraction)
+                    if thin is not q:
+                        l.pending_static[i] = thin
+                        self._window_shed[qid] = (cum, bound)
+                        self.trace.log(
+                            "shed", now, qid,
+                            f"fraction={cum:.4f};error_bound={bound:.4f}",
+                        )
+                    return
+
+    def _apply_runtime_shed(self, rt: QueryRuntime, fraction: float,
+                            now: float) -> None:
+        thin, cum, bound = apply_shed(rt.q, fraction, processed=rt.processed)
+        if thin is rt.q:
+            return
+        rt.spec.query = thin
+        truth = rt.spec.truth
+        if truth is not None and truth.num_tuples_total > thin.num_tuples_total:
+            # Shedding is an actuation: the dropped tuples are never
+            # ingested, so the TRUE arrival the loop polls must be the
+            # sampled stream too.
+            keep = thin.num_tuples_total - rt.processed
+            tail = truth.num_tuples_total - rt.processed
+            rt.spec.truth = ThinnedArrival(
+                base=truth, keep=max(0, min(keep, tail)), prefix=rt.processed)
+        rt.spec.shed_fraction, rt.spec.error_bound = cum, bound
+        self.trace.log("shed", now, rt.q.query_id,
+                       f"fraction={cum:.4f};error_bound={bound:.4f}")
+        hook = getattr(self.policy, "on_shed", None)
+        if hook is not None and rt.admitted:
+            try:
+                hook(rt, now)
+            except InfeasibleDeadline:
+                pass  # keep the previous MinBatch; sizing is advisory
+
+    def rebalance(self):
+        """Mid-run overload response: when cost drift (recalibration) or a
+        mis-sized admission leaves the LIVE set infeasible, shed the minimum
+        from the lowest tiers to restore the necessary conditions.  Returns
+        the ``SheddingPlan`` applied, or None when overload control is off
+        or the live set is already feasible.  Called automatically after
+        every recalibration refit; safe to call by hand at any time."""
+        if self.overload is None:
+            return None
+        now = self.now
+        snaps = self._active_snapshot()
+        c_max = self.c_max if self.c_max is not None else float("inf")
+        if overload_check(snaps, c_max=c_max, now=now).feasible:
+            return None
+        plan = plan_shedding(snaps, c_max=c_max, now=now,
+                             config=self.overload,
+                             prior_shed=self._prior_shed())
+        if plan.feasible:
+            for qid, f in plan.fractions.items():
+                self._shed_active(qid, f, now)
+        return plan
+
+    def _prior_shed(self) -> Dict[str, float]:
+        """Cumulative already-shed fraction per live window — snapshots
+        erase the thinned arrival history, so the shed planner needs it
+        supplied to keep repeated rounds within the configured caps."""
+        from .overload import existing_shed
+
+        out: Dict[str, float] = {}
+        for l in self._live.values():
+            if l.withdrawn:
+                continue
+            for rt in l.runtimes:
+                if not (rt.completed or rt.deleted):
+                    f = existing_shed(rt.q)
+                    if f > 0:
+                        out[rt.q.query_id] = f
+            for q in l.pending_static:
+                f = existing_shed(q)
+                if f > 0:
+                    out[q.query_id] = f
+        return out
 
     # ------------------------------------------------------------------
     # Driving the loop
@@ -486,7 +770,13 @@ class SessionRuntime:
                 return
             live.pending_static.remove(q)
             window = split_window_id(q.query_id)[1] or 0
-            truth = live.rspec.window_truth(window)
+            truth = live.window_truth(window)
+            if (truth is not None
+                    and truth.num_tuples_total > q.num_tuples_total):
+                # Window-level shed (``_shed_active`` thinned this one
+                # pending window): the true stream must deliver the sampled
+                # tuples only — shedding happens at ingestion.
+                truth = ThinnedArrival(base=truth, keep=q.num_tuples_total)
             try:
                 plan = self.policy.plan(q)[q.query_id]
             except InfeasibleDeadline as e:
@@ -507,10 +797,13 @@ class SessionRuntime:
                 ))
                 self._drain_outcome_events()
                 continue
+            shed_fr, err_b = self._window_shed.get(
+                q.query_id, (live.shed_fraction, live.error_bound))
             execute_plan(
                 q, plan, self.executor, truth=truth,
                 trace=self.trace, on_batch=self._observe,
                 c_max=self.c_max, carryover=True,
+                shed_fraction=shed_fr, error_bound=err_b,
             )
             self._drain_outcome_events()
         raise RuntimeError(f"session exceeded {max_steps} steps before "
@@ -560,10 +853,12 @@ class SessionRuntime:
         if self._is_dynamic:
             spec = DynamicQuerySpec(
                 query=q,
-                truth=live.rspec.window_truth(w),
+                truth=live.window_truth(w),
                 num_groups=live.rspec.num_groups,
                 delete_time=live.rspec.delete_time,
                 total_known=live.rspec.total_known,
+                shed_fraction=live.shed_fraction,
+                error_bound=live.error_bound,
             )
             rt = QueryRuntime(spec=spec)
             live.runtimes.append(rt)
@@ -642,14 +937,17 @@ class SessionRuntime:
             f"drift={drift:.4f};refit={cal.refits};obs={cal.num_observations}",
         )
         hook = getattr(self.policy, "on_recalibrate", None)
-        if hook is None:
-            return
-        for rt in live.runtimes:
-            if rt.admitted and not (rt.completed or rt.deleted):
-                try:
-                    hook(rt, now)
-                except InfeasibleDeadline:
-                    pass  # keep the previous MinBatch; sizing is advisory
+        if hook is not None:
+            for rt in live.runtimes:
+                if rt.admitted and not (rt.completed or rt.deleted):
+                    try:
+                        hook(rt, now)
+                    except InfeasibleDeadline:
+                        pass  # keep the previous MinBatch; sizing is advisory
+        # Drift can leave the corrected workload infeasible — the overload
+        # path (when enabled) sheds the minimum from the lowest tiers to
+        # restore the necessary conditions instead of riding into misses.
+        self.rebalance()
 
     # ------------------------------------------------------------------
     # Internals
@@ -699,7 +997,7 @@ class SessionRuntime:
                 if snap is not None:
                     snaps.append(snap)
             snaps.extend(live.pending_static)
-        return snaps
+        return _relax_doomed(snaps, now)
 
     def _drain_outcome_events(self) -> None:
         while self._outcomes_seen < len(self.trace.outcomes):
@@ -754,14 +1052,16 @@ def _remaining_query(rt: QueryRuntime, now: float) -> Optional[Query]:
     (pending tuples with their remaining arrival instants): the live-set
     input to ``admission_check``.  Falls back to the original query above
     ``_SNAPSHOT_CAP`` pending tuples (conservative but still a valid
-    necessary-condition input)."""
+    necessary-condition input).
+
+    Deadlines already beyond saving are relaxed by the caller
+    (``_relax_doomed``) before the snapshot set reaches the admission
+    checks."""
     q = rt.q
     remaining = q.num_tuples_total - rt.processed
     if remaining <= 0:
         return None
-    if rt.processed == 0:
-        return q
-    if remaining > _SNAPSHOT_CAP:
+    if rt.processed == 0 or remaining > _SNAPSHOT_CAP:
         return q
     ts = tuple(
         q.arrival.input_time(k)
@@ -775,3 +1075,31 @@ def _remaining_query(rt: QueryRuntime, now: float) -> Optional[Query]:
         wind_end=max(ts[-1], ts[0]),
         submit_time=None,
     )
+
+
+def _relax_doomed(snaps: List[Query], now: float) -> List[Query]:
+    """Relax deadlines that are already beyond saving.
+
+    Processing the snapshot set in EDF order, each query's completion is at
+    least ``now`` plus the cumulative minimum work before and including it —
+    arrival availability and batching overheads only push it later.  A
+    deadline below that lower bound is ALREADY lost, whatever is or is not
+    admitted next: leaving it in place would make every deadline-prefix
+    containing it infeasible and lock admissions out permanently.  Such
+    deadlines are relaxed to the bound — the query's demand still occupies
+    the executor in every prefix, but only deadlines that can still be won
+    constrain the verdict."""
+    order = sorted(snaps, key=lambda q: q.deadline)
+    t = now
+    relaxed: Dict[int, float] = {}
+    for q in order:
+        t += q.cost_model.cost(q.num_tuples_total)
+        if q.deadline < t:
+            relaxed[id(q)] = t
+    if not relaxed:
+        return snaps
+    return [
+        dataclasses.replace(q, deadline=relaxed[id(q)])
+        if id(q) in relaxed else q
+        for q in snaps
+    ]

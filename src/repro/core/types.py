@@ -87,6 +87,17 @@ class Query:
     (``repro.core.panes``): queries naming the same stream can then share
     pane partial aggregates across overlapping windows.  ``stream=None``
     (the default) means "private stream" — never shared.
+
+    ``tier``/``shed`` are the overload-control knobs (``repro.core.overload``):
+    ``tier`` is a STRICT priority tier (0 = highest) that the dynamic
+    policies ALWAYS honor — they never run a ready tier-k query while a
+    ready query with a smaller tier number exists; with every query on the
+    default tier 0 (all ties) the ordering is byte-identical to the
+    tierless runtime.  ``shed`` says whether this query's answer may be
+    degraded to a uniformly sampled, scaled estimate under overload
+    (``shed=False`` routes infeasible admissions to deadline renegotiation
+    instead); it is inert until a session enables overload control AND the
+    workload is actually infeasible.
     """
 
     query_id: str
@@ -100,10 +111,14 @@ class Query:
     submit_time: Optional[float] = None  # when the query enters the system (§4)
     stream: Optional[str] = None  # shared-stream name (pane sharing)
     stream_offset: int = 0  # window start as a global stream tuple index
+    tier: int = 0  # strict priority tier (overload control; 0 = highest)
+    shed: bool = True  # may this answer degrade to a sampled estimate?
 
     def __post_init__(self) -> None:
         if self.wind_end < self.wind_start:
             raise ValueError("wind_end < wind_start")
+        if self.tier < 0:
+            raise ValueError(f"tier must be >= 0, got {self.tier}")
         if self.submit_time is None:
             self.submit_time = self.wind_start
 
@@ -275,6 +290,14 @@ class QueryOutcome:
     shortfall, which used to be silently recorded as a normal completion.
     ``num_tuples_total < 0`` means "not recorded" (hand-built outcomes in the
     comparison harness); such outcomes report ``complete == True``.
+
+    ``shed_fraction``/``error_bound`` record DELIBERATE degradation under
+    overload control (``repro.core.overload``): the fraction of the window's
+    tuples dropped by load shedding, and the reported relative error bound
+    of the resulting scaled-sample aggregate estimate.  Both stay 0.0 — and
+    the answer exact — whenever overload control never shed this query.
+    Shed tuples are not a shortfall: the query completed, by design, on a
+    uniform sample.
     """
 
     query_id: str
@@ -284,6 +307,8 @@ class QueryOutcome:
     num_batches: int
     tuples_processed: int = -1
     num_tuples_total: int = -1
+    shed_fraction: float = 0.0
+    error_bound: float = 0.0
 
     @property
     def met_deadline(self) -> bool:
@@ -446,6 +471,8 @@ class RecurringQuerySpec:
             submit_time=submit,
             stream=self.base.stream,
             stream_offset=self.base.stream_offset + window * self.slide_tuples,
+            tier=self.base.tier,
+            shed=self.base.shed,
         )
 
     def window_truth(self, window: int) -> Optional["ArrivalModel"]:  # noqa: F821
@@ -459,7 +486,8 @@ class SessionEvent:
     ``BatchExecution`` row."""
 
     kind: str   # "submit" | "reject" | "withdraw" | "window_open" |
-    #             "window_close" | "recalibrate"
+    #             "window_close" | "recalibrate" | "shed" | "renegotiate" |
+    #             "pane_incompatible" | "window_infeasible"
     time: float
     query_id: str = ""
     detail: str = ""

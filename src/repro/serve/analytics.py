@@ -19,6 +19,14 @@ overwrites rather than double-counts.
 
 ``measure_cost_model`` reproduces §6.2: run batches of different sizes,
 time them, fit the piecewise-linear cost model the scheduler consumes.
+
+Load shedding (``repro.core.overload``) reaches the real backend through the
+query's ``ThinnedArrival``: batch offsets arrive in KEPT-tuple units, the
+executor maps them to the underlying file indices (a systematic uniform
+sample of the stream) and weights each sampled record by the inverse keep
+rate, so the segagg partials — and therefore the final aggregates — are
+unbiased scaled estimates whose error bound the scheduler reported in
+``QueryOutcome.error_bound``.
 """
 from __future__ import annotations
 
@@ -40,6 +48,8 @@ from ..core import (
     Schedule,
     Session,
     SessionTrace,
+    ShiftedArrival,
+    ThinnedArrival,
     TraceArrival,
     fit_piecewise_linear,
 )
@@ -86,9 +96,16 @@ class AnalyticsExecutor:
             self._agg = lambda k, v: _segagg_ref_jit(k, v, self.num_groups)
 
     def process_batch(self, records: Dict[str, np.ndarray],
-                      slot: Optional[int] = None) -> BatchResult:
+                      slot: Optional[int] = None,
+                      weights: Optional[np.ndarray] = None) -> BatchResult:
+        """Compute one partial aggregate.  ``weights`` (per-record value
+        multipliers) realize sampled scans under load shedding: each kept
+        record is weighted by the inverse keep rate, making the partial a
+        Horvitz-Thompson estimate of the unsampled aggregate."""
         keys = np.asarray(self.query.key_fn(records), np.int32)
         vals = np.asarray(self.query.value_fn(records), np.float32)
+        if weights is not None:
+            vals = vals * np.asarray(weights, np.float32).reshape(-1, 1)
         t0 = time.perf_counter()
         part = self._agg(jnp.asarray(keys), jnp.asarray(vals))
         part = np.asarray(part)  # spill to host; device buffers released
@@ -122,6 +139,35 @@ def concat_files(files: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray
     return {k: np.concatenate([f[k] for f in files]) for k in keys}
 
 
+def _is_thinned(arrival) -> bool:
+    """Does the arrival chain contain a ``ThinnedArrival`` (load shedding)?"""
+    while True:
+        if isinstance(arrival, ThinnedArrival):
+            return True
+        if isinstance(arrival, ShiftedArrival):
+            arrival = arrival.base
+            continue
+        return False
+
+
+def _thinned_file_index(arrival, k: int):
+    """Map kept-tuple index ``k`` (1-based) through the arrival chain to the
+    underlying stream index, accumulating the inverse-keep-rate weight.
+    Nested thins (a query shed more than once) compose multiplicatively."""
+    w = 1.0
+    while True:
+        if isinstance(arrival, ShiftedArrival):
+            arrival = arrival.base
+            continue
+        if isinstance(arrival, ThinnedArrival):
+            if k > arrival.prefix and arrival.keep > 0:
+                w *= arrival.tail / arrival.keep
+            k = arrival.base_index(k)
+            arrival = arrival.base
+            continue
+        return k, w
+
+
 class AnalyticsRuntimeExecutor(BaseExecutor):
     """``repro.core.api.Executor`` over real segagg analytics jobs.
 
@@ -150,6 +196,25 @@ class AnalyticsRuntimeExecutor(BaseExecutor):
 
     def _execute(self, query: Query, num_tuples: int, offset: int) -> Optional[float]:
         ex, files = self._jobs[query.query_id]
+        if _is_thinned(query.arrival):
+            # Sampled scan (load shedding): offsets are in KEPT-tuple
+            # units; fetch the systematically sampled files and weight
+            # their records by the inverse keep rate so the partial is an
+            # unbiased scaled estimate of the unsampled aggregate.
+            chunk, weights = [], []
+            for k in range(offset + 1, offset + num_tuples + 1):
+                idx, w = _thinned_file_index(query.arrival, k)
+                if 0 < idx <= len(files):
+                    f = files[idx - 1]
+                    chunk.append(f)
+                    weights.append(
+                        np.full(len(next(iter(f.values()))), w, np.float32))
+            if not chunk:
+                return None
+            return ex.process_batch(
+                concat_files(chunk), slot=offset,
+                weights=np.concatenate(weights),
+            ).seconds
         chunk = files[offset: offset + num_tuples]
         if not chunk:
             return None

@@ -18,6 +18,10 @@ from repro.models.params import init_params, num_params
 
 jax.config.update("jax_enable_x64", False)
 
+# Heavyweight per-architecture parity suite: excluded from the fast CI
+# selection (-m "not slow"); the full-suite job still runs it.
+pytestmark = pytest.mark.slow
+
 
 def _specs(cfg):
     if cfg.family == "audio":

@@ -265,6 +265,7 @@ class TestServingEngine:
         np.testing.assert_allclose(out[32:], ref, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow  # full train-driver loop: the single heaviest test
 def test_train_driver_loss_improves(tmp_path):
     """End-to-end driver: a few real steps, loss goes down, checkpoint
     written, resume works (run in-process via main())."""

@@ -15,6 +15,11 @@ from repro.kernels.segagg.ref import combine_ref, pane_segagg_ref, segagg_ref
 from repro.kernels.ssd.ops import ssd as ssd_kernel
 from repro.kernels.ssd.ref import ssd_rec_ref
 
+# Kernel-vs-reference parity sweeps compile many shapes: excluded from the
+# fast CI selection (-m "not slow"); the full-suite job still runs them.
+pytestmark = pytest.mark.slow
+
+
 
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \

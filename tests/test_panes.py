@@ -534,3 +534,90 @@ class TestSharedFanOutEquality:
             _check_windows([(lo, n) for lo, n in windows])
 
         inner()
+
+
+class _StoreBackend:
+    """Real-backend stand-in that interacts with the pane store the way
+    ``SharedAnalyticsExecutor`` does — folding cached partials at merge
+    cost, scanning + depositing uncached panes — and reports a fixed wall
+    time so C_max straggling is controllable."""
+
+    def __init__(self, book, wall: float = 1.0):
+        from repro.core.runtime import BaseExecutor
+
+        class _Inner(BaseExecutor):
+            def __init__(inner):
+                super().__init__()
+                inner.pane_scans = 0
+                inner.pane_merges = 0
+                inner.fragment_scans = 0
+
+            def _execute(inner, query, num_tuples, offset):
+                width = book.widths.get(query.stream,
+                                        max(query.num_tuples_total, 1))
+                store = book.store
+                pos = query.stream_offset + offset
+                end = pos + num_tuples
+                while pos < end:
+                    idx = pos // width
+                    lo, hi = idx * width, (idx + 1) * width
+                    if pos == lo and hi <= end:
+                        e = store.entry(query.stream, idx)
+                        if e is not None and e.computed and e.data is not None:
+                            inner.pane_merges += 1
+                        else:
+                            inner.pane_scans += 1
+                            store.deposit(query.stream, idx,
+                                          by=query.query_id, data=object())
+                        pos = hi
+                    else:
+                        inner.fragment_scans += 1
+                        pos = min(hi, end)
+                return wall
+
+        self.executor = _Inner()
+
+
+class TestStragglerSharedWindow:
+    """Regression: a C_max straggler re-queue used to run AFTER the
+    SharedBook had already observed the batch (releasing/evicting its
+    panes), so the re-execution rescanned partials it had just shared and
+    attempted re-deposits on evicted panes.  The requeue now settles
+    BEFORE the book observes."""
+
+    @staticmethod
+    def _run(c_max):
+        qs = []
+        for i in range(2):
+            arr = UniformWindowArrival(wind_start=0.0, wind_end=7.0,
+                                       num_tuples_total=8)
+            qs.append(Query(f"q{i}", 0.0, 7.0, 200.0, 8, COST, arr,
+                            stream="s", stream_offset=0))
+        specs, book = share_workload(qs, pane_tuples=4)
+        backend = _StoreBackend(book, wall=1.0).executor
+        trace = run(Planner(policy="llf-dynamic", c_max=1e9).policy,
+                    specs, backend, sharing=book, c_max=c_max)
+        book.close()
+        return trace, book, backend
+
+    def test_requeue_does_not_rescan_shared_panes(self):
+        clean_trace, clean_book, clean_be = self._run(c_max=None)
+        strag_trace, strag_book, strag_be = self._run(c_max=0.5)
+        assert clean_trace.stragglers == []
+        assert len(strag_trace.stragglers) > 0
+        # identical physical scan work: every requeued batch folded its
+        # panes from the still-live cache instead of rescanning
+        assert strag_be.pane_scans == clean_be.pane_scans
+        assert strag_be.fragment_scans == clean_be.fragment_scans
+        # book-level accounting identical too (no double deposit/release)
+        cs, ss = clean_book.store.stats, strag_book.store.stats
+        assert (ss.scans, ss.hits, ss.fragment_scans, ss.evictions) == (
+            cs.scans, cs.hits, cs.fragment_scans, cs.evictions)
+        # and the modelled traces agree batch for batch
+        assert strag_trace.executions == clean_trace.executions
+        assert strag_trace.outcomes == clean_trace.outcomes
+
+    def test_requeued_merges_cost_merge_not_scan(self):
+        _, _, be = self._run(c_max=0.5)
+        # the requeues re-read every full pane through the cache
+        assert be.pane_merges > 0

@@ -8,6 +8,10 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
+# Hypothesis sweeps are the heavyweight end of the suite: excluded from the
+# fast CI selection (-m "not slow"); the full-suite job still runs them.
+pytestmark = pytest.mark.slow
+
 from repro.core import (
     ConstantRateArrival,
     DynamicQuerySpec,

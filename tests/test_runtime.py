@@ -148,6 +148,37 @@ class TestStragglerRequeue:
         trace = run(policy, [DynamicQuerySpec(query=q)], SimulatedExecutor())
         assert trace.stragglers == []
 
+    def test_observers_see_settled_batch_wall(self):
+        """Regression: ``on_batch`` fires AFTER the straggler re-queue, and
+        ``last_batch_wall`` reflects the re-execution — observers (e.g.
+        calibration feedback) get one settled measurement per batch, never
+        the straggling outlier."""
+
+        class RecoveringExecutor(BaseExecutor):
+            """First execution of each batch straggles; requeue is fast."""
+
+            def __init__(self):
+                super().__init__()
+                self.seen = set()
+
+            def _execute(self, query, num_tuples, offset):
+                if offset in self.seen:
+                    return 0.25  # the re-execution
+                self.seen.add(offset)
+                return 10.0  # the straggler
+
+        walls = []
+        q = fixed_query(deadline_slack=5.0)
+        ex = RecoveringExecutor()
+        policy = get_policy("llf-dynamic", delta_rsf=0.5, c_max=1.0)
+        trace = run(policy, [DynamicQuerySpec(query=q)], ex,
+                    on_batch=lambda e: walls.append(ex.last_batch_wall)
+                    if e.kind == "batch" else None)
+        n_batches = sum(1 for e in trace.executions if e.kind == "batch")
+        assert trace.stragglers.count(q.query_id) == n_batches
+        # exactly one observation per batch, each the settled re-execution
+        assert walls == [0.25] * n_batches
+
 
 class TestExecutePlan:
     def test_strict_replays_plan_verbatim(self):

@@ -494,3 +494,166 @@ class TestSessionMisc:
                                           num_windows=2))
         trace = session.run_until(math.inf)
         assert len(trace.outcome_series("r")) == 2
+
+
+class TestPhantomPrefixAdmission:
+    """Regression: mid-session admission used to credit a "phantom prefix"
+    — prewindow processing capacity in time that had ALREADY ELAPSED — so
+    a tight submission whose window lay (partly) in the past could be
+    admitted into a set with no room for it.  The schedulability checks
+    now floor all capacity at the admission instant, composing with
+    ShiftedArrival windows and nonzero stream offsets."""
+
+    @staticmethod
+    def _backlogged_session(start: float, offset: int):
+        from repro.core import UniformWindowArrival
+
+        arr = UniformWindowArrival(wind_start=start, wind_end=start + 100.0,
+                                   num_tuples_total=100)
+        q1 = Query("bg", start, start + 100.0, start + 130.0, 100,
+                   LinearCostModel(tuple_cost=1.0), arr,
+                   stream="s", stream_offset=offset)
+        s = Session(policy="llf-dynamic", c_max=200.0)
+        assert s.submit(q1).admitted
+        s.run_until(start + 90.0)
+        return s
+
+    @pytest.mark.parametrize("start", [0.0, 250.0])
+    @pytest.mark.parametrize("offset", [0, 64])
+    def test_past_window_submission_rejected(self, start, offset):
+        from repro.core import UniformWindowArrival
+
+        s = self._backlogged_session(start, offset)
+        now = s.now
+        assert now == pytest.approx(start + 90.9, abs=0.5)
+        # window already closed; 35 units of work, deadline leaves ~29
+        # units from now — together with the ~10-unit backlog: infeasible.
+        arr2 = UniformWindowArrival(wind_start=start + 85.0,
+                                    wind_end=start + 90.0,
+                                    num_tuples_total=35)
+        q2 = Query("late", start + 85.0, start + 90.0, start + 120.0, 35,
+                   LinearCostModel(tuple_cost=1.0), arr2,
+                   stream="s", stream_offset=offset + 200)
+        r = s.submit(q2)
+        assert not r.admitted, (
+            "phantom prefix: admission credited processing capacity in "
+            f"the past (reasons: {r.report.reasons})"
+        )
+
+    @pytest.mark.parametrize("start", [0.0, 250.0])
+    def test_loose_deadline_still_admitted(self, start):
+        from repro.core import UniformWindowArrival
+
+        s = self._backlogged_session(start, 0)
+        arr2 = UniformWindowArrival(wind_start=start + 85.0,
+                                    wind_end=start + 90.0,
+                                    num_tuples_total=35)
+        q2 = Query("late", start + 85.0, start + 90.0, start + 200.0, 35,
+                   LinearCostModel(tuple_cost=1.0), arr2)
+        assert s.submit(q2).admitted
+
+    def test_doomed_active_does_not_lock_out_admissions(self):
+        """Companion to the now-floor fix (no overload opt-in needed): an
+        active query whose deadline is already beyond saving must not make
+        every later admission infeasible — its lost deadline is relaxed in
+        the snapshot while its remaining work still counts."""
+        from repro.core import UniformWindowArrival
+
+        arr = UniformWindowArrival(wind_start=0.0, wind_end=100.0,
+                                   num_tuples_total=100)
+        doomed = Query("doomed", 0.0, 100.0, 105.0, 100,
+                       LinearCostModel(tuple_cost=2.0), arr)  # 200 units
+        s = Session(policy="llf-dynamic", c_max=200.0)
+        assert s.submit(doomed, force=True).admitted  # born infeasible
+        s.run_until(120.0)
+        arr2 = UniformWindowArrival(wind_start=120.0, wind_end=130.0,
+                                    num_tuples_total=5)
+        newcomer = Query("ok", 120.0, 130.0, 400.0, 5,
+                         LinearCostModel(tuple_cost=1.0), arr2)
+        assert s.submit(newcomer).admitted
+
+    @pytest.mark.parametrize("shift", [0.0, 40.0])
+    def test_max_prewindow_floors_at_now(self, shift):
+        from repro.core import ShiftedArrival, UniformWindowArrival
+        from repro.core.schedulability import max_prewindow_tuples
+
+        base = UniformWindowArrival(wind_start=0.0, wind_end=10.0,
+                                    num_tuples_total=10)
+        arr = base if shift == 0 else ShiftedArrival(base=base, shift=shift)
+        q = Query("w", shift, shift + 10.0, shift + 15.0, 10,
+                  LinearCostModel(tuple_cost=1.0), arr)
+        assert max_prewindow_tuples(q) > 0          # offline: capacity exists
+        after = q.wind_end + 1.0
+        assert max_prewindow_tuples(q, now=after) == 0  # window in the past
+
+
+class TestWithdrawSharerResync:
+    """Regression: withdrawing a sharing query mid-window re-amortized the
+    survivors' SharedCostModels but left their MinBatches sized under the
+    cheaper pre-withdraw cost — a single batch could then exceed C_max,
+    breaking the §4.2-4.3 blocking bound."""
+
+    C_MAX = 25.0
+
+    def _session(self):
+        from repro.core import UniformWindowArrival
+
+        s = Session(policy="llf-dynamic", sharing=True, c_max=self.C_MAX,
+                    admission_control=False)
+        for qid in ("a", "b", "c"):
+            arr = UniformWindowArrival(wind_start=0.0, wind_end=40.0,
+                                       num_tuples_total=40)
+            q = Query(qid, 0.0, 40.0, 90.0, 40,
+                      LinearCostModel(tuple_cost=1.0, overhead=0.5), arr,
+                      stream="s", stream_offset=0)
+            assert s.submit(RecurringQuerySpec(base=q, period=40.0,
+                                               num_windows=2))
+        s.run_until(10.0)
+        return s
+
+    @staticmethod
+    def _live_runtimes(session):
+        rts = []
+        for base in session.live_ids:
+            live = session._runtime._live[base]
+            rts.extend(rt for rt in live.runtimes
+                       if rt.admitted and not (rt.completed or rt.deleted))
+        return rts
+
+    def test_exhausted_specs_still_count_as_sharers(self):
+        from repro.core.cost_model import SharedCostModel
+
+        s = self._session()
+        shared = [rt.q.cost_model for rt in self._live_runtimes(s)
+                  if isinstance(rt.q.cost_model, SharedCostModel)]
+        assert shared, "expected shared in-flight windows"
+        # three specs in flight: the divisor must say 3, even though every
+        # spec has already instantiated its last window ("exhausted")
+        assert {m.sharers for m in shared} == {3}
+
+    def test_withdraw_resyncs_divisor_and_minbatch(self):
+        from repro.core.cost_model import SharedCostModel
+
+        s = self._session()
+        s.withdraw("c")
+        survivors = self._live_runtimes(s)
+        assert survivors
+        for rt in survivors:
+            cm = rt.q.cost_model
+            if isinstance(cm, SharedCostModel):
+                assert cm.sharers == 2  # stale divisor would still say 3
+            # the C_max blocking bound must hold under the NEW pricing —
+            # stale MinBatches violated it (cost(40) ~ 40.5 > 25)
+            if rt.min_batch > 0:
+                pending = rt.q.num_tuples_total - rt.processed
+                assert cm.cost(min(rt.min_batch, max(pending, 1))) \
+                    <= self.C_MAX + 1e-6
+
+    def test_withdraw_trace_still_consistent(self):
+        s = self._session()
+        s.withdraw("c")
+        trace = s.run_until(300.0)
+        done = {o.query_id for o in trace.outcomes}
+        assert window_query_id("a", 1) in done
+        assert window_query_id("b", 1) in done
+        assert window_query_id("c", 1) not in done
