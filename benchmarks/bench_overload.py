@@ -20,7 +20,7 @@ and error-bound curves; ``--smoke`` runs a two-point version as the CI gate:
 tier-0 at 100% under 4x load, every tier-1 error bound within the
 configured cap, and the naive cliff actually present.
 
-    PYTHONPATH=src python -m benchmarks.bench_overload [--smoke]
+    PYTHONPATH=src python -m benchmarks.bench_overload [--smoke] [--seed N]
 """
 from __future__ import annotations
 
@@ -80,13 +80,13 @@ def _workload(load: float, tiered: bool):
     return stages
 
 
-def _drive(load: float, mode: str) -> dict:
+def _drive(load: float, mode: str, seed=None) -> dict:
     """Run one configuration at one load level; returns per-tier metrics."""
     if mode == "overload":
         session = Session(policy="llf-dynamic", c_max=C_MAX,
                           overload=OverloadConfig(
                               max_shed=0.9, max_error_bound=MAX_ERROR_BOUND,
-                              headroom=HEADROOM))
+                              headroom=HEADROOM, seed=seed))
         stages = _workload(load, tiered=True)
         force = False
     else:  # naive: the pre-overload-control runtime
@@ -155,6 +155,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="two-point CI gate (writes overload_smoke.json)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="sampling-phase seed threaded through every shed "
+                         "(default None: the committed phase-0 results)")
     args = ap.parse_args([] if argv is None else argv)
 
     loads = SMOKE_LOADS if args.smoke else LOADS
@@ -163,13 +166,14 @@ def main(argv=None) -> None:
         "slots": NUM_SLOTS,
         "tier1_per_slot": TIER1_PER_SLOT,
         "max_error_bound": MAX_ERROR_BOUND,
+        "seed": args.seed,
         "loads": list(loads),
         "curves": {"naive": [], "overload": []},
     }
     with Timer() as t:
         for load in loads:
             for mode in ("naive", "overload"):
-                payload["curves"][mode].append(_drive(load, mode))
+                payload["curves"][mode].append(_drive(load, mode, args.seed))
     payload["harness_seconds"] = t.seconds
 
     name = "overload_smoke" if args.smoke else "overload"

@@ -41,6 +41,17 @@ around three first-class pieces:
   and deadline renegotiation for ``shed=False`` queries
   (``Session(overload=..., on_renegotiate=...)`` — docs/API.md "Overload
   control").
+* **Predictive scheduling** — opt-in arrival forecasting
+  (``repro.core.forecast``): every closed window feeds a per-spec
+  Holt-style ``ArrivalForecaster`` (level + trend, confidence bands,
+  burstiness); sessions with ``forecast=`` replan at window roll-over
+  against the FORECAST burst — shedding proactively before it lands, with
+  a mid-window miss check that refunds premature sheds — and pre-warm the
+  pane cache for forecast future windows during idle capacity.  The
+  per-spec observation record is public via ``Session.history()``
+  (``SpecHistory``), and Cameo-style per-query latency targets
+  (``Query.latency_target``) tighten the dynamic policies' urgency order
+  within tiers (docs/API.md "Predictive scheduling").
 
 Pure-Python/numpy and executor-agnostic; the legacy ``schedule_*`` free
 functions remain as deprecation shims (see docs/API.md for the migration
@@ -73,6 +84,16 @@ from .cost_model import (
     SharedCostModel,
     SublinearCostModel,
     fit_piecewise_linear,
+)
+from .forecast import (
+    ArrivalForecast,
+    ArrivalForecaster,
+    ArrivalObservation,
+    ForecastConfig,
+    SpecHistory,
+    forecast_query,
+    observe_arrival,
+    offered_arrival,
 )
 from .session import AdmissionResult, SessionRuntime
 # Canonical homes only below: the legacy shim modules (constraints,
@@ -162,7 +183,10 @@ from .single_query import (
 
 __all__ = [
     "AdmissionResult",
+    "ArrivalForecast",
+    "ArrivalForecaster",
     "ArrivalModel",
+    "ArrivalObservation",
     "BaseExecutor",
     "Batch",
     "BatchExecution",
@@ -177,6 +201,7 @@ __all__ = [
     "Executor",
     "ExecutorPool",
     "FeasibilityReport",
+    "ForecastConfig",
     "InfeasibleDeadline",
     "LARGE_NUMBER",
     "LinearCostModel",
@@ -207,6 +232,7 @@ __all__ = [
     "SharedCostModel",
     "SheddingPlan",
     "SimulatedExecutor",
+    "SpecHistory",
     "Strategy",
     "ThinnedArrival",
     "SublinearCostModel",
@@ -223,12 +249,15 @@ __all__ = [
     "feasible_assignment",
     "find_min_batch_size",
     "fit_piecewise_linear",
+    "forecast_query",
     "get_policy",
     "jittered_trace",
     "list_policies",
     "micro_batch_trace",
     "min_deadline_extension",
     "min_post_window_work",
+    "observe_arrival",
+    "offered_arrival",
     "one_shot_trace",
     "overload_check",
     "pane_width",

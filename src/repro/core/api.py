@@ -329,10 +329,14 @@ class Session:
     Accepts everything ``Planner.run`` accepts (policy name or instance,
     ``executor=``, ``workers=`` pool shorthand) plus the session knobs
     (``calibrate``, ``drift_threshold``, ``min_samples``, ``refit_every``,
-    ``c_max``, ``admission_control``, ``start_time``) and the pane-sharing
+    ``c_max``, ``admission_control``, ``start_time``), the pane-sharing
     knobs (``sharing=True`` to share pane partials across overlapping
     windows of queries on a common ``Query.stream``, ``pane_tuples`` to
-    override the GCD pane width — docs/API.md "Pane sharing").
+    override the GCD pane width — docs/API.md "Pane sharing"), the
+    overload knobs (``overload=``, ``on_renegotiate=`` — docs/API.md
+    "Overload control") and the predictive-scheduling knob (``forecast=``
+    — arrival forecasting, proactive shedding ahead of forecast bursts,
+    speculative pane pre-warming; docs/API.md "Predictive scheduling").
     """
 
     def __init__(self, policy: Union[str, SchedulingPolicy] = "llf-dynamic",
@@ -383,6 +387,20 @@ class Session:
         """The live ``CalibratingCostModel`` of ``base_id`` (None unless
         the session was built with ``calibrate=True``)."""
         return self._runtime.calibrator(base_id)
+
+    def history(self, base_id: Optional[str] = None):
+        """Public per-spec observation record
+        (``repro.core.forecast.SpecHistory``): per-window realized arrival
+        observations (collected at every window close, with or without
+        ``forecast=``) plus the calibration loop's cost samples and the
+        admission-time shed in force.  With ``base_id`` one spec's record;
+        without, a dict over every spec ever submitted."""
+        return self._runtime.history(base_id)
+
+    def forecaster(self, base_id: str):
+        """The live ``ArrivalForecaster`` of ``base_id`` (None unless the
+        session was built with ``forecast=``)."""
+        return self._runtime.forecaster(base_id)
 
     def submit(self, spec, *, force: bool = False):
         """Admit a Query / DynamicQuerySpec / RecurringQuerySpec into the

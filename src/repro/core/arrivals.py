@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 # All arrival-boundary comparisons share the module-level tolerance from
 # repro.core.types: a tuple arriving exactly at instant t counts as available
@@ -182,11 +182,18 @@ class ThinnedArrival(ArrivalModel):
     The first ``prefix`` base tuples pass through 1:1 (work already processed
     before the shed was applied); of the remaining ``tail = base.N - prefix``
     base tuples only ``keep`` survive, sampled SYSTEMATICALLY — kept tail
-    tuple ``j`` (1-based) is base tuple ``prefix + ceil(j * tail / keep)``,
-    so the sample is uniform over the tail and the LAST base tuple is always
-    kept (the thinned window ends exactly where the base window does).
-    ``input_time``/``tuples_available`` stay exact inverses of each other,
-    which every planner and the runtime's readiness logic rely on.
+    tuple ``j`` (1-based) is base tuple ``prefix + ceil((j*tail - r) / keep)``
+    where ``r`` is the sampling phase, so the sample is uniform over the tail
+    and the LAST base tuple is always kept (the thinned window ends exactly
+    where the base window does).  ``input_time``/``tuples_available`` stay
+    exact inverses of each other, which every planner and the runtime's
+    readiness logic rely on.
+
+    ``seed`` picks the phase ``r`` (systematic sampling with a seeded random
+    start, ``r in [0, keep)``) so repeated runs draw the SAME sample —
+    benchmarks thread one explicit seed through every shed they apply.
+    ``seed=None`` (the default) fixes ``r = 0``, which is bit-for-bit the
+    historical phase-free sampling.
 
     ``base_index(k)`` exposes the kept->base tuple mapping (1-based both
     sides); real backends use it to fetch the sampled records and scale the
@@ -196,6 +203,7 @@ class ThinnedArrival(ArrivalModel):
     base: ArrivalModel
     keep: int
     prefix: int = 0
+    seed: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.prefix < 0:
@@ -208,6 +216,19 @@ class ThinnedArrival(ArrivalModel):
             )
         if not 0 <= self.keep <= tail:
             raise ValueError(f"keep must be in [0, {tail}], got {self.keep}")
+        phase = 0
+        if self.seed is not None and self.keep > 1:
+            import random
+
+            # Any r < keep keeps the last base tuple (window end anchored)
+            # and the first kept index >= 1; see ``base_index``.
+            phase = random.Random(self.seed).randrange(self.keep)
+        object.__setattr__(self, "_phase", phase)
+
+    @property
+    def phase(self) -> int:
+        """Systematic-sampling start offset ``r`` (0 without a seed)."""
+        return self._phase
 
     @property
     def tail(self) -> int:
@@ -231,7 +252,8 @@ class ThinnedArrival(ArrivalModel):
         if num_tuples <= self.prefix or self.keep == 0:
             return min(num_tuples, self.prefix)
         j = min(num_tuples - self.prefix, self.keep)
-        return self.prefix + -(-j * self.tail // self.keep)  # ceil
+        # ceil((j*tail - r) / keep); r < keep so j=keep still maps to tail.
+        return self.prefix + -(-(j * self.tail - self._phase) // self.keep)
 
     def input_time(self, num_tuples: int) -> float:
         if num_tuples <= 0:
@@ -245,9 +267,11 @@ class ThinnedArrival(ArrivalModel):
         if self.keep == 0:
             return self.prefix
         # Exact inverse of ``base_index``: kept tail tuple j has arrived iff
-        # ceil(j * tail / keep) <= a - prefix, i.e. j <= (a-prefix)*keep/tail.
-        return self.prefix + min((a - self.prefix) * self.keep // self.tail,
-                                 self.keep)
+        # ceil((j*tail - r)/keep) <= a - prefix, i.e.
+        # j <= ((a-prefix)*keep + r)/tail.
+        return self.prefix + min(
+            ((a - self.prefix) * self.keep + self._phase) // self.tail,
+            self.keep)
 
 
 def jittered_trace(

@@ -400,6 +400,21 @@ class CalibratingCostModel(CostModelBase):
         """Per-batch feedback samples currently buffered."""
         return len(self._samples)
 
+    @property
+    def samples(self) -> Tuple[Tuple[float, float], ...]:
+        """Read-only view of the buffered per-batch feedback, as
+        ``(num_tuples, observed_cost)`` pairs in observation order — the
+        public face of the calibration history (``Session.history()`` and
+        the forecasting subsystem consume this instead of reaching into
+        the private buffers)."""
+        return tuple(self._samples)
+
+    @property
+    def agg_samples(self) -> Tuple[Tuple[float, float], ...]:
+        """Read-only view of the buffered final-aggregation feedback, as
+        ``(num_batches, observed_cost)`` pairs in observation order."""
+        return tuple(self._agg_samples)
+
     def observe(self, num_tuples: int, observed_cost: float) -> None:
         """Record one executed batch: ``observed_cost`` is the batch's true
         duration (modelled true cost in simulation, wall seconds on a real

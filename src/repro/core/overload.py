@@ -87,6 +87,13 @@ class OverloadConfig:
     ~0.2-0.3 absorbs the batching overheads in practice (the overload
     benchmark's setting).  Overload ACTIVATION always uses the untightened
     conditions — headroom only shapes how far a triggered shed goes.
+
+    ``seed`` is threaded into every ``ThinnedArrival`` the session applies
+    (``apply_shed(seed=...)``): the systematic sample's random start phase
+    becomes an explicit, reproducible choice instead of the fixed phase 0.
+    Which tuples a shed keeps never changes plan arithmetic (counts are
+    phase-invariant) — only the realized sample; ``None`` (the default)
+    keeps the historical phase-0 sampling byte-for-byte.
     """
 
     max_shed: float = 0.9
@@ -94,6 +101,7 @@ class OverloadConfig:
     renegotiate: bool = True
     max_extension: float = math.inf
     headroom: float = 0.0
+    seed: Optional[int] = None
 
     def __post_init__(self) -> None:
         if not 0.0 <= self.max_shed < 1.0:
@@ -174,7 +182,8 @@ def shed_error_bound(shed_fraction: float, kept_tuples: int) -> float:
 
 
 def apply_shed(query: Query, fraction: float, *,
-               processed: int = 0) -> Tuple[Query, float, float]:
+               processed: int = 0,
+               seed: Optional[int] = None) -> Tuple[Query, float, float]:
     """Thin ``query`` by dropping ``fraction`` of its not-yet-processed
     tuples uniformly; returns ``(thinned_query, actual_fraction, bound)``.
 
@@ -184,6 +193,8 @@ def apply_shed(query: Query, fraction: float, *,
     ``bound`` is ``shed_error_bound`` of the realized shed.  ``fraction <=
     0`` returns the query untouched.  Re-shedding an already-thinned query
     composes: the new ``ThinnedArrival`` wraps the previous one.
+    ``seed`` picks the systematic sample's start phase
+    (``ThinnedArrival.seed`` — reproducible sampling; None = phase 0).
     """
     total = query.num_tuples_total
     tail = total - processed
@@ -195,7 +206,8 @@ def apply_shed(query: Query, fraction: float, *,
         return query, existing_shed(query), shed_error_bound(
             existing_shed(query), total)
     keep = tail - drop
-    arr = ThinnedArrival(base=query.arrival, keep=keep, prefix=processed)
+    arr = ThinnedArrival(base=query.arrival, keep=keep, prefix=processed,
+                         seed=seed)
     new_total = processed + keep
     # Cumulative fraction against the query's ORIGINAL (pre-shed) total.
     orig = original_total(query)

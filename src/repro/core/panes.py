@@ -109,6 +109,14 @@ class PaneStats:
     ``evictions`` — cached panes dropped after their last subscriber
     released them; ``peak_resident`` — high-water mark of simultaneously
     cached panes (the cache's memory bound, in panes).
+
+    Speculative (forecast-driven) pre-warming keeps its own books:
+    ``speculative_deposits`` — panes computed AHEAD of demand during idle
+    capacity (``SharedBook.prewarm``; not counted in ``scans`` — the work
+    was free wrt the loaded period); ``speculative_hits`` — pre-warmed
+    panes a real subscriber later consumed from cache (the gamble paid
+    off); ``speculative_misses`` — pre-warmed panes discarded unconsumed
+    (the forecast was wrong; the idle work is written off).
     """
 
     scans: int = 0
@@ -116,6 +124,9 @@ class PaneStats:
     fragment_scans: int = 0
     evictions: int = 0
     peak_resident: int = 0
+    speculative_deposits: int = 0
+    speculative_hits: int = 0
+    speculative_misses: int = 0
 
     @property
     def reuse_ratio(self) -> float:
@@ -135,6 +146,7 @@ class PaneEntry:
     computed: bool = False
     depositor: str = ""
     data: Optional[object] = None
+    speculative: bool = False  # pre-warmed on a forecast, not yet consumed
 
 
 class PaneStore:
@@ -185,11 +197,17 @@ class PaneStore:
         e.refs.add(query_id)
 
     def deposit(self, stream: str, index: int, *, by: str,
-                data: Optional[object] = None) -> bool:
+                data: Optional[object] = None,
+                speculative: bool = False) -> bool:
         """Store the pane's partial aggregate (the first scan).  Returns
         True when this call computed the pane, False when it was already
         cached (idempotent: straggler re-queues and the book's
-        watermark-level deposit after a physical deposit are no-ops)."""
+        watermark-level deposit after a physical deposit are no-ops).
+
+        ``speculative=True`` marks a forecast-driven pre-warm deposit
+        (``SharedBook.prewarm``): counted under ``speculative_deposits``
+        rather than ``scans`` — the pane was computed from idle capacity,
+        not charged to any subscriber's demand scan."""
         e = self._entries.get((stream, index))
         if e is None:
             # Unsubscribed pane: nobody else will ever need it — don't cache.
@@ -199,7 +217,11 @@ class PaneStore:
         e.computed = True
         e.depositor = by
         e.data = data
-        self.stats.scans += 1
+        e.speculative = speculative
+        if speculative:
+            self.stats.speculative_deposits += 1
+        else:
+            self.stats.scans += 1
         self.stats.peak_resident = max(self.stats.peak_resident, self.resident)
         return True
 
@@ -259,6 +281,7 @@ class SharedBook:
         self.widths: Dict[str, int] = {}
         self._subs: Dict[str, _QuerySub] = {}
         self._default_width = pane_tuples
+        self._prewarms: Dict[str, List[PaneSpec]] = {}
 
     # -- registration ----------------------------------------------------
     def register_stream(self, stream: str, width: int) -> int:
@@ -312,6 +335,62 @@ class SharedBook:
         return sum(1 for s in self._subs.values()
                    if s.stream == stream and not s.done)
 
+    # -- speculative pre-warming (forecast-driven) -----------------------
+    def prewarm(self, query: Query, tag: str) -> int:
+        """Speculatively compute ``query``'s window panes from idle
+        capacity, on a forecast that the window WILL be demanded.
+
+        Every pane of the window not yet cached is deposited with
+        ``speculative=True`` under ``tag`` (the forecaster's identity — a
+        ``\"?\"``-prefixed pseudo-subscriber so it can never collide with a
+        real query id).  The tag holds a keep-alive reference per pane so
+        an eviction by departing real subscribers cannot throw the warm
+        partial away before the forecast resolves.  When real demand later
+        consumes a pane, ``observe`` converts it into a ``speculative_hit``
+        and drops the tag reference; panes still speculative when the
+        forecast is judged wrong are written off via ``discard_prewarm``.
+
+        Returns the number of panes actually pre-warmed (0 when the stream
+        has no registered pane grid yet, the window is empty, or everything
+        was already cached).  Idempotent per tag."""
+        if query.stream is None or tag in self._prewarms:
+            return 0
+        width = self.widths.get(query.stream)
+        if width is None:
+            return 0
+        lo = query.stream_offset
+        panes = panes_in(query.stream, width, lo, lo + query.num_tuples_total)
+        warmed: List[PaneSpec] = []
+        for p in panes:
+            e = self.store.entry(p.stream, p.index)
+            if e is not None and e.computed:
+                continue  # already cached by real demand — nothing to warm
+            self.store.subscribe(p, tag)
+            if self.store.deposit(p.stream, p.index, by=tag,
+                                  speculative=True):
+                warmed.append(p)
+            else:
+                self.store.release(p.stream, p.index, tag)
+        if warmed:
+            self._prewarms[tag] = warmed
+        return len(warmed)
+
+    def discard_prewarm(self, tag: str) -> int:
+        """Write off ``tag``'s pre-warm: every pane still speculative is a
+        forecast miss (counted, then released — evicting it unless real
+        subscribers hold it).  Panes already converted to hits were
+        released by ``observe`` and are skipped.  Returns the miss count;
+        idempotent."""
+        missed = 0
+        for p in self._prewarms.pop(tag, []):
+            e = self.store.entry(p.stream, p.index)
+            if e is not None and e.speculative and e.depositor == tag:
+                e.speculative = False
+                self.store.stats.speculative_misses += 1
+                missed += 1
+                self.store.release(p.stream, p.index, tag)
+        return missed
+
     # -- observation (the loop's on_batch hook) --------------------------
     def observe(self, ex: BatchExecution) -> None:
         """Advance ``ex.query_id``'s watermark by one executed batch and
@@ -337,6 +416,14 @@ class SharedBook:
                 # depositor == query_id: the scan was already counted at
                 # deposit time (by this very query's physical _execute or a
                 # previous observe call) — nothing more to count.
+                if entry.speculative:
+                    # A pre-warmed pane met real demand: the forecast paid
+                    # off.  Hand ownership to the demand path and drop the
+                    # prewarm tag's keep-alive reference.
+                    entry.speculative = False
+                    self.store.stats.speculative_hits += 1
+                    self.store.release(pane.stream, pane.index,
+                                       entry.depositor)
             elif pane.offset >= batch_start:
                 # This batch covered the whole pane: a reusable partial
                 # exists (real executors deposited data just before this
@@ -370,7 +457,10 @@ class SharedBook:
     def close(self) -> None:
         """End of run: release every outstanding reference so the store
         drains (shortfalls and withdrawn queries would otherwise pin
-        panes)."""
+        panes).  Unresolved pre-warms are written off as forecast misses —
+        the demand they anticipated never ran."""
+        for tag in list(self._prewarms):
+            self.discard_prewarm(tag)
         for qid in list(self._subs):
             self.withdraw(qid)
 

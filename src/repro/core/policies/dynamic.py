@@ -137,6 +137,14 @@ class DynamicPolicy:
         tier; the strategy's own order applies within a tier.  With every
         query on the default tier 0 the ordering — hence the trace — is
         byte-identical to the tierless sort.
+
+        Cameo-style latency targets (``Query.latency_target``) slot into
+        the strategy order WITHIN a tier: the deadline-flavoured key
+        components use the effective target instant (``Query.target_time``)
+        and target laxity instead of the raw deadline/laxity, so a query
+        whose answer is wanted early outranks an equal-deadline peer.  For
+        target-free queries both collapse to the deadline quantities —
+        all-``None`` workloads sort, and trace, byte-identically.
         """
         now = event.now
         ready = [r for r in state.active() if r.ready(now)]
@@ -201,22 +209,27 @@ class DynamicPolicy:
 
 @register_policy("llf-dynamic")
 class LLFPolicy(DynamicPolicy):
-    """Least laxity first (Eq. 10) — the paper's preferred strategy."""
+    """Least laxity first (Eq. 10) — the paper's preferred strategy.
+
+    Laxity is measured to the EFFECTIVE target instant (deadline, tightened
+    by any ``latency_target``), so latency-targeted queries gain urgency
+    exactly by how much earlier their answer is wanted."""
 
     strategy = Strategy.LLF
 
     def priority(self, rt, now):
-        return (rt.laxity(now), rt.q.deadline, rt.rr_seq)
+        return (rt.target_laxity(now), rt.q.target_time, rt.rr_seq)
 
 
 @register_policy("edf-dynamic")
 class EDFPolicy(DynamicPolicy):
-    """Earliest deadline first."""
+    """Earliest deadline first (earliest effective TARGET first when
+    latency targets are in play)."""
 
     strategy = Strategy.EDF
 
     def priority(self, rt, now):
-        return (rt.q.deadline, rt.laxity(now), rt.rr_seq)
+        return (rt.q.target_time, rt.target_laxity(now), rt.rr_seq)
 
 
 @register_policy("sjf-dynamic")
@@ -226,7 +239,7 @@ class SJFPolicy(DynamicPolicy):
     strategy = Strategy.SJF
 
     def priority(self, rt, now):
-        return (rt.remaining_cost(now), rt.q.deadline, rt.rr_seq)
+        return (rt.remaining_cost(now), rt.q.target_time, rt.rr_seq)
 
 
 @register_policy("rr-dynamic")

@@ -159,6 +159,14 @@ class QueryRuntime:
         """Eq. (10): deadline - now - remaining cost."""
         return self.q.deadline - now - self.remaining_cost(now)
 
+    def target_laxity(self, now: float) -> float:
+        """Laxity against the query's EFFECTIVE target instant
+        (``Query.target_time`` — Cameo-style latency target, capped by the
+        deadline).  Identical to ``laxity`` for target-free queries, so
+        policies ordering by it stay byte-identical on the default
+        workload."""
+        return self.laxity(now) - (self.q.deadline - self.q.target_time)
+
     def ready(self, now: float) -> bool:
         """MinBatch ready, or past the *predicted* readiness instant with
         something to process, or window over with a tail remainder (§4.4)."""
@@ -182,12 +190,22 @@ class QueryRuntime:
             return self.q.submit_time
         truth = self.spec.truth
         want = self.processed + self.min_batch
-        cands = [self.q.arrival.input_time(want)]  # predicted readiness (§4.4)
+        est_ready = self.q.arrival.input_time(want)  # predicted readiness (§4.4)
+        cands = []
+        if est_ready > now + _EPS:
+            cands.append(est_ready)
+        elif self.processed + 1 <= truth.num_tuples_total:
+            # Predicted readiness already passed: ``ready`` now flips the
+            # moment the truth stream delivers its NEXT tuple (avail 0 -> 1
+            # past est_ready).  A stale predicted instant must not stay a
+            # candidate, or a truth burst arriving later than predicted
+            # degenerates the wait loop into eps-stepping until it lands.
+            cands.append(truth.input_time(self.processed + 1))
         if want <= truth.num_tuples_total:
             cands.append(truth.input_time(want))  # actual count-readiness
         elif truth.tuples_available(truth.wind_end) > self.processed:
             cands.append(max(self.q.wind_end, truth.input_time(truth.num_tuples_total)))
-        t = min(cands)
+        t = min(cands) if cands else now + _EPS
         return t if t > now + _EPS else now + _EPS
 
     def done(self, now: float) -> bool:
@@ -639,6 +657,9 @@ def _record_outcome(
         num_tuples_total=query.num_tuples_total,
         shed_fraction=shed_fraction,
         error_bound=error_bound,
+        latency_target=query.latency_target,
+        target_time=(query.target_time
+                     if query.latency_target is not None else None),
     )
     trace.outcomes.append(out)
     return out

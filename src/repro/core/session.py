@@ -31,7 +31,21 @@ drains a fixed workload, resets the executor per query and returns.  A
   ``SharedCostModel`` and their pane partials carry over across recurring
   windows — window ``w+1`` reuses what window ``w`` scanned, and the
   refcounted ``PaneStore`` evicts each pane the moment its last subscriber
-  has consumed it.
+  has consumed it;
+* **predictive scheduling** — with ``forecast=`` every closed window's
+  realized arrivals feed a per-spec ``repro.core.forecast``
+  ``ArrivalForecaster`` (Holt-style level+trend with confidence bands).
+  At window roll-over the session re-runs the overload machinery against
+  the FORECAST arrival curve and sheds the new window proactively —
+  before the burst lands — instead of reacting mid-burst; a mid-window
+  miss detector compares realized arrivals against the forecast burst and
+  REFUNDS a premature shed (restoring the original window) when the
+  predicted demand is not materializing, falling back to the reactive
+  path.  With ``sharing=True`` idle loop instants additionally pre-warm
+  the pane cache for forecast future windows (speculative deposits,
+  written off as misses when the window never consumes them).  The
+  arrival history itself is collected UNCONDITIONALLY and exposed through
+  ``history()`` — forecasting only adds the acting-on part.
 
 Static policies run each window's plan on the same carried-over timeline
 (``execute_plan(carryover=True)``): window k+1 starts no earlier than both
@@ -42,11 +56,21 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from .api import Executor, SchedulingPolicy, get_policy
 from .arrivals import ArrivalModel, ThinnedArrival, TraceArrival
 from .cost_model import CalibratingCostModel, SharedCostModel
+from .forecast import (
+    ArrivalForecast,
+    ArrivalForecaster,
+    ArrivalObservation,
+    ForecastConfig,
+    SpecHistory,
+    forecast_query,
+    observe_arrival,
+    offered_arrival,
+)
 from .overload import (
     OverloadConfig,
     RenegotiationProposal,
@@ -81,6 +105,15 @@ from .types import (
 # this many pending tuples; beyond it the ORIGINAL query stands in (a
 # conservative, still-valid input to the necessary conditions).
 _SNAPSHOT_CAP = 20_000
+
+# Per-spec arrival observations retained for ``history()``/forecasting
+# (oldest evicted first; the forecaster's EWMA state is unaffected).
+_HISTORY_CAP = 512
+
+# Pseudo-subscriber prefix for speculative pane pre-warms.  ``?`` cannot
+# start a submitted base id's per-window query id, so prewarm references
+# can never collide with a real subscriber.
+_PREWARM_TAG = "?forecast:"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +159,18 @@ class _LiveSpec:
     # scaled estimates within error_bound).
     shed_fraction: float = 0.0
     error_bound: float = 0.0
+    # seed threaded into every ThinnedArrival this spec's shedding creates
+    # (``OverloadConfig.seed``): fixes the systematic-sampling phase so
+    # shed runs are reproducible; None keeps the historical phase-0 picks.
+    shed_seed: Optional[int] = None
+    # predictive scheduling (repro.core.forecast): per-window realized
+    # arrival observations (collected unconditionally — the fuel of
+    # ``history()``), the spec's forecaster (None unless ``forecast=``),
+    # and the miss-triggered hold that keeps a misbehaving forecast from
+    # acting until a window lands back inside its band.
+    history: List[ArrivalObservation] = dataclasses.field(default_factory=list)
+    forecaster: Optional[ArrivalForecaster] = None
+    forecast_hold: bool = False
     # dynamic path: instantiated window runtimes; static path: pending Queries
     runtimes: List[QueryRuntime] = dataclasses.field(default_factory=list)
     pending_static: List[Query] = dataclasses.field(default_factory=list)
@@ -167,7 +212,25 @@ class _LiveSpec:
         keep = self.rspec.base.num_tuples_total  # base already thinned
         if truth.num_tuples_total <= keep:
             return truth
-        return ThinnedArrival(base=truth, keep=keep)
+        return ThinnedArrival(base=truth, keep=keep, seed=self.shed_seed)
+
+
+@dataclasses.dataclass
+class _ProactiveShed:
+    """One window's forecast-driven proactive shed, kept until the window
+    closes so the mid-window miss check can compare realized arrivals
+    against the forecast burst — and refund the shed (restore the original
+    window) when the predicted demand is not materializing."""
+
+    live: _LiveSpec
+    forecast: ArrivalForecast
+    check_at: float            # instant of the mid-window forecast-miss check
+    fraction: float            # cumulative shed applied to the window
+    error_bound: float
+    orig_query: Query          # pre-shed window query (the refund target)
+    orig_truth: Optional[ArrivalModel]
+    checked: bool = False
+    missed: bool = False
 
 
 def as_recurring(
@@ -227,6 +290,7 @@ class SessionRuntime:
         overload: Union[bool, OverloadConfig] = False,
         on_renegotiate: Optional[
             Callable[[RenegotiationProposal], bool]] = None,
+        forecast: Union[bool, ForecastConfig, None] = None,
         **policy_params,
     ):
         if isinstance(policy, str):
@@ -261,6 +325,16 @@ class SessionRuntime:
         else:
             self.overload = OverloadConfig() if overload else None
         self.on_renegotiate = on_renegotiate
+        # Predictive scheduling (repro.core.forecast): None == disabled —
+        # arrival history is still collected (``history()``), but nothing
+        # acts on it and every trace stays byte-identical to the reactive
+        # session.  Enabled, window roll-overs replan against the forecast
+        # arrival curve (proactive shedding needs ``overload=`` too) and
+        # idle capacity pre-warms forecast panes (needs ``sharing=True``).
+        if isinstance(forecast, ForecastConfig):
+            self.forecast: Optional[ForecastConfig] = forecast
+        else:
+            self.forecast = ForecastConfig() if forecast else None
         # Pane sharing (repro.core.panes): ONE book for the whole session, so
         # pane partials cached in window w carry over to every later window
         # that overlaps it (slide < range), and across queries on the stream.
@@ -294,6 +368,16 @@ class SessionRuntime:
         # window-level (mid-run) sheds on the static path: query_id ->
         # (cumulative fraction, error bound), stamped onto the outcome
         self._window_shed: Dict[str, tuple] = {}
+        # predictive scheduling: per-window offered arrival awaiting its
+        # close-time observation, forecasts awaiting band scoring,
+        # proactive sheds awaiting the mid-window miss check, and window
+        # ids whose panes were speculatively pre-warmed.
+        self._window_truths: Dict[
+            str, Tuple[_LiveSpec, ArrivalModel, int, float, float]] = {}
+        self._pending_forecasts: Dict[
+            str, Tuple[_LiveSpec, ArrivalForecast]] = {}
+        self._proactive: Dict[str, _ProactiveShed] = {}
+        self._prewarmed: set = set()
         if start_time is not None:
             executor.reset(start_time)
 
@@ -411,6 +495,9 @@ class SessionRuntime:
                     refit_every=self.refit_every,
                 )
         live = _LiveSpec(rspec=rspec, calibrator=calibrator)
+        live.shed_seed = None if self.overload is None else self.overload.seed
+        if self.forecast is not None:
+            live.forecaster = ArrivalForecaster(self.forecast)
 
         first = rspec.window_query(0, cost_model=live.cost_model())
         stream = rspec.base.stream
@@ -535,6 +622,16 @@ class SessionRuntime:
                 stream = live.rspec.base.stream
                 self._resync_sharers(stream)
                 self._resize_stream_minbatches(stream, now)
+        # Predictive bookkeeping dies with the windows: pending forecasts
+        # of never-closing windows are unscoreable, and unconsumed
+        # pre-warms are forecast misses (the demand never ran).
+        for qid in ([rt.q.query_id for rt in live.runtimes]
+                    + [q.query_id for q in live.pending_static]):
+            self._pending_forecasts.pop(qid, None)
+            self._proactive.pop(qid, None)
+            if self.book is not None and qid in self._prewarmed:
+                self.book.discard_prewarm(_PREWARM_TAG + qid)
+                self._prewarmed.discard(qid)
         live.pending_static.clear()
         self.trace.log("withdraw", now, base_id)
 
@@ -578,7 +675,8 @@ class SessionRuntime:
             f_in = plan.fractions.get(first.query_id, 0.0)
             shed_fr = bound = 0.0
             if f_in > 0:
-                thin_base, shed_fr, bound = apply_shed(rspec.base, f_in)
+                thin_base, shed_fr, bound = apply_shed(
+                    rspec.base, f_in, seed=cfg.seed)
                 live.rspec = dataclasses.replace(rspec, base=thin_base)
                 live.shed_fraction, live.error_bound = shed_fr, bound
                 # A thinned window no longer lands on the stream's pane
@@ -627,7 +725,8 @@ class SessionRuntime:
                     return
             for i, q in enumerate(l.pending_static):
                 if q.query_id == qid:
-                    thin, cum, bound = apply_shed(q, fraction)
+                    thin, cum, bound = apply_shed(
+                        q, fraction, seed=self._shed_seed)
                     if thin is not q:
                         l.pending_static[i] = thin
                         self._window_shed[qid] = (cum, bound)
@@ -639,7 +738,8 @@ class SessionRuntime:
 
     def _apply_runtime_shed(self, rt: QueryRuntime, fraction: float,
                             now: float) -> None:
-        thin, cum, bound = apply_shed(rt.q, fraction, processed=rt.processed)
+        thin, cum, bound = apply_shed(rt.q, fraction, processed=rt.processed,
+                                      seed=self._shed_seed)
         if thin is rt.q:
             return
         rt.spec.query = thin
@@ -651,7 +751,8 @@ class SessionRuntime:
             keep = thin.num_tuples_total - rt.processed
             tail = truth.num_tuples_total - rt.processed
             rt.spec.truth = ThinnedArrival(
-                base=truth, keep=max(0, min(keep, tail)), prefix=rt.processed)
+                base=truth, keep=max(0, min(keep, tail)), prefix=rt.processed,
+                seed=self._shed_seed)
         rt.spec.shed_fraction, rt.spec.error_bound = cum, bound
         self.trace.log("shed", now, rt.q.query_id,
                        f"fraction={cum:.4f};error_bound={bound:.4f}")
@@ -684,6 +785,12 @@ class SessionRuntime:
                 self._shed_active(qid, f, now)
         return plan
 
+    @property
+    def _shed_seed(self) -> Optional[int]:
+        """Sampling-phase seed every session-made ``ThinnedArrival`` uses
+        (``OverloadConfig.seed``; None == historical phase 0)."""
+        return None if self.overload is None else self.overload.seed
+
     def _prior_shed(self) -> Dict[str, float]:
         """Cumulative already-shed fraction per live window — snapshots
         erase the thinned arrival history, so the shed planner needs it
@@ -704,6 +811,235 @@ class SessionRuntime:
                 if f > 0:
                     out[q.query_id] = f
         return out
+
+    # ------------------------------------------------------------------
+    # Predictive scheduling (repro.core.forecast)
+    # ------------------------------------------------------------------
+    def history(
+        self, base_id: Optional[str] = None,
+    ) -> Union[SpecHistory, Dict[str, SpecHistory]]:
+        """Public per-spec observation record: what the session has LEARNED
+        about its recurring queries.
+
+        For each spec: the per-window realized arrival observations
+        (count, mean rate, burstiness — collected at every window close,
+        with or without ``forecast=``), the calibration feedback loop's
+        cost samples (``(num_tuples, observed_cost)`` batch pairs and
+        ``(num_batches, observed_cost)`` final-aggregation pairs; empty
+        without ``calibrate=True``), and the admission-time degradation in
+        force.  This is the supported read path for consumers — the
+        ``_LiveSpec``/calibrator buffers behind it are internals.
+
+        With ``base_id`` returns that spec's ``SpecHistory`` (KeyError for
+        unknown ids); without, a dict over every spec ever submitted
+        (withdrawn ones included — their history remains observable).
+        """
+        if base_id is not None:
+            return self._spec_history(self._live[base_id])
+        return {b: self._spec_history(l) for b, l in self._live.items()}
+
+    def _spec_history(self, live: _LiveSpec) -> SpecHistory:
+        cal = live.calibrator
+        return SpecHistory(
+            base_id=live.base_id,
+            arrivals=tuple(live.history),
+            cost_samples=cal.samples if cal is not None else (),
+            agg_samples=cal.agg_samples if cal is not None else (),
+            shed_fraction=live.shed_fraction,
+            error_bound=live.error_bound,
+        )
+
+    def forecaster(self, base_id: str) -> Optional[ArrivalForecaster]:
+        """The live ``ArrivalForecaster`` of ``base_id`` (None unless the
+        session runs with ``forecast=``)."""
+        return self._live[base_id].forecaster
+
+    def _proactive_replan(
+        self, live: _LiveSpec, w: int, q: Query,
+    ) -> Tuple[Query, Optional[Tuple[float, float]]]:
+        """Window roll-over under forecasting: forecast window ``w``'s
+        arrivals and, when the forecast burst would leave the live set
+        infeasible, shed the new window NOW — before the burst lands —
+        instead of waiting for the reactive path to fire mid-burst.
+
+        Returns ``(query, None)`` when nothing was shed, else ``(thinned
+        query, (cumulative_fraction, error_bound))``.  Only the NEW
+        window's own planned fraction is actuated: proactively thinning
+        OTHER live queries on a forecast would not be refundable once they
+        process sampled prefixes, so active queries stay with the reactive
+        machinery (``rebalance``/admission), which this window's trimmed
+        demand now helps avoid."""
+        fcr = live.forecaster
+        if fcr is None or not fcr.ready or live.withdrawn:
+            return q, None
+        fc = fcr.forecast(w)
+        if fc is None:
+            return q, None
+        # Score every acted-era forecast at window close (band check), even
+        # ones a hold kept from acting — a held forecaster must be able to
+        # EARN the hold release by landing back inside its band.
+        self._pending_forecasts[q.query_id] = (live, fc)
+        if (live.forecast_hold or self.overload is None or not q.shed
+                or fc.lower <= 0):
+            return q, None
+        fq = forecast_query(q, fc)
+        if fq is q:
+            return q, None  # no burst compression to act on
+        now = self.now
+        c_max = self.c_max if self.c_max is not None else float("inf")
+        snaps = self._active_snapshot()
+        probe = [fq, *snaps]
+        if (overload_check(probe, c_max=c_max, now=now).feasible
+                and tiered_work_demand_condition(probe, now).feasible):
+            return q, None  # the forecast burst fits — nothing to do
+        plan = plan_shedding(probe, c_max=c_max, now=now,
+                             config=self.overload,
+                             prior_shed=self._prior_shed())
+        if not plan.feasible:
+            return q, None  # reactive path will deal with the real burst
+        f = plan.fractions.get(fq.query_id, 0.0)
+        if f <= 0:
+            return q, None
+        thin, cum, bound = apply_shed(q, f, seed=live.shed_seed)
+        if thin is q:
+            return q, None
+        bs = fc.burst_span(q.wind_start, q.wind_end)
+        check_at = (q.wind_end - bs) + self.forecast.miss_check_frac * bs
+        self._proactive[q.query_id] = _ProactiveShed(
+            live=live, forecast=fc, check_at=check_at, fraction=cum,
+            error_bound=bound, orig_query=q, orig_truth=live.window_truth(w),
+        )
+        self.trace.log(
+            "forecast_shed", now, q.query_id,
+            f"fraction={cum:.4f};error_bound={bound:.4f};"
+            f"predicted={fc.tuples:.1f};band=[{fc.lower:.1f},{fc.upper:.1f}]",
+        )
+        return thin, (cum, bound)
+
+    def _forecast_review(self) -> None:
+        """Mid-window forecast-miss check: once ``miss_check_frac`` of a
+        proactively-shed window's forecast burst should have arrived,
+        realized arrivals below the expected curve (lower band) mean the
+        burst is NOT materializing — the shed was premature.  Record the
+        miss, hold the forecaster from further action, and refund the shed
+        when the window has not started consuming its sampled stream."""
+        if not self._proactive:
+            return
+        now = self.now
+        for qid, rec in self._proactive.items():
+            if rec.checked or now < rec.check_at - EPS:
+                continue
+            rec.checked = True
+            q0 = rec.orig_query
+            offered = offered_arrival(
+                rec.orig_truth if rec.orig_truth is not None else q0.arrival)
+            actual = offered.tuples_available(now)
+            expected = rec.forecast.expected_by(now, q0.wind_start,
+                                                q0.wind_end)
+            expected *= self.forecast.miss_tolerance
+            if actual + EPS >= expected:
+                continue  # burst on track (within tolerance) — keep the shed
+            rec.missed = True
+            rec.live.forecaster.record_miss()
+            rec.live.forecast_hold = True
+            self._refund_forecast_shed(qid, rec, now)
+
+    def _refund_forecast_shed(self, qid: str, rec: _ProactiveShed,
+                              now: float) -> None:
+        """Undo one window's proactive shed (the forecast missed): restore
+        the original window query/truth so the tuples the shed would have
+        dropped are ingested after all.  Only safe while nothing of the
+        sampled stream has been processed — beyond that the kept-index
+        sampling is already baked into results and the shed stands."""
+        live = rec.live
+        for rt in live.runtimes:
+            if rt.q.query_id != qid or rt.completed or rt.deleted:
+                continue
+            if rt.processed > 0:
+                return  # sampled prefix consumed — refund no longer sound
+            rt.spec.query = rec.orig_query
+            rt.spec.truth = rec.orig_truth
+            rt.spec.shed_fraction = live.shed_fraction
+            rt.spec.error_bound = live.error_bound
+            self.trace.log("forecast_refund", now, qid,
+                           f"fraction={rec.fraction:.4f}")
+            hook = getattr(self.policy, "on_shed", None)
+            if hook is not None and rt.admitted:
+                try:
+                    hook(rt, now)  # re-size MinBatch for the restored total
+                except InfeasibleDeadline:
+                    pass  # keep the previous MinBatch; sizing is advisory
+            return
+        for i, q in enumerate(live.pending_static):
+            if q.query_id == qid:
+                live.pending_static[i] = rec.orig_query
+                self._window_shed.pop(qid, None)
+                self.trace.log("forecast_refund", now, qid,
+                               f"fraction={rec.fraction:.4f}")
+                return
+
+    def _prewarm(self) -> None:
+        """Speculative pane pre-warming: the loop just idled, so spend the
+        free capacity computing pane partials for registered FUTURE windows
+        of specs whose forecaster has earned trust — when the window later
+        runs, its scans become cache hits.  Deposits are refcount-tagged
+        speculative (``repro.core.panes``): consumed ones convert to
+        ``speculative_hits``, unconsumed ones are written off as
+        ``speculative_misses`` when the window closes or is withdrawn."""
+        if (self.book is None or self.forecast is None
+                or not self.forecast.prewarm):
+            return
+        now = self.now
+        for live in self._live.values():
+            fcr = live.forecaster
+            if (live.withdrawn or not live.pane_ok or fcr is None
+                    or not fcr.ready or live.forecast_hold):
+                continue
+            for rt in live.runtimes:
+                q = rt.q
+                if (rt.completed or rt.deleted or rt.processed > 0
+                        or q.stream is None
+                        or q.wind_start <= now + EPS
+                        or q.query_id in self._prewarmed
+                        or q.query_id in self._proactive
+                        or not self.book.knows(q.query_id)):
+                    continue
+                n = self.book.prewarm(q, _PREWARM_TAG + q.query_id)
+                if n:
+                    self._prewarmed.add(q.query_id)
+                    self.trace.log("pane_prewarm", now, q.query_id,
+                                   f"panes={n}")
+
+    def _on_window_close(self, outcome: QueryOutcome) -> None:
+        """Close-time bookkeeping of one window: observe its realized
+        arrivals into the spec's history, fold them into the forecaster,
+        score the window's forecast against its confidence band, and write
+        off any unconsumed speculative pre-warm."""
+        qid = outcome.query_id
+        rec = self._window_truths.pop(qid, None)
+        if rec is None:
+            return  # not a session window (defensive)
+        live, offered, w, ws, we = rec
+        obs = observe_arrival(offered, window=w, wind_start=ws, wind_end=we)
+        live.history.append(obs)
+        if len(live.history) > _HISTORY_CAP:
+            del live.history[0]
+        fcr = live.forecaster
+        pending = self._pending_forecasts.pop(qid, None)
+        pro = self._proactive.pop(qid, None)
+        if fcr is not None:
+            if pending is not None and not (pro is not None and pro.missed):
+                fc = pending[1]
+                if fc.contains(obs.num_tuples):
+                    fcr.record_hit()
+                    live.forecast_hold = False
+                else:
+                    fcr.record_miss()
+                    live.forecast_hold = True
+            fcr.observe(obs)
+        if self.book is not None and qid in self._prewarmed:
+            self.book.discard_prewarm(_PREWARM_TAG + qid)
+            self._prewarmed.discard(qid)
 
     # ------------------------------------------------------------------
     # Driving the loop
@@ -737,6 +1073,11 @@ class SessionRuntime:
             self._replenish()
             status = self._core.tick(horizon)
             self._drain_outcome_events()
+            if status == "wait":
+                # The loop just idled forward to the next readiness
+                # instant: free capacity forecast-driven pane pre-warming
+                # may spend (no-op unless forecast= AND sharing=).
+                self._prewarm()
             if status == "horizon":
                 return
             if status == "stop" or (
@@ -773,10 +1114,12 @@ class SessionRuntime:
             truth = live.window_truth(window)
             if (truth is not None
                     and truth.num_tuples_total > q.num_tuples_total):
-                # Window-level shed (``_shed_active`` thinned this one
-                # pending window): the true stream must deliver the sampled
-                # tuples only — shedding happens at ingestion.
-                truth = ThinnedArrival(base=truth, keep=q.num_tuples_total)
+                # Window-level shed (``_shed_active`` or a proactive
+                # forecast shed thinned this one pending window): the true
+                # stream must deliver the sampled tuples only — shedding
+                # happens at ingestion.
+                truth = ThinnedArrival(base=truth, keep=q.num_tuples_total,
+                                       seed=self._shed_seed)
             try:
                 plan = self.policy.plan(q)[q.query_id]
             except InfeasibleDeadline as e:
@@ -832,12 +1175,33 @@ class SessionRuntime:
             return
         w = live.next_window
         q = live.rspec.window_query(w, cost_model=live.cost_model())
-        if self.book is not None and q.stream is not None and live.pane_ok:
+        truth = live.window_truth(w)
+        # Arrival history is collected for EVERY window (the fuel of
+        # ``history()`` and forecasting): remember the offered stream —
+        # shedding unwrapped — and observe it once the window closes.
+        self._window_truths[q.query_id] = (
+            live,
+            offered_arrival(truth if truth is not None else q.arrival),
+            w,
+            q.wind_start,
+            q.wind_end,
+        )
+        q, proactive = self._proactive_replan(live, w, q)
+        if (proactive is not None and truth is not None
+                and truth.num_tuples_total > q.num_tuples_total):
+            # A proactive shed is the same actuation as a reactive one:
+            # the dropped tuples are never ingested.
+            truth = ThinnedArrival(base=truth, keep=q.num_tuples_total,
+                                   seed=live.shed_seed)
+        if (self.book is not None and q.stream is not None and live.pane_ok
+                and proactive is None):
             # Shared stream with actual overlap (other live specs and/or
             # this spec's own sliding windows): the window query plans and
             # runs under the amortized shared cost, and its panes join the
             # session-wide store — partials cached by earlier windows are
             # reused here (cache carry-over across recurring windows).
+            # A proactively-shed window skips this: its thinned scan no
+            # longer lands on the pane grid (same rule as admission shed).
             k = self._stream_sharers(q.stream)
             if k >= 2:
                 q.cost_model = SharedCostModel(
@@ -851,26 +1215,34 @@ class SessionRuntime:
         live.next_window += 1
         self.trace.log("window_open", q.submit_time, q.query_id)
         if self._is_dynamic:
+            shed_fr, err_b = (proactive if proactive is not None
+                              else (live.shed_fraction, live.error_bound))
             spec = DynamicQuerySpec(
                 query=q,
-                truth=live.window_truth(w),
+                truth=truth,
                 num_groups=live.rspec.num_groups,
                 delete_time=live.rspec.delete_time,
                 total_known=live.rspec.total_known,
-                shed_fraction=live.shed_fraction,
-                error_bound=live.error_bound,
+                shed_fraction=shed_fr,
+                error_bound=err_b,
             )
             rt = QueryRuntime(spec=spec)
             live.runtimes.append(rt)
             self._state.runtimes.append(rt)
         else:
+            if proactive is not None:
+                self._window_shed[q.query_id] = proactive
             live.pending_static.append(q)
 
     def _replenish(self, horizon: float = math.inf) -> None:
         """Keep the NEXT window of every live spec instantiated (lazy
         roll-over: open-ended recurrence never materializes more than one
         future window ahead).  The static path additionally materializes
-        every window opening before ``horizon``."""
+        every window opening before ``horizon``.
+
+        Doubles as the predictive heartbeat: pending forecast-miss checks
+        run first, so a refund lands before the loop's next decision."""
+        self._forecast_review()
         for live in self._live.values():
             if self._is_dynamic:
                 last = live.runtimes[-1] if live.runtimes else None
@@ -1007,6 +1379,7 @@ class SessionRuntime:
                 "window_close", o.completion_time, o.query_id,
                 f"met={o.met_deadline};shortfall={o.shortfall}",
             )
+            self._on_window_close(o)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return (

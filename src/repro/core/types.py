@@ -98,6 +98,17 @@ class Query:
     (``shed=False`` routes infeasible admissions to deadline renegotiation
     instead); it is inert until a session enables overload control AND the
     workload is actually infeasible.
+
+    ``latency_target`` is a Cameo-style per-query RESPONSE latency target:
+    the submitter wants the answer within ``latency_target`` time units of
+    window close, possibly much tighter than the hard ``deadline``.  It is
+    advisory, not a feasibility bound — dynamic policies order by the
+    EFFECTIVE target instant ``target_time = min(deadline, wind_end +
+    latency_target)`` within a tier (so a tight-target query wins ties
+    against an equal-deadline one), and ``QueryOutcome`` reports whether
+    the target was met.  With the default ``None`` the target instant IS
+    the deadline and every ordering — and trace — is byte-identical to the
+    targetless runtime.
     """
 
     query_id: str
@@ -113,12 +124,16 @@ class Query:
     stream_offset: int = 0  # window start as a global stream tuple index
     tier: int = 0  # strict priority tier (overload control; 0 = highest)
     shed: bool = True  # may this answer degrade to a sampled estimate?
+    latency_target: Optional[float] = None  # desired answer latency past wind_end
 
     def __post_init__(self) -> None:
         if self.wind_end < self.wind_start:
             raise ValueError("wind_end < wind_start")
         if self.tier < 0:
             raise ValueError(f"tier must be >= 0, got {self.tier}")
+        if self.latency_target is not None and self.latency_target < 0:
+            raise ValueError(
+                f"latency_target must be >= 0, got {self.latency_target}")
         if self.submit_time is None:
             self.submit_time = self.wind_start
 
@@ -131,6 +146,15 @@ class Query:
     def slack_time(self) -> float:
         """Eq. (2): slackTime = deadline - windEndTime - minCompCost."""
         return self.deadline - self.wind_end - self.min_comp_cost
+
+    @property
+    def target_time(self) -> float:
+        """The instant the answer is WANTED by: ``wind_end +
+        latency_target``, never later than the hard deadline; the deadline
+        itself when no latency target is set."""
+        if self.latency_target is None:
+            return self.deadline
+        return min(self.deadline, self.wind_end + self.latency_target)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,6 +322,12 @@ class QueryOutcome:
     the answer exact — whenever overload control never shed this query.
     Shed tuples are not a shortfall: the query completed, by design, on a
     uniform sample.
+
+    ``latency_target``/``target_time`` mirror the query's Cameo-style
+    response-latency target (``Query.latency_target``): ``target_time`` is
+    the absolute instant the answer was wanted by and ``met_target`` the
+    verdict against it.  Both stay ``None`` — and ``met_target`` reports
+    the plain deadline verdict — for queries without a target.
     """
 
     query_id: str
@@ -309,11 +339,21 @@ class QueryOutcome:
     num_tuples_total: int = -1
     shed_fraction: float = 0.0
     error_bound: float = 0.0
+    latency_target: Optional[float] = None
+    target_time: Optional[float] = None
 
     @property
     def met_deadline(self) -> bool:
         # Allow tiny float slop from accumulated arithmetic.
         return self.completion_time <= self.deadline + EPS
+
+    @property
+    def met_target(self) -> bool:
+        """Completion against the latency-target instant (the deadline
+        verdict when the query carried no target)."""
+        if self.target_time is None:
+            return self.met_deadline
+        return self.completion_time <= self.target_time + EPS
 
     @property
     def shortfall(self) -> int:
@@ -473,6 +513,7 @@ class RecurringQuerySpec:
             stream_offset=self.base.stream_offset + window * self.slide_tuples,
             tier=self.base.tier,
             shed=self.base.shed,
+            latency_target=self.base.latency_target,
         )
 
     def window_truth(self, window: int) -> Optional["ArrivalModel"]:  # noqa: F821
@@ -487,7 +528,8 @@ class SessionEvent:
 
     kind: str   # "submit" | "reject" | "withdraw" | "window_open" |
     #             "window_close" | "recalibrate" | "shed" | "renegotiate" |
-    #             "pane_incompatible" | "window_infeasible"
+    #             "pane_incompatible" | "window_infeasible" |
+    #             "forecast_shed" | "forecast_refund" | "pane_prewarm"
     time: float
     query_id: str = ""
     detail: str = ""

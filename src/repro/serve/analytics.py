@@ -437,6 +437,8 @@ def run_session(
     policy: str = "llf-dynamic",
     calibrate: bool = True,
     use_kernel: bool = False,
+    forecast=None,
+    latency_target: Optional[float] = None,
     **session_kw,
 ) -> Tuple[Dict[int, np.ndarray], SessionTrace]:
     """Session mode over the REAL segagg backend: the paper's continuously
@@ -449,6 +451,15 @@ def run_session(
     the scheduler's cost model refits online from measured wall seconds
     (cost units == seconds, §1/§6.2), so a mis-measured offline model heals
     while the session runs.
+
+    Predictive-scheduling knobs (docs/API.md "Predictive scheduling"):
+    ``forecast=`` (bool or ``repro.core.ForecastConfig``) turns on arrival
+    forecasting and proactive replanning over the real backend —
+    per-window FILE-arrival observations feed the forecaster exactly like
+    tuple arrivals in simulation; ``latency_target=`` stamps a Cameo-style
+    per-query latency target (seconds past window close) onto the
+    recurring query, tightening its urgency in the dynamic policies and
+    reported per window via ``QueryOutcome.met_target``.
 
     Returns ({window_index: combined_aggregate}, SessionTrace).
     """
@@ -473,6 +484,7 @@ def run_session(
         num_tuples_total=n,
         cost_model=cost_model,
         arrival=base_arr,
+        latency_target=latency_target,
     )
     truths = [TraceArrival(timestamps=tuple(ts)) for ts in window_timestamps]
     rspec = RecurringQuerySpec(
@@ -489,7 +501,7 @@ def run_session(
     }
     executor = AnalyticsRuntimeExecutor(jobs, scale, use_kernel)
     session = Session(policy=policy, executor=executor, calibrate=calibrate,
-                      **session_kw)
+                      forecast=forecast, **session_kw)
     session.submit(rspec)
     trace = session.run()
     results = {

@@ -13,6 +13,7 @@ from repro.core import (
     EPS,
     ConstantRateArrival,
     ShiftedArrival,
+    ThinnedArrival,
     TraceArrival,
     UniformWindowArrival,
     jittered_trace,
@@ -119,6 +120,83 @@ class TestExactArrivalBoundaries:
         assert arr.input_time(10) == arr.wind_end == 10.0
 
 
+class TestTransformComposition:
+    """Stacking the two arrival transforms in either order keeps the
+    ``input_time``/``tuples_available`` inverse invariants exact, and
+    shift/thin commute: shifting a thinned stream equals thinning the
+    shifted stream (same keep, same phase)."""
+
+    def _base(self, n: int = 24) -> ConstantRateArrival:
+        return ConstantRateArrival(wind_start=1.0, rate=2.0,
+                                   num_tuples_total=n)
+
+    @pytest.mark.parametrize("seed", [None, 0, 7, 12345])
+    @pytest.mark.parametrize("keep", [1, 7, 13, 24])
+    def test_shift_over_thin(self, keep, seed):
+        arr = ShiftedArrival(
+            base=ThinnedArrival(base=self._base(), keep=keep, seed=seed),
+            shift=5.0)
+        check_inverse_invariants(arr)
+
+    @pytest.mark.parametrize("seed", [None, 0, 7, 12345])
+    @pytest.mark.parametrize("keep", [1, 7, 13, 24])
+    def test_thin_over_shift(self, keep, seed):
+        arr = ThinnedArrival(
+            base=ShiftedArrival(base=self._base(), shift=5.0),
+            keep=keep, seed=seed)
+        check_inverse_invariants(arr)
+
+    @pytest.mark.parametrize("seed", [None, 3, 99])
+    def test_shift_thin_commute(self, seed):
+        base = self._base()
+        thin_then_shift = ShiftedArrival(
+            base=ThinnedArrival(base=base, keep=9, seed=seed), shift=4.25)
+        shift_then_thin = ThinnedArrival(
+            base=ShiftedArrival(base=base, shift=4.25), keep=9, seed=seed)
+        for k in range(0, 10):
+            assert (thin_then_shift.input_time(k)
+                    == shift_then_thin.input_time(k))
+        for i in range(80):
+            t = i * 0.25
+            assert (thin_then_shift.tuples_available(t)
+                    == shift_then_thin.tuples_available(t))
+
+    def test_seed_none_is_phase_zero(self):
+        base = self._base()
+        assert ThinnedArrival(base=base, keep=9).phase == 0
+        explicit = ThinnedArrival(base=base, keep=9, seed=None)
+        assert explicit.phase == 0
+        for k in range(0, 10):
+            assert (explicit.input_time(k)
+                    == ThinnedArrival(base=base, keep=9).input_time(k))
+
+    def test_seeded_phase_reproducible_and_bounded(self):
+        base = self._base()
+        for seed in range(20):
+            a = ThinnedArrival(base=base, keep=9, seed=seed)
+            b = ThinnedArrival(base=base, keep=9, seed=seed)
+            assert a.phase == b.phase
+            assert 0 <= a.phase < 9
+            # any phase keeps the LAST base tuple: window ends align
+            assert a.wind_end == base.wind_end
+        phases = {ThinnedArrival(base=base, keep=9, seed=s).phase
+                  for s in range(50)}
+        assert len(phases) > 1  # seeds actually vary the sample
+
+    def test_nested_thinning(self):
+        # thinning a thinned stream: invariants survive, totals compose
+        inner = ThinnedArrival(base=self._base(), keep=12, seed=5)
+        outer = ThinnedArrival(base=inner, keep=5, seed=6)
+        assert outer.num_tuples_total == 5
+        check_inverse_invariants(outer)
+
+    def test_thin_with_prefix_composition(self):
+        inner = ThinnedArrival(base=self._base(), keep=10, prefix=4, seed=2)
+        arr = ShiftedArrival(base=inner, shift=3.0)
+        assert arr.num_tuples_total == 14
+        check_inverse_invariants(arr)
+
+
 if HAVE_HYPOTHESIS:
 
     class TestInverseInvariantsProperty:
@@ -166,3 +244,28 @@ if HAVE_HYPOTHESIS:
             check_inverse_invariants(
                 jittered_trace(base, seed=seed, jitter_frac=jitter,
                                rate_scale=scale))
+
+        @given(
+            st.integers(2, 60),
+            st.data(),
+            st.floats(-20.0, 20.0),
+            st.one_of(st.none(), st.integers(0, 2**16)),
+            st.booleans(),
+        )
+        @settings(max_examples=100, deadline=None)
+        def test_transform_composition(self, n, data, shift, seed,
+                                       shift_outside):
+            """Shift-of-thin and thin-of-shift both keep the inverse
+            invariants for any keep fraction and sampling phase."""
+            base = ConstantRateArrival(wind_start=0.0, rate=1.0,
+                                       num_tuples_total=n)
+            keep = data.draw(st.integers(1, n))
+            if shift_outside:
+                arr = ShiftedArrival(
+                    base=ThinnedArrival(base=base, keep=keep, seed=seed),
+                    shift=shift)
+            else:
+                arr = ThinnedArrival(
+                    base=ShiftedArrival(base=base, shift=shift),
+                    keep=keep, seed=seed)
+            check_inverse_invariants(arr)

@@ -1,0 +1,490 @@
+"""Predictive-scheduling tests (repro.core.forecast + session wiring).
+
+Coverage: the forecaster's fit (level/trend/bands/burstiness), the offered-
+arrival unwrapping, the forecast stand-in query, proactive shedding at
+window roll-over (forecast session meets deadlines a reactive session
+misses), the mid-window forecast-miss check with shed refund, the public
+``Session.history()`` record, Cameo-style per-query latency targets in the
+dynamic policies, and speculative pane pre-warming counters.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import (
+    ArrivalForecaster,
+    ArrivalObservation,
+    ForecastConfig,
+    LinearCostModel,
+    OverloadConfig,
+    Planner,
+    Query,
+    RecurringQuerySpec,
+    Session,
+    ShiftedArrival,
+    SpecHistory,
+    ThinnedArrival,
+    TraceArrival,
+    UniformWindowArrival,
+    forecast_query,
+    list_policies,
+    observe_arrival,
+    offered_arrival,
+)
+from repro.core.session import SessionRuntime
+
+SPAN = 100.0
+
+
+def ev(trace, kind, qid=None):
+    """Session events of ``kind``, optionally filtered to one window id."""
+    return [e for e in trace.events_for(kind)
+            if qid is None or e.query_id == qid]
+
+
+def uniform_arr(start: float = 0.0, n: int = 100,
+                span: float = SPAN) -> UniformWindowArrival:
+    return UniformWindowArrival(wind_start=start, wind_end=start + span,
+                                num_tuples_total=n)
+
+
+def burst_arr(start: float = 0.0, n: int = 100, span: float = SPAN,
+              burst: float = 20.0) -> UniformWindowArrival:
+    """All n tuples in the LAST ``burst`` time units of the window."""
+    return UniformWindowArrival(wind_start=start + span - burst,
+                                wind_end=start + span, num_tuples_total=n)
+
+
+def recurring_burst(qid: str = "r", n: int = 100, windows: int = 6,
+                    slack: float = 30.0, tuple_cost: float = 1.0,
+                    burst: float = 20.0, tier: int = 0,
+                    truths: dict = None) -> RecurringQuerySpec:
+    """Recurring query PREDICTED uniform but TRULY bursty: every window's
+    tuples land in the last ``burst`` time units.  ``truths`` overrides the
+    truth of individual windows (window index -> arrival)."""
+    base = Query(
+        query_id=qid, wind_start=0.0, wind_end=SPAN, deadline=SPAN + slack,
+        num_tuples_total=n, cost_model=LinearCostModel(tuple_cost=tuple_cost),
+        arrival=uniform_arr(0.0, n), tier=tier,
+    )
+    overrides = truths or {}
+
+    def truth(w: int):
+        if w in overrides:
+            return overrides[w]
+        return burst_arr(w * SPAN, n, burst=burst)
+
+    return RecurringQuerySpec(base=base, period=SPAN, num_windows=windows,
+                              truth_factory=truth)
+
+
+# ---------------------------------------------------------------------------
+# Observations + forecaster fit
+# ---------------------------------------------------------------------------
+
+
+class TestObservation:
+    def test_uniform_burstiness_is_one(self):
+        obs = observe_arrival(uniform_arr(0.0, 100), window=3)
+        assert obs.window == 3
+        assert obs.num_tuples == 100
+        assert obs.burstiness == pytest.approx(1.0, abs=0.1)
+        assert obs.mean_rate == pytest.approx(1.0)
+
+    def test_tail_burst_burstiness(self):
+        # Everything in the last 1/5 of the window, observed against the
+        # FULL window frame: the peak 1/8-segment holds ~half the tuples
+        # -> burstiness ~4-5.
+        obs = observe_arrival(burst_arr(0.0, 100, burst=20.0),
+                              wind_start=0.0, wind_end=SPAN)
+        assert obs.burstiness > 3.0
+        assert obs.mean_rate == pytest.approx(1.0)
+
+    def test_own_frame_default(self):
+        # Without a frame override the arrival's own span is the frame:
+        # the same burst reads as uniform.
+        obs = observe_arrival(burst_arr(0.0, 100, burst=20.0))
+        assert obs.burstiness == pytest.approx(1.0, abs=0.2)
+
+    def test_offered_unwraps_thinning_preserves_shift(self):
+        base = uniform_arr(0.0, 100)
+        thin = ThinnedArrival(base=ThinnedArrival(base=base, keep=50),
+                              keep=20)
+        shifted = ShiftedArrival(base=thin, shift=7.0)
+        off = offered_arrival(shifted)
+        assert isinstance(off, ShiftedArrival)
+        assert off.shift == 7.0
+        assert off.num_tuples_total == 100
+        assert offered_arrival(base) is base
+
+    def test_observation_span_properties(self):
+        obs = ArrivalObservation(window=0, wind_start=10.0, wind_end=10.0,
+                                 num_tuples=5)
+        assert obs.span == 0.0
+        assert math.isinf(obs.mean_rate)
+
+
+class TestForecaster:
+    def test_constant_series_converges(self):
+        f = ArrivalForecaster(ForecastConfig(alpha=0.5, min_history=2))
+        for w in range(6):
+            f.observe(ArrivalObservation(window=w, wind_start=w * SPAN,
+                                         wind_end=(w + 1) * SPAN,
+                                         num_tuples=80))
+        fc = f.forecast(6)
+        assert fc.tuples == pytest.approx(80.0, abs=1.0)
+        assert fc.std == pytest.approx(0.0, abs=1e-6)
+        assert fc.contains(80)
+        assert not fc.contains(200)
+
+    def test_linear_trend_extrapolates_exactly_at_alpha_one(self):
+        f = ArrivalForecaster(ForecastConfig(alpha=1.0))
+        for w, n in enumerate((10, 20, 30, 40)):
+            f.observe(ArrivalObservation(window=w, wind_start=w * SPAN,
+                                         wind_end=(w + 1) * SPAN,
+                                         num_tuples=n))
+        assert f.forecast(4).tuples == pytest.approx(50.0)
+
+    def test_ready_gate(self):
+        f = ArrivalForecaster(ForecastConfig(min_history=3))
+        assert f.forecast(0) is None
+        for w in range(2):
+            f.observe(ArrivalObservation(window=w, wind_start=0.0,
+                                         wind_end=SPAN, num_tuples=10))
+            assert not f.ready
+        f.observe(ArrivalObservation(window=2, wind_start=0.0,
+                                     wind_end=SPAN, num_tuples=10))
+        assert f.ready
+
+    def test_band_widens_on_noise(self):
+        smooth = ArrivalForecaster(ForecastConfig(alpha=0.5))
+        noisy = ArrivalForecaster(ForecastConfig(alpha=0.5))
+        for w in range(8):
+            smooth.observe(ArrivalObservation(
+                window=w, wind_start=0.0, wind_end=SPAN, num_tuples=100))
+            noisy.observe(ArrivalObservation(
+                window=w, wind_start=0.0, wind_end=SPAN,
+                num_tuples=100 + (60 if w % 2 else -60)))
+        assert noisy.forecast(8).std > smooth.forecast(8).std + 1.0
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            ForecastConfig(alpha=0.0)
+        with pytest.raises(ValueError):
+            ForecastConfig(z=-1.0)
+        with pytest.raises(ValueError):
+            ForecastConfig(min_history=0)
+        with pytest.raises(ValueError):
+            ForecastConfig(miss_check_frac=0.0)
+        with pytest.raises(ValueError):
+            ForecastConfig(miss_tolerance=1.5)
+
+
+class TestForecastQuery:
+    def _query(self, n: int = 100) -> Query:
+        return Query(query_id="q", wind_start=0.0, wind_end=SPAN,
+                     deadline=SPAN + 30.0, num_tuples_total=n,
+                     cost_model=LinearCostModel(tuple_cost=1.0),
+                     arrival=uniform_arr(0.0, n))
+
+    def _burst_forecaster(self, rounds: int = 3) -> ArrivalForecaster:
+        f = ArrivalForecaster(ForecastConfig(alpha=1.0))
+        for w in range(rounds):
+            f.observe(observe_arrival(burst_arr(0.0, 100, burst=20.0),
+                                      window=w, wind_start=0.0,
+                                      wind_end=SPAN))
+        return f
+
+    def test_compresses_into_window_tail(self):
+        fc = self._burst_forecaster().forecast(3)
+        q = self._query()
+        fq = forecast_query(q, fc)
+        assert fq.query_id == q.query_id
+        assert fq.num_tuples_total == 100        # planned count, not forecast
+        assert fq.wind_end == SPAN
+        assert fq.wind_start > SPAN / 2          # compressed to the tail
+        assert fq.arrival.tuples_available(fq.wind_start) <= 1
+        assert fq.arrival.tuples_available(SPAN) == 100
+
+    def test_uniform_forecast_is_noop(self):
+        f = ArrivalForecaster(ForecastConfig(alpha=1.0))
+        for w in range(3):
+            f.observe(observe_arrival(uniform_arr(0.0, 100), window=w))
+        q = self._query()
+        assert forecast_query(q, f.forecast(3)) is q
+
+    def test_expected_by_curve(self):
+        f = self._burst_forecaster().forecast(3)
+        bs = f.burst_span(0.0, SPAN)
+        assert 10.0 < bs < 40.0
+        assert f.expected_by(SPAN - bs, 0.0, SPAN) == pytest.approx(0.0)
+        assert f.expected_by(SPAN, 0.0, SPAN) == pytest.approx(f.lower)
+        mid = f.expected_by(SPAN - bs / 2, 0.0, SPAN)
+        assert 0.0 < mid < f.lower
+
+
+# ---------------------------------------------------------------------------
+# Proactive replanning in sessions
+# ---------------------------------------------------------------------------
+
+
+class TestProactiveSession:
+    # Window instantiation runs ONE period ahead of the clock (the next
+    # window is planned when the previous one is admitted), and window w
+    # closes ~w*SPAN+180: with min_history=2 the first window whose
+    # roll-over sees a ready forecaster is w4.
+    FIRST_SHED = 4
+
+    def _run(self, forecast, windows: int = 8):
+        s = SessionRuntime(policy="llf-dynamic", overload=True,
+                           forecast=forecast)
+        s.submit(recurring_burst(windows=windows))
+        s.run()
+        return s
+
+    def test_reactive_session_misses_tail_bursts(self):
+        s = self._run(forecast=None)
+        outs = s.trace.outcome_series("r")
+        assert len(outs) == 8
+        # 100 cost arriving in the last 20 units vs a +30 slack deadline:
+        # every window finishes ~50 late.
+        assert all(not o.met_deadline for o in outs)
+        assert not ev(s.trace, "forecast_shed")
+
+    def test_forecast_session_sheds_proactively_and_meets(self):
+        s = self._run(forecast=True)
+        outs = s.trace.outcome_series("r")
+        assert len(outs) == 8
+        # Early windows learn (and miss, like the reactive run); later
+        # windows are shed BEFORE their burst lands and meet.
+        early = outs[:self.FIRST_SHED]
+        late = outs[self.FIRST_SHED:]
+        assert all(not o.met_deadline for o in early)
+        assert all(o.met_deadline for o in late)
+        assert all(0.0 < o.shed_fraction < 0.9 for o in late)
+        assert all(o.error_bound > 0 for o in late)
+        for w in range(self.FIRST_SHED, 8):
+            shed_ev = ev(s.trace, "forecast_shed", f"r#w{w}")
+            assert len(shed_ev) == 1
+            assert "fraction=" in shed_ev[0].detail
+        fcr = s.forecaster("r")
+        assert fcr is not None and fcr.ready
+        assert fcr.hits >= 1
+        assert fcr.misses == 0
+
+    def test_forecast_refund_on_miss(self):
+        # Early windows teach a tail burst; window 4's tuples arrive EVEN
+        # later than forecast, so at the mid-burst check (nearly) nothing
+        # has arrived -> miss recorded, shed refunded, forecaster held.
+        spec = recurring_burst(
+            windows=8, truths={4: burst_arr(4 * SPAN, 100, burst=4.0)})
+        s = SessionRuntime(policy="llf-dynamic", overload=True, forecast=True)
+        s.submit(spec)
+        s.run()
+        assert len(ev(s.trace, "forecast_shed", "r#w4")) == 1
+        assert len(ev(s.trace, "forecast_refund", "r#w4")) == 1
+        # refunded: the full window ran (all 100 true tuples ingested)
+        out = next(o for o in s.trace.outcome_series("r")
+                   if o.query_id == "r#w4")
+        assert out.shed_fraction == 0.0
+        assert out.tuples_processed == 100
+        fcr = s.forecaster("r")
+        assert fcr.misses >= 1
+        # w5 was planned before the miss was detected (one-window lead),
+        # but the hold kept w6 from being proactively shed.
+        assert not ev(s.trace, "forecast_shed", "r#w6")
+
+    def test_forecast_none_traces_identical_all_policies(self):
+        # forecast=None leaves every session trace byte-identical to a
+        # session that never heard of forecasting, and on a FEASIBLE
+        # workload even forecast=True only watches — the observation
+        # machinery must not perturb scheduling.
+        for name in list_policies():
+            a = SessionRuntime(policy=name, overload=True)
+            b = SessionRuntime(policy=name, overload=True, forecast=None)
+            c = SessionRuntime(policy=name, overload=True, forecast=True)
+            for s in (a, b, c):
+                s.submit(recurring_burst(windows=3, slack=120.0))
+                s.run()
+            assert a.trace.executions == b.trace.executions
+            assert a.trace.outcomes == b.trace.outcomes
+            assert ([(e.kind, e.time, e.query_id) for e in a.trace.events]
+                    == [(e.kind, e.time, e.query_id) for e in b.trace.events])
+            assert not ev(c.trace, "forecast_shed")
+            assert a.trace.executions == c.trace.executions
+            assert a.trace.outcomes == c.trace.outcomes
+
+    def test_static_policy_proactive_shed(self):
+        # Static sessions plan every window whose start falls inside the
+        # horizon, so drive the timeline stepwise: each window is then
+        # planned after earlier windows have closed and taught the
+        # forecaster.
+        s = SessionRuntime(policy="single", overload=True, forecast=True)
+        s.submit(recurring_burst(windows=8))
+        for t in range(100, 900, 100):
+            s.run_until(float(t))
+        s.run()
+        shed = [w for w in range(8)
+                if ev(s.trace, "forecast_shed", f"r#w{w}")]
+        assert shed and min(shed) >= 2
+        outs = {o.query_id: o for o in s.trace.outcome_series("r")}
+        for w in shed:
+            assert outs[f"r#w{w}"].shed_fraction > 0
+
+
+class TestHistory:
+    def test_history_collects_without_forecast(self):
+        s = SessionRuntime(policy="llf-dynamic", calibrate=True)
+        s.submit(recurring_burst(windows=4, slack=200.0))
+        s.run()
+        h = s.history("r")
+        assert isinstance(h, SpecHistory)
+        assert h.base_id == "r"
+        assert h.num_windows_observed == 4
+        assert all(o.burstiness > 2.0 for o in h.arrivals)
+        assert [o.window for o in h.arrivals] == [0, 1, 2, 3]
+        assert len(h.cost_samples) > 0
+        assert all(n > 0 and c > 0 for n, c in h.cost_samples)
+        assert h.shed_fraction == 0.0
+
+    def test_history_dict_and_unknown_id(self):
+        s = SessionRuntime(policy="llf-dynamic")
+        s.submit(recurring_burst(qid="a", windows=2, slack=200.0))
+        s.run()
+        all_h = s.history()
+        assert set(all_h) == {"a"}
+        with pytest.raises(KeyError):
+            s.history("nope")
+
+    def test_facade_exposes_history_and_forecaster(self):
+        s = Session(policy="llf-dynamic", forecast=True, overload=True)
+        s.submit(recurring_burst(windows=3))
+        s.run()
+        assert s.history("r").num_windows_observed == 3
+        assert s.forecaster("r") is not None
+        assert s.forecaster("r").num_observations == 3
+
+
+# ---------------------------------------------------------------------------
+# Cameo-style latency targets
+# ---------------------------------------------------------------------------
+
+
+class TestLatencyTargets:
+    def _pair(self, target: float = 5.0):
+        cm = LinearCostModel(tuple_cost=1.0)
+        arr = TraceArrival(timestamps=(0.0,) * 10)
+        mk = lambda qid, lt: Query(
+            query_id=qid, wind_start=0.0, wind_end=0.0, deadline=100.0,
+            num_tuples_total=10, cost_model=cm, arrival=arr,
+            latency_target=lt)
+        return mk("loose", None), mk("tight", target)
+
+    def test_target_time_property(self):
+        loose, tight = self._pair(5.0)
+        assert loose.target_time == loose.deadline
+        assert tight.target_time == 5.0
+        huge = dataclasses.replace(tight, latency_target=1000.0)
+        assert huge.target_time == huge.deadline  # never past the deadline
+
+    @pytest.mark.parametrize("policy", ["edf-dynamic", "llf-dynamic"])
+    def test_tight_target_runs_first(self, policy):
+        loose, tight = self._pair(5.0)
+        trace = Planner(policy=policy).run([loose, tight])
+        batches = [e for e in trace.executions if e.kind == "batch"]
+        assert batches[0].query_id == "tight"
+        outs = {o.query_id: o for o in trace.outcomes}
+        assert outs["tight"].latency_target == 5.0
+        assert outs["tight"].target_time == 5.0
+        assert outs["loose"].latency_target is None
+        assert outs["loose"].target_time is None
+        assert outs["loose"].met_target == outs["loose"].met_deadline
+
+    def test_met_target_vs_met_deadline(self):
+        loose, tight = self._pair(5.0)
+        trace = Planner(policy="edf-dynamic").run([loose, tight])
+        outs = {o.query_id: o for o in trace.outcomes}
+        # tight runs first: 10 cost <= ... target is 5, so it MISSES the
+        # target (10 > 5) while easily meeting the 100 deadline.
+        assert outs["tight"].met_deadline
+        assert not outs["tight"].met_target
+        assert outs["loose"].met_deadline
+
+    def test_no_targets_byte_identical(self):
+        cm = LinearCostModel(tuple_cost=1.0)
+        arr = uniform_arr(0.0, 40)
+        qs = [Query(query_id=f"q{i}", wind_start=0.0, wind_end=SPAN,
+                    deadline=SPAN + 40 + 7 * i, num_tuples_total=40,
+                    cost_model=cm, arrival=arr) for i in range(3)]
+        for name in list_policies():
+            t1 = Planner(policy=name).run([dataclasses.replace(q) for q in qs])
+            t2 = Planner(policy=name).run([dataclasses.replace(q) for q in qs])
+            assert t1.executions == t2.executions
+
+    def test_recurring_spec_propagates_target(self):
+        base = Query(query_id="r", wind_start=0.0, wind_end=SPAN,
+                     deadline=SPAN + 30, num_tuples_total=10,
+                     cost_model=LinearCostModel(tuple_cost=0.1),
+                     arrival=uniform_arr(0.0, 10), latency_target=4.0)
+        spec = RecurringQuerySpec(base=base, period=SPAN, num_windows=3)
+        q2 = spec.window_query(2)
+        assert q2.latency_target == 4.0
+        assert q2.target_time == q2.wind_end + 4.0
+
+
+# ---------------------------------------------------------------------------
+# Speculative pane pre-warming
+# ---------------------------------------------------------------------------
+
+
+class TestPrewarm:
+    def _sliding_spec(self, windows: int = 8) -> RecurringQuerySpec:
+        n, slide = 100, 50
+        base = Query(
+            query_id="s", wind_start=0.0, wind_end=SPAN,
+            deadline=SPAN + 400.0, num_tuples_total=n,
+            cost_model=LinearCostModel(tuple_cost=0.05),
+            arrival=uniform_arr(0.0, n), stream="clicks",
+        )
+        return RecurringQuerySpec(base=base, period=SPAN / 2,
+                                  num_windows=windows, slide_tuples=slide)
+
+    def test_prewarm_hits_and_stats(self):
+        s = SessionRuntime(policy="llf-dynamic", sharing=True, forecast=True)
+        s.submit(self._sliding_spec())
+        s.run()
+        st = s.pane_stats
+        assert st.speculative_deposits > 0
+        assert st.speculative_hits > 0
+        # every pre-warm resolved: hits + misses == deposits
+        assert (st.speculative_hits + st.speculative_misses
+                == st.speculative_deposits)
+        assert ev(s.trace, "pane_prewarm")
+
+    def test_no_prewarm_without_forecast(self):
+        s = SessionRuntime(policy="llf-dynamic", sharing=True)
+        s.submit(self._sliding_spec())
+        s.run()
+        st = s.pane_stats
+        assert st.speculative_deposits == 0
+        assert st.speculative_hits == 0
+        assert not ev(s.trace, "pane_prewarm")
+
+    def test_prewarm_disabled_by_config(self):
+        s = SessionRuntime(policy="llf-dynamic", sharing=True,
+                           forecast=ForecastConfig(prewarm=False))
+        s.submit(self._sliding_spec())
+        s.run()
+        assert s.pane_stats.speculative_deposits == 0
+
+    def test_sharing_traces_identical_with_prewarm(self):
+        # Pre-warming only re-times pane computation; the session's
+        # executions and outcomes are untouched (simulation bookkeeping).
+        a = SessionRuntime(policy="llf-dynamic", sharing=True)
+        b = SessionRuntime(policy="llf-dynamic", sharing=True, forecast=True)
+        for s in (a, b):
+            s.submit(self._sliding_spec())
+            s.run()
+        assert a.trace.executions == b.trace.executions
+        assert a.trace.outcomes == b.trace.outcomes
