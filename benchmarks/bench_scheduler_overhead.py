@@ -1,0 +1,247 @@
+"""Scheduler-overhead benchmark: the event-heap decision core at scale.
+
+The reference dynamic loop (``DynamicLoopCore``) walks the FULL runtime
+state at every decision instant — O(n) admissions scan, O(n) drained
+check, O(n) readiness candidates — which is invisible at the paper's 13
+queries and ruinous at 100k.  ``HeapLoopCore`` replaces the walks with
+lazy-deletion min-heaps of (wake_time, query) events and running
+active/unadmitted counters: O(log n) per decision, byte-identical traces.
+
+Three sections, all on one registered-many/ready-few workload (staggered
+windows — the regime a long-running session actually sits in):
+
+* ``decisions``  — decisions/sec of the scan vs heap core at 1k/10k/100k
+  registered queries, measured by driving the cores tick by tick (the
+  scan is tick-bounded at large n; each tick is one decision instant).
+* ``admission``  — admission-check latency: rebuilding the prefix-sum
+  demand conditions from a fresh snapshot per check
+  (``work_demand_condition``) vs reading the maintained ``DemandLedger``
+  (delta-updated on admit/withdraw; ``Session(admission="incremental")``).
+* ``select``     — one policy decision over a WIDE ready set: the scalar
+  ``min(ready, key=priority)`` walk vs the vectorized ``QueryTable``
+  lexsort path (``DynamicPolicy.select``).
+
+A small-n trace-identity assertion (scan vs heap executions, three
+policies) guards the headline claim on every run.  ``--smoke`` is the CI
+gate: 10k queries, asserts the heap beats the scan by >= 10x and clears
+an absolute decisions/sec floor.
+
+    PYTHONPATH=src python -m benchmarks.bench_scheduler_overhead [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import (
+    DemandLedger,
+    DynamicQuerySpec,
+    ExecutionTrace,
+    LinearCostModel,
+    Query,
+    QueryRuntime,
+    RuntimeState,
+    SimulatedExecutor,
+    ConstantRateArrival,
+    get_policy,
+    run,
+    work_demand_condition,
+)
+from repro.core.runtime import DynamicLoopCore, HeapLoopCore
+
+from .common import Timer, emit, write_result
+
+SIZES = (1_000, 10_000, 100_000)
+SMOKE_SIZES = (10_000,)
+HEAP_TICKS = 4_000
+SCAN_TICK_BUDGET = 1_000_000   # scan ticks ~ budget / n (tick-bounded)
+SELECT_WIDTH = 2_048
+ADMISSION_CHECKS = 20
+MIN_SPEEDUP = 10.0             # smoke gate (ISSUE acceptance: >=10x at 10k)
+MIN_HEAP_DPS = 5_000.0         # smoke gate: absolute decisions/sec floor
+
+COST = LinearCostModel(tuple_cost=0.001, overhead=0.005, agg_per_batch=0.001)
+
+
+def _query(i: int, stagger: float = 0.08, tuples: int = 30,
+           rate: float = 2_000.0) -> Query:
+    """Query i's window opens at ``i * stagger``: at any instant only a
+    handful of the n registered queries have enough arrived tuples to be
+    ready — everyone else is pure walk overhead for the scan core."""
+    start = i * stagger
+    arr = ConstantRateArrival(wind_start=start, rate=rate,
+                              num_tuples_total=tuples)
+    return Query(
+        query_id=f"q{i}", wind_start=start, wind_end=arr.wind_end,
+        deadline=arr.wind_end + 5.0, num_tuples_total=tuples,
+        cost_model=COST, arrival=arr, submit_time=0.0,
+    )
+
+
+def _core(cls, n: int):
+    policy = get_policy("llf-dynamic")
+    executor = SimulatedExecutor()
+    state = RuntimeState(
+        runtimes=[QueryRuntime(spec=DynamicQuerySpec(query=_query(i)))
+                  for i in range(n)],
+        trace=ExecutionTrace(),
+    )
+    return cls(policy, executor, state, c_max=policy.c_max)
+
+
+def _decision_rate(cls, n: int, ticks: int) -> dict:
+    core = _core(cls, n)
+    core.tick()  # absorb the one-off mass admission outside the timing
+    t0 = time.perf_counter()
+    done = 0
+    for _ in range(ticks):
+        if core.tick() == "done":
+            break
+        done += 1
+    dt = time.perf_counter() - t0
+    done = max(done, 1)
+    return {"ticks": done, "seconds": dt, "decisions_per_sec": done / dt}
+
+
+def bench_decisions(sizes) -> list:
+    rows = []
+    for n in sizes:
+        scan_ticks = max(100, SCAN_TICK_BUDGET // n)
+        scan = _decision_rate(DynamicLoopCore, n, scan_ticks)
+        heap = _decision_rate(HeapLoopCore, n, HEAP_TICKS)
+        speedup = heap["decisions_per_sec"] / scan["decisions_per_sec"]
+        rows.append({"n": n, "scan": scan, "heap": heap, "speedup": speedup})
+        emit(f"scheduler_overhead_decisions_n{n}",
+             1e6 / heap["decisions_per_sec"],
+             f"scan={scan['decisions_per_sec']:.0f}/s;"
+             f"heap={heap['decisions_per_sec']:.0f}/s;"
+             f"speedup={speedup:.1f}x")
+    return rows
+
+
+def bench_admission(sizes) -> list:
+    """Per-check latency of the union demand bound: snapshot rebuild vs
+    maintained ledger (the ``admission="incremental"`` fast path)."""
+    rows = []
+    for n in sizes:
+        queries = [_query(i) for i in range(n)]
+        probe = _query(n)
+        with Timer() as tb:
+            ledger = DemandLedger(queries)
+        with Timer() as tl:
+            for _ in range(ADMISSION_CHECKS):
+                rep_inc = ledger.work_demand(extra=[probe], now=0.0)
+        with Timer() as tr:
+            for _ in range(ADMISSION_CHECKS):
+                rep_full = work_demand_condition([*queries, probe], now=0.0)
+        assert rep_inc.feasible == rep_full.feasible
+        assert rep_inc.reasons == rep_full.reasons
+        # maintenance churn: one admit + one withdraw delta
+        with Timer() as tc:
+            for _ in range(ADMISSION_CHECKS):
+                ledger.add(probe)
+                ledger.discard(probe.query_id)
+        rebuild_ms = tr.seconds / ADMISSION_CHECKS * 1e3
+        ledger_ms = tl.seconds / ADMISSION_CHECKS * 1e3
+        rows.append({
+            "n": n,
+            "build_ms": tb.seconds * 1e3,
+            "rebuild_ms_per_check": rebuild_ms,
+            "ledger_ms_per_check": ledger_ms,
+            "churn_ms_per_add_discard": tc.seconds / ADMISSION_CHECKS * 1e3,
+            "speedup": rebuild_ms / ledger_ms,
+        })
+        emit(f"scheduler_overhead_admission_n{n}", ledger_ms * 1e3,
+             f"rebuild={rebuild_ms:.2f}ms;ledger={ledger_ms:.3f}ms;"
+             f"speedup={rebuild_ms / ledger_ms:.1f}x")
+    return rows
+
+
+def bench_select(width: int = SELECT_WIDTH) -> dict:
+    """One decision over a ``width``-deep ready set: scalar priority walk
+    vs the vectorized ``QueryTable`` path."""
+    from repro.core.policies.dynamic import _vector_select
+
+    policy = get_policy("llf-dynamic")
+    ready = []
+    for i in range(width):
+        rt = QueryRuntime(spec=DynamicQuerySpec(query=_query(i)))
+        rt.admitted, rt.rr_seq, rt.min_batch = True, i, 1
+        ready.append(rt)
+    now = ready[-1].q.wind_end
+    reps = 50
+    with Timer() as ts:
+        for _ in range(reps):
+            scalar = min(ready,
+                         key=lambda r: (r.q.tier, *policy.priority(r, now)))
+    with Timer() as tv:
+        for _ in range(reps):
+            vec = ready[_vector_select(policy, ready, now)]
+    assert vec is scalar, "vectorized select disagrees with the scalar walk"
+    row = {
+        "width": width,
+        "scalar_us": ts.seconds / reps * 1e6,
+        "vector_us": tv.seconds / reps * 1e6,
+        "speedup": ts.seconds / tv.seconds,
+    }
+    emit("scheduler_overhead_select", row["vector_us"],
+         f"width={width};scalar={row['scalar_us']:.0f}us;"
+         f"vector={row['vector_us']:.0f}us;speedup={row['speedup']:.1f}x")
+    return row
+
+
+def assert_trace_identity(n: int = 24) -> None:
+    """Byte-identical executions+outcomes, scan vs heap, three policies."""
+    for name in ("llf-dynamic", "edf-dynamic", "rr-dynamic"):
+        queries = [_query(i) for i in range(n)]
+        scan = run(get_policy(name), queries, runtime="scan")
+        heap = run(get_policy(name), queries, runtime="heap")
+        assert scan.executions == heap.executions, (
+            f"{name}: heap executions diverge from scan at n={n}")
+        assert scan.outcomes == heap.outcomes, (
+            f"{name}: heap outcomes diverge from scan at n={n}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="10k-query CI gate (writes "
+                         "scheduler_overhead_smoke.json)")
+    args = ap.parse_args([] if argv is None else argv)
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+
+    with Timer() as t:
+        assert_trace_identity()
+        payload = {
+            "sizes": list(sizes),
+            "heap_ticks": HEAP_TICKS,
+            "scan_tick_budget": SCAN_TICK_BUDGET,
+            "decisions": bench_decisions(sizes),
+            "admission": bench_admission(sizes),
+            "select": bench_select(),
+            "trace_identity": "ok",
+        }
+    payload["harness_seconds"] = t.seconds
+
+    name = "scheduler_overhead_smoke" if args.smoke else "scheduler_overhead"
+    write_result(name, payload)
+
+    # Acceptance gates (ISSUE): >=10x decisions/sec over the scan core at
+    # 10k registered queries, plus an absolute decisions/sec floor so a
+    # uniformly-slow run can't pass on ratio alone.
+    gate = next(r for r in payload["decisions"] if r["n"] == 10_000)
+    assert gate["speedup"] >= MIN_SPEEDUP, (
+        f"heap core only {gate['speedup']:.1f}x over scan at 10k queries "
+        f"(gate: {MIN_SPEEDUP}x)")
+    assert gate["heap"]["decisions_per_sec"] >= MIN_HEAP_DPS, (
+        f"heap core at {gate['heap']['decisions_per_sec']:.0f} decisions/s "
+        f"(gate: {MIN_HEAP_DPS:.0f}/s)")
+    adm = next(r for r in payload["admission"] if r["n"] == 10_000)
+    assert adm["speedup"] > 1.0, (
+        "maintained ledger no faster than snapshot rebuild at 10k queries")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

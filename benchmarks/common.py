@@ -41,6 +41,36 @@ def all_paper_queries(deadline_frac: float = 2.0,
             for q in PAPER_QUERY_IDS]
 
 
+def tile_queries(queries: List[Query], n: int, period: float) -> List[Query]:
+    """Scale a workload to ``n`` queries by tiling ``queries`` with windows
+    shifted by ``period`` per replica (replica k of query q becomes
+    ``q~k`` opening ``k * period`` later) — the load-scaling knob behind
+    ``run.py --queries``."""
+    import dataclasses
+
+    out: List[Query] = []
+    k = 0
+    while len(out) < n:
+        shift = k * period
+        for q in queries:
+            if len(out) >= n:
+                break
+            arr = dataclasses.replace(
+                q.arrival, wind_start=q.arrival.wind_start + shift)
+            out.append(dataclasses.replace(
+                q,
+                query_id=f"{q.query_id}~{k}" if k else q.query_id,
+                wind_start=q.wind_start + shift,
+                wind_end=q.wind_end + shift,
+                deadline=q.deadline + shift,
+                arrival=arr,
+                submit_time=(None if q.submit_time is None
+                             else q.submit_time + shift),
+            ))
+        k += 1
+    return out
+
+
 def write_result(name: str, payload: Dict) -> pathlib.Path:
     RESULTS.mkdir(parents=True, exist_ok=True)
     path = RESULTS / f"{name}.json"

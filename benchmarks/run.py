@@ -18,10 +18,11 @@ import traceback
 
 
 def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int,
-                     workers: int = 1) -> int:
+                     workers: int = 1, num_queries: int = 0,
+                     runtime: str = None) -> int:
     from repro.core import InfeasibleDeadline, Planner
 
-    from .common import all_paper_queries, emit, write_result
+    from .common import all_paper_queries, emit, tile_queries, write_result
 
     try:
         planner = Planner(policy=policy_name)
@@ -32,8 +33,17 @@ def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int,
         print("error: --workers applies to dynamic policies only (static "
               "runs give each query its own timeline)", file=sys.stderr)
         return 2
+    if runtime and getattr(planner.policy, "kind", "static") != "dynamic":
+        print("error: --runtime applies to dynamic policies only (static "
+              "plans have no decision loop)", file=sys.stderr)
+        return 2
     queries = all_paper_queries(deadline_frac=deadline_frac,
                                 num_files=num_files)
+    if num_queries and num_queries > len(queries):
+        # Scale the paper's 13-query set up by tiling window-shifted
+        # replicas (one window length apart) — pairs with --runtime heap
+        # to exercise the event-heap core at registered-query scale.
+        queries = tile_queries(queries, num_queries, float(num_files))
     # Like deadline misses, infeasibility is a measured outcome: record
     # per-query infeasible rows and still run the feasible remainder
     # (static policies raise at plan time; dynamic policies always run).
@@ -59,7 +69,8 @@ def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int,
             trace = ExecutionTrace()
     else:
         t0 = time.perf_counter()
-        trace = planner.run(queries, workers=workers if workers > 1 else None)
+        trace = planner.run(queries, workers=workers if workers > 1 else None,
+                            runtime=runtime)
         dt = time.perf_counter() - t0
 
     rows = []
@@ -90,15 +101,18 @@ def run_policy_bench(policy_name: str, deadline_frac: float, num_files: int,
     met = sum(1 for r in rows if r["met_deadline"])
     emit(f"policy_{policy_name}_summary", dt * 1e6,
          f"met={met}/{len(rows)};policy={policy_name}")
-    # workers>1 gets its own results file so a pool run never clobbers the
-    # single-worker baseline record.
+    # workers>1 / scaled runs get their own results file so they never
+    # clobber the single-worker 13-query baseline record.
     result_name = f"policy_{policy_name}" + (
-        f"_w{workers}" if workers > 1 else "")
+        f"_w{workers}" if workers > 1 else "") + (
+        f"_q{num_queries}" if num_queries and num_queries > 13 else "")
     write_result(result_name, {
         "policy": policy_name,
         "deadline_frac": deadline_frac,
         "num_files": num_files,
         "workers": workers,
+        "num_queries": len(queries),
+        "runtime": runtime,
         "outcomes": rows,
         "stragglers": trace.stragglers,
         "wall_seconds": dt,
@@ -121,6 +135,14 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=1,
                     help="ExecutorPool width for --policy runs (dynamic "
                          "policies only; 1 = bare executor)")
+    ap.add_argument("--queries", type=int, default=0,
+                    help="scale --policy runs to N queries by tiling the "
+                         "paper set with window-shifted replicas (0 = the "
+                         "plain 13-query set)")
+    ap.add_argument("--runtime", choices=("scan", "heap"), default=None,
+                    help="dynamic decision core for --policy runs: 'heap' "
+                         "= O(log n) event-heap core, 'scan' = reference "
+                         "full-walk core (default)")
     ap.add_argument("--list-policies", action="store_true",
                     help="print registered policy names and exit")
     args = ap.parse_args()
@@ -134,7 +156,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     if args.policy:
         sys.exit(run_policy_bench(args.policy, args.deadline_frac,
-                                  args.num_files, args.workers))
+                                  args.num_files, args.workers,
+                                  args.queries, args.runtime))
 
     from . import (
         bench_single_query,      # Fig 2 + Fig 6

@@ -100,7 +100,7 @@ from .session import AdmissionResult, SessionRuntime
 # single_query, multi_query) are imported LAST, purely for the deprecated
 # schedule_* names — canonical symbols never route through them.
 from .policies.constraint import feasible_assignment
-from .minbatch import find_min_batch_size
+from .minbatch import find_min_batch_size, find_min_batch_sizes
 from .panes import (
     PaneStats,
     PaneStore,
@@ -127,17 +127,21 @@ from .runtime import (
     DynamicLoopCore,
     DynamicQuerySpec,
     ExecutorPool,
+    HeapLoopCore,
     OracleCostExecutor,
     QueryRuntime,
     RuntimeState,
     SimulatedExecutor,
     execute_plan,
+    heap_capable,
     run,
 )
 from .schedulability import (
+    DemandLedger,
     FeasibilityReport,
     admission_check,
     check as check_schedulability,
+    edf_order,
     min_post_window_work,
     post_window_condition,
     work_demand_condition,
@@ -161,6 +165,7 @@ from .types import (
     PolicyDecision,
     Query,
     QueryOutcome,
+    QueryTable,
     RecurringQuerySpec,
     Schedule,
     SessionEvent,
@@ -194,6 +199,7 @@ __all__ = [
     "CalibratingCostModel",
     "ConstantRateArrival",
     "CostModelBase",
+    "DemandLedger",
     "DynamicLoopCore",
     "DynamicQuerySpec",
     "EPS",
@@ -202,6 +208,7 @@ __all__ = [
     "ExecutorPool",
     "FeasibilityReport",
     "ForecastConfig",
+    "HeapLoopCore",
     "InfeasibleDeadline",
     "LARGE_NUMBER",
     "LinearCostModel",
@@ -218,6 +225,7 @@ __all__ = [
     "Query",
     "QueryOutcome",
     "QueryRuntime",
+    "QueryTable",
     "RecurringQuerySpec",
     "RenegotiationProposal",
     "RuntimeState",
@@ -244,13 +252,16 @@ __all__ = [
     "batched_cost_curve",
     "brute_force_optimal",
     "check_schedulability",
+    "edf_order",
     "execute_plan",
     "execute_single",
     "feasible_assignment",
     "find_min_batch_size",
+    "find_min_batch_sizes",
     "fit_piecewise_linear",
     "forecast_query",
     "get_policy",
+    "heap_capable",
     "jittered_trace",
     "list_policies",
     "micro_batch_trace",

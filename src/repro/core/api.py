@@ -272,7 +272,14 @@ class Planner:
         returned trace carries the pane bookkeeping as ``trace.pane_book``
         (scan/hit/eviction stats under ``.store.stats``).  With
         ``share=False`` (default) the run is byte-identical to the unshared
-        runtime."""
+        runtime.
+
+        ``runtime="heap"`` opts dynamic policies into the event-heap
+        decision core (``repro.core.runtime.HeapLoopCore``): O(log n) per
+        decision instant instead of the reference core's full O(n) state
+        walk, with byte-identical traces (docs/ARCHITECTURE.md "Decision
+        core").  ``runtime="scan"``/default keeps the reference core;
+        policies with custom ``replan`` logic fall back to it silently."""
         from .runtime import ExecutorPool, run as _run
 
         if workers is not None:
@@ -334,9 +341,13 @@ class Session:
     windows of queries on a common ``Query.stream``, ``pane_tuples`` to
     override the GCD pane width — docs/API.md "Pane sharing"), the
     overload knobs (``overload=``, ``on_renegotiate=`` — docs/API.md
-    "Overload control") and the predictive-scheduling knob (``forecast=``
+    "Overload control"), the predictive-scheduling knob (``forecast=``
     — arrival forecasting, proactive shedding ahead of forecast bursts,
-    speculative pane pre-warming; docs/API.md "Predictive scheduling").
+    speculative pane pre-warming; docs/API.md "Predictive scheduling")
+    and the scaling knobs (``runtime="heap"`` for the O(log n) event-heap
+    decision core, ``admission="incremental"`` for the maintained
+    ``DemandLedger`` admission fast path — docs/API.md "Scaling the
+    decision core").
     """
 
     def __init__(self, policy: Union[str, SchedulingPolicy] = "llf-dynamic",

@@ -45,7 +45,7 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .arrivals import ThinnedArrival
-from .schedulability import FeasibilityReport, admission_check
+from .schedulability import FeasibilityReport, admission_check, edf_order
 from .types import Query
 
 __all__ = [
@@ -272,7 +272,15 @@ def tiered_work_demand_condition(
     admission gate, whose verdicts stay policy-agnostic.
     """
     reasons: List[str] = []
-    for q in sorted(queries, key=lambda p: p.deadline):
+    queries = list(queries)
+    # Hoisted row caches: the quadratic walk below used to re-derive
+    # min_comp_cost (a cost-model call) and the first-tuple instant (an
+    # arrival-model call) per (q, p) PAIR; one call per query suffices.
+    # The inner loop keeps the original submission order so the float
+    # accumulation — and therefore any logged reason text — is unchanged.
+    min_cost = [p.min_comp_cost for p in queries]
+    first_in = [p.arrival.input_time(1) for p in queries]
+    for q in edf_order(queries):
         # Lower bound on q's completion: its own last tuple must arrive.
         done_floor = q.arrival.input_time(q.num_tuples_total)
         if now is not None:
@@ -280,9 +288,9 @@ def tiered_work_demand_condition(
         horizon = min(q.deadline, done_floor)
         work = 0.0
         start = math.inf
-        for p in queries:
+        for j, p in enumerate(queries):
             if p.deadline <= q.deadline + 1e-12:
-                work += p.min_comp_cost
+                work += min_cost[j]
             elif p.tier < q.tier:
                 # Higher-priority work competing before q can be done:
                 # only the tuples that will have arrived by the horizon.
@@ -292,7 +300,7 @@ def tiered_work_demand_condition(
                 work += p.cost_model.cost(avail)
             else:
                 continue
-            start = min(start, p.arrival.input_time(1))
+            start = min(start, first_in[j])
         anchor = start if now is None else max(start, now)
         budget = q.deadline - anchor
         if work > budget + 1e-9:

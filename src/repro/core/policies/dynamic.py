@@ -28,9 +28,15 @@ from ..types import (
     Plan,
     PolicyDecision,
     Query,
+    QueryTable,
     Schedule,
     Strategy,
 )
+
+# Ready sets smaller than this aren't worth the numpy packing overhead
+# (measured crossover ~64 rows — see benchmarks/bench_scheduler_overhead);
+# the winner is identical either way (see ``DynamicPolicy.select``).
+_VECTOR_MIN = 64
 
 
 class DynamicPolicy:
@@ -128,6 +134,26 @@ class DynamicPolicy:
         """Sort key among ready queries; smallest wins the executor."""
         raise NotImplementedError
 
+    def select(
+        self, ready: Sequence["QueryRuntime"], now: float  # noqa: F821
+    ) -> "QueryRuntime":  # noqa: F821
+        """The winner among ``ready``: strict tiers, then the strategy's
+        priority order.  Equal-key ties resolve to the earliest entry of
+        ``ready`` — which the runtime cores pass in runtime-state order, so
+        this equals the head of the old stable full sort.
+
+        Large ready sets whose rows all carry a plain ``LinearCostModel``
+        evaluate the priority math vectorized over a packed ``QueryTable``
+        (argsort-based ordering); everything else — small sets, calibrating
+        or shared or piecewise cost models, custom ``priority`` overrides —
+        takes the per-query Python keys.  Both paths pick the same winner
+        (the parity tests pin this)."""
+        if len(ready) >= _VECTOR_MIN:
+            i = _vector_select(self, ready, now)
+            if i is not None:
+                return ready[i]
+        return min(ready, key=lambda r: (r.q.tier, *self.priority(r, now)))
+
     def replan(self, event: SchedulingEvent, state: "RuntimeState") -> PolicyDecision:  # noqa: F821
         """Algorithm 2's decision instant: pick the ready winner, or report
         when readiness can next change, or stop.
@@ -156,8 +182,7 @@ class DynamicPolicy:
             if not math.isfinite(nxt):
                 return PolicyDecision()  # stop: nothing will ever be ready
             return PolicyDecision(wake_at=nxt)
-        ready.sort(key=lambda r: (r.q.tier, *self.priority(r, now)))
-        rt = ready[0]
+        rt = self.select(ready, now)
         take = min(rt.avail(now), rt.min_batch)
         ways = min(self.shard_across, state.free_workers(now), take)
         if ways > 1:
@@ -250,6 +275,41 @@ class RRPolicy(DynamicPolicy):
 
     def priority(self, rt, now):
         return (rt.rr_seq,)
+
+
+# Per-strategy lexsort keys over a packed ``QueryTable``.  numpy's lexsort
+# orders by the LAST key first, so each tuple lists the Python priority-key
+# components reversed, with the strict tier appended as the primary key —
+# exactly ``(tier, *priority)``.  Keyed by the (unbound) ``priority``
+# function: a subclass overriding ``priority`` drops out of the map and
+# falls back to the Python path automatically.
+_VECTOR_PRIORITIES = {
+    LLFPolicy.priority:
+        lambda t, now: (t.rr_seq, t.target_time, t.target_laxity(now)),
+    EDFPolicy.priority:
+        lambda t, now: (t.rr_seq, t.target_laxity(now), t.target_time),
+    SJFPolicy.priority:
+        lambda t, now: (t.rr_seq, t.target_time, t.remaining_cost(now)),
+    RRPolicy.priority:
+        lambda t, now: (t.rr_seq,),
+}
+
+
+def _vector_select(
+    policy: DynamicPolicy, ready: Sequence["QueryRuntime"], now: float  # noqa: F821
+) -> Optional[int]:
+    """Index of the winner via packed-array lexsort, or None to fall back
+    (unknown priority override, or a row the ``QueryTable`` can't pack)."""
+    keys_for = _VECTOR_PRIORITIES.get(type(policy).priority)
+    if keys_for is None:
+        return None
+    table = QueryTable.pack(ready)
+    if table is None:
+        return None
+    import numpy as np
+
+    order = np.lexsort(keys_for(table, now) + (table.tier,))
+    return int(order[0])
 
 
 def policy_for_strategy(

@@ -40,8 +40,9 @@ than C_max is re-queued once — idempotent inputs — and flagged in
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from .api import Executor, SchedulingEvent, SchedulingPolicy
 from .arrivals import ArrivalModel
@@ -49,7 +50,9 @@ from .cost_model import CostModelBase
 from .types import (
     EPS,
     BatchExecution,
+    BatchShard,
     ExecutionTrace,
+    PolicyDecision,
     Query,
     QueryOutcome,
     Schedule,
@@ -234,6 +237,13 @@ class RuntimeState:
     num_workers: int = 1
     worker_names: Tuple[str, ...] = ()
     worker_clocks: Tuple[float, ...] = ()
+    # Lazily built query_id -> runtime index (first match wins, like the
+    # linear scan it replaces; new runtimes appended mid-run are absorbed
+    # on the next lookup).
+    _index: Dict[str, "QueryRuntime"] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _indexed: int = dataclasses.field(default=0, repr=False, compare=False)
 
     def free_workers(self, now: float) -> int:
         """Workers free to start a batch at ``now`` (>= 1: the decision
@@ -243,10 +253,15 @@ class RuntimeState:
         return max(1, sum(1 for c in self.worker_clocks if c <= now + _EPS))
 
     def by_id(self, query_id: str) -> QueryRuntime:
-        for rt in self.runtimes:
-            if rt.q.query_id == query_id:
-                return rt
-        raise KeyError(query_id)
+        n = len(self.runtimes)
+        if self._indexed < n:
+            for rt in self.runtimes[self._indexed:]:
+                self._index.setdefault(rt.q.query_id, rt)
+            self._indexed = n
+        rt = self._index.get(query_id)
+        if rt is None:
+            raise KeyError(query_id)
+        return rt
 
     def active(self) -> List[QueryRuntime]:
         return [
@@ -451,6 +466,7 @@ class ExecutorPool:
                 raise ValueError(f"need at least one worker, got {workers}")
             names = tuple(f"w{i}" for i in range(workers))
         self.worker_names: Tuple[str, ...] = names
+        self._rank: Dict[str, int] = {n: i for i, n in enumerate(names)}
         self._clocks: Dict[str, float] = {n: 0.0 for n in names}
         # query_id -> (end, worker) of the query's LAST-ENDING batch so far:
         # its final aggregation cannot start before ``end``.
@@ -472,7 +488,7 @@ class ExecutorPool:
         pool = [n for n in self.worker_names if n not in exclude]
         if not pool:
             pool = list(self.worker_names)
-        return min(pool, key=lambda n: (self._clocks[n], self.worker_names.index(n)))
+        return min(pool, key=lambda n: (self._clocks[n], self._rank[n]))
 
     # -- Executor protocol -----------------------------------------------
     def clock(self) -> float:
@@ -517,10 +533,7 @@ class ExecutorPool:
         # Earliest admissible start: max(worker free, last partial ready).
         name = min(
             self.worker_names,
-            key=lambda n: (
-                max(self._clocks[n], barrier),
-                self.worker_names.index(n),
-            ),
+            key=lambda n: (max(self._clocks[n], barrier), self._rank[n]),
         )
         start = max(self._clocks[name], barrier)
         agg = self.backend.finalize(query, num_batches)
@@ -805,6 +818,7 @@ def run(
     on_batch: Optional[Callable[[BatchExecution], None]] = None,
     c_max: Optional[float] = None,
     sharing: Optional["SharedBook"] = None,  # noqa: F821  (panes.py)
+    runtime: Optional[str] = None,
 ) -> ExecutionTrace:
     """Run ``workload`` under ``policy`` on ``executor`` (simulated when
     omitted) and return the full ExecutionTrace with per-query outcomes.
@@ -815,6 +829,13 @@ def run(
     re-queue on static runs).  ``strict`` applies only to static policies
     (replay plans verbatim); ``start_time``/``max_steps`` only to dynamic
     ones — passing an inapplicable argument raises.
+
+    ``runtime`` selects the dynamic decision core: ``"scan"`` (default) is
+    the O(n)-per-instant walk; ``"heap"`` is the event-heap core
+    (``HeapLoopCore``) — same decisions, byte-identical traces, O(log n)
+    per instant.  The heap engages only for policies whose ``replan`` is
+    ``DynamicPolicy``'s (see ``heap_capable``); custom-replan and static
+    policies fall back to the scan path unchanged.
 
     ``sharing`` attaches a ``repro.core.panes.SharedBook`` whose pane
     bookkeeping observes every executed batch (deposits the first coverage
@@ -839,8 +860,10 @@ def run(
             policy, executor, specs,
             start_time=start_time,
             max_steps=1_000_000 if max_steps is None else max_steps,
-            on_batch=on_batch, c_max=c_max,
+            on_batch=on_batch, c_max=c_max, runtime=runtime,
         )
+    if runtime not in (None, "scan", "heap"):
+        raise ValueError(f"runtime must be 'scan' or 'heap', got {runtime!r}")
     if start_time is not None or max_steps is not None:
         raise ValueError(
             "start_time=/max_steps= apply to dynamic policies only (static "
@@ -912,6 +935,19 @@ class DynamicLoopCore:
     def runts(self) -> List[QueryRuntime]:
         return self.state.runtimes
 
+    # -- heap-core hooks (no-ops on the scan core) -----------------------
+    def _register_new(self) -> None:
+        """Absorb runtimes appended to ``state.runtimes`` since last tick."""
+
+    def notify(self, rt: QueryRuntime) -> None:
+        """A runtime's readiness-relevant state changed outside the loop
+        (withdraw set ``delete_time``, shed/recalibrate resized MinBatch,
+        overload thinned the stream).  The scan core re-derives everything
+        each tick; the heap core re-indexes the runtime."""
+
+    def _note_completed(self, rt: QueryRuntime) -> None:
+        """``rt`` just completed inside ``tick``."""
+
     def _admit_and_delete(self, now: float) -> Optional[str]:
         """Flip admissions/deletions due at ``now``; return the last admitted
         query id (None when no admission happened)."""
@@ -957,6 +993,7 @@ class DynamicLoopCore:
           passes a finite horizon).
         """
         executor, state, trace = self.executor, self.state, self.state.trace
+        self._register_new()
         now = executor.clock()
         if now > horizon + _EPS:
             return "horizon"
@@ -970,9 +1007,7 @@ class DynamicLoopCore:
             state.worker_clocks = tuple(
                 executor.worker_clock(n) for n in state.worker_names
             )
-        decision = self.policy.replan(
-            SchedulingEvent(self._event_kind, now, self._event_qid), state
-        )
+        decision = self._decide(now)
         if decision.is_stop:
             return "stop"
         if decision.is_wait:
@@ -1031,7 +1066,263 @@ class DynamicLoopCore:
                 shed_fraction=rt.spec.shed_fraction,
                 error_bound=rt.spec.error_bound,
             )
+            self._note_completed(rt)
         return "ran"
+
+    def _decide(self, now: float) -> "PolicyDecision":
+        """One decision: consult the policy over the full runtime state."""
+        return self.policy.replan(
+            SchedulingEvent(self._event_kind, now, self._event_qid), self.state
+        )
+
+
+class HeapLoopCore(DynamicLoopCore):
+    """Event-heap decision core: O(log n) per decision instant.
+
+    Same decisions, same traces, different bookkeeping.  The scan core
+    re-derives everything from scratch each tick — O(n) walks for
+    admissions, drain detection and the wait-instant ``min`` over every
+    unfinished runtime.  This core replaces the walks with event heaps:
+
+    * **admit heap** ``(submit_time, idx)`` — pending admissions pop in due
+      order; due batches are applied in runtime-list order, so ``rr_seq``
+      tickets are assigned exactly as the scan's in-order walk assigns them.
+    * **delete heap** ``(delete_time, idx)`` — lazy-deletion: ``withdraw``
+      just pushes an event (via ``notify``); stale/duplicate entries are
+      skipped on pop.  Deletions are processed after the tick's admissions
+      (they never touch the rr counter, so relative ticket order — the only
+      thing policies compare — matches the scan walk; see the parity tests).
+    * **ready heap** ``(wake_time, seq, idx)`` — lower bounds on each
+      runtime's ``next_ready_time``.  Due entries pop into a **ready pool**
+      whose members are (re)validated with ``QueryRuntime.ready`` at each
+      decision instant; validation failures are pushed back at their fresh
+      ``next_ready_time``.  When nothing is ready, the wake instant is found
+      by peek-revalidate: pop the top, recompute its exact readiness, and
+      stop as soon as the recomputed instant is <= every remaining (lower
+      bound) entry — which makes it the global minimum, i.e. exactly the
+      scan loop's ``min(next_ready_time)``.
+
+    Liveness counters (`admitted & !completed & !deleted`, and
+    `!admitted & !deleted`) replace the ``drained`` walks.  One scan
+    behaviour is intentionally NOT replicated: the scan walk "admits"
+    already-deleted runtimes (consuming an rr ticket for a runtime that can
+    never compete); the heap skips those phantom admissions.  Ticket
+    *values* then differ, but ticket *order* among live runtimes — the only
+    observable — does not, and traces stay byte-identical.
+
+    Winner selection mirrors ``DynamicPolicy.replan`` exactly (the core is
+    only engaged for policies whose ``replan`` IS DynamicPolicy's —
+    see ``heap_capable``): strict tiers, then ``policy.priority``, with the
+    pool's vectorized ``DynamicPolicy.select`` doing the ordering.
+    """
+
+    def __init__(
+        self,
+        policy: SchedulingPolicy,
+        executor: Executor,
+        state: RuntimeState,
+        *,
+        on_batch: Optional[Callable[[BatchExecution], None]] = None,
+        c_max: Optional[float] = None,
+    ):
+        super().__init__(policy, executor, state, on_batch=on_batch,
+                         c_max=c_max)
+        self._registered = 0
+        self._rt_index: Dict[int, int] = {}  # id(rt) -> runtimes index
+        self._admit_heap: List[Tuple[float, int]] = []
+        self._delete_heap: List[Tuple[float, int]] = []
+        self._ready_heap: List[Tuple[float, int, int]] = []
+        self._ready_pool: Set[int] = set()
+        self._seq = 0  # push order: stable tiebreak inside the ready heap
+        self._num_active = 0
+        self._num_unadmitted = 0
+        self._register_new()
+
+    # -- registration and external-change notifications ------------------
+    def _register_new(self) -> None:
+        runts = self.state.runtimes
+        clock = self.executor.clock()
+        while self._registered < len(runts):
+            idx = self._registered
+            rt = runts[idx]
+            self._rt_index[id(rt)] = idx
+            if not (rt.completed or rt.deleted):
+                if rt.admitted:
+                    self._num_active += 1
+                    self._push_ready(idx, clock)
+                else:
+                    self._num_unadmitted += 1
+                    heapq.heappush(self._admit_heap, (rt.q.submit_time, idx))
+            if rt.spec.delete_time is not None and not rt.deleted:
+                heapq.heappush(self._delete_heap, (rt.spec.delete_time, idx))
+            self._registered = idx + 1
+
+    def notify(self, rt: QueryRuntime) -> None:
+        idx = self._rt_index.get(id(rt))
+        if idx is None:
+            return  # not registered yet; _register_new will index it
+        if (rt.spec.delete_time is not None
+                and not (rt.deleted or rt.completed)):
+            heapq.heappush(self._delete_heap, (rt.spec.delete_time, idx))
+        if (rt.admitted and not (rt.completed or rt.deleted)
+                and idx not in self._ready_pool):
+            # The current clock is always a safe lower bound on the (possibly
+            # changed) readiness instant; the stale entry stays in the heap
+            # and is lazily revalidated.
+            self._push_ready(idx, self.executor.clock())
+
+    def _note_completed(self, rt: QueryRuntime) -> None:
+        idx = self._rt_index[id(rt)]
+        self._num_active -= 1
+        self._ready_pool.discard(idx)
+
+    def _push_ready(self, idx: int, t: float) -> None:
+        self._seq += 1
+        heapq.heappush(self._ready_heap, (t, self._seq, idx))
+
+    # -- tick bookkeeping -------------------------------------------------
+    def _admit_and_delete(self, now: float) -> Optional[str]:
+        runts = self.state.runtimes
+        due: List[int] = []
+        while self._admit_heap and self._admit_heap[0][0] <= now + _EPS:
+            _, idx = heapq.heappop(self._admit_heap)
+            rt = runts[idx]
+            if not rt.admitted and not rt.deleted:
+                due.append(idx)
+        due.sort()  # runtime-list order: rr tickets match the scan walk
+        admitted: Optional[str] = None
+        for idx in due:
+            rt = runts[idx]
+            rt.admitted = True
+            rt.rr_seq = self.state.rr_counter
+            self.state.rr_counter += 1
+            on_admit = getattr(self.policy, "on_admit", None)
+            if on_admit is not None:
+                on_admit(rt, now)
+            elif rt.min_batch <= 0:
+                rt.min_batch = 1  # protocol-minimal policy: no sizing hook
+            admitted = rt.q.query_id
+            self._num_unadmitted -= 1
+            self._num_active += 1
+            self._ready_pool.add(idx)  # validated at the decision instant
+        while self._delete_heap and self._delete_heap[0][0] <= now + _EPS:
+            _, idx = heapq.heappop(self._delete_heap)
+            rt = runts[idx]
+            if (rt.deleted or rt.completed or rt.spec.delete_time is None
+                    or rt.spec.delete_time > now + _EPS):
+                continue  # stale/duplicate lazy-deletion entry
+            rt.deleted = True
+            on_withdraw = getattr(self.policy, "on_withdraw", None)
+            if on_withdraw is not None:
+                on_withdraw(rt, now)
+            if rt.admitted:
+                self._num_active -= 1
+            else:
+                self._num_unadmitted -= 1
+            self._ready_pool.discard(idx)
+        return admitted
+
+    def drained(self) -> bool:
+        return self._num_active == 0 and self._num_unadmitted == 0
+
+    # -- the decision ----------------------------------------------------
+    def _collect_ready(self, now: float) -> List[int]:
+        """Due heap entries join the pool; the pool is then (re)validated.
+        Returns the validated ready set in runtime-list order."""
+        runts = self.state.runtimes
+        heap, pool = self._ready_heap, self._ready_pool
+        while heap and heap[0][0] <= now + _EPS:
+            _, _, idx = heapq.heappop(heap)
+            rt = runts[idx]
+            if rt.admitted and not (rt.completed or rt.deleted):
+                pool.add(idx)
+        ready: List[int] = []
+        stale: List[int] = []
+        for idx in pool:
+            if runts[idx].ready(now):
+                ready.append(idx)
+            else:
+                stale.append(idx)
+        for idx in stale:
+            pool.discard(idx)
+            self._push_ready(idx, runts[idx].next_ready_time(now))
+        ready.sort()
+        return ready
+
+    def _next_wake(self, now: float) -> float:
+        """Exact ``min(next_ready_time)`` over unfinished runtimes, found by
+        peek-revalidating the event heaps instead of walking the world."""
+        runts = self.state.runtimes
+        best = math.inf
+        while self._admit_heap:
+            t, idx = self._admit_heap[0]
+            rt = runts[idx]
+            if rt.admitted or rt.deleted:
+                heapq.heappop(self._admit_heap)
+                continue
+            best = t  # an unadmitted runtime wakes at its submit_time
+            break
+        heap = self._ready_heap
+        while heap:
+            if heap[0][0] >= best:
+                break  # every (lower-bound) entry is at/past the admit wake
+            t, seq, idx = heapq.heappop(heap)
+            rt = runts[idx]
+            if rt.completed or rt.deleted or not rt.admitted:
+                continue
+            fresh = rt.next_ready_time(now)
+            heapq.heappush(heap, (fresh, seq, idx))
+            if fresh <= heap[0][0]:
+                best = min(best, fresh)
+                break
+        return best
+
+    def _decide(self, now: float) -> PolicyDecision:
+        ready_idx = self._collect_ready(now)
+        if not ready_idx:
+            nxt = self._next_wake(now)
+            if not math.isfinite(nxt):
+                return PolicyDecision()  # stop: nothing will ever be ready
+            return PolicyDecision(wake_at=nxt)
+        runts = self.state.runtimes
+        rt = self.policy.select([runts[i] for i in ready_idx], now)
+        take = min(rt.avail(now), rt.min_batch)
+        ways = min(self.policy.shard_across, self.state.free_workers(now),
+                   take)
+        if ways > 1:
+            from ..dist.sharding import batch_shard_extents
+
+            shards = tuple(
+                BatchShard(num_tuples=size)
+                for _, size in batch_shard_extents(take, ways)
+            )
+            return PolicyDecision(
+                query_id=rt.q.query_id, num_tuples=take, shards=shards
+            )
+        return PolicyDecision(query_id=rt.q.query_id, num_tuples=take)
+
+
+def heap_capable(policy: SchedulingPolicy) -> bool:
+    """True when ``policy``'s decisions are exactly ``DynamicPolicy.replan``
+    — the contract the heap core mirrors.  Policies overriding ``replan``
+    (custom decision logic the heap cannot see) silently fall back to the
+    scan core."""
+    if getattr(policy, "kind", "static") != "dynamic":
+        return False
+    from .policies.dynamic import DynamicPolicy
+
+    return (isinstance(policy, DynamicPolicy)
+            and type(policy).replan is DynamicPolicy.replan)
+
+
+def _core_class(policy: SchedulingPolicy, runtime: Optional[str]):
+    if runtime not in (None, "scan", "heap"):
+        raise ValueError(
+            f"runtime must be 'scan' or 'heap', got {runtime!r}"
+        )
+    if runtime == "heap" and heap_capable(policy):
+        return HeapLoopCore
+    return DynamicLoopCore
 
 
 def _run_dynamic(
@@ -1043,6 +1334,7 @@ def _run_dynamic(
     max_steps: int,
     on_batch: Optional[Callable[[BatchExecution], None]],
     c_max: Optional[float],
+    runtime: Optional[str] = None,
 ) -> ExecutionTrace:
     """Algorithm 2's NINP loop over a fixed workload (see DynamicLoopCore)."""
     runts = [QueryRuntime(spec=s) for s in specs]
@@ -1059,8 +1351,8 @@ def _run_dynamic(
         num_workers=getattr(executor, "num_workers", 1),
         worker_names=tuple(getattr(executor, "worker_names", ())),
     )
-    core = DynamicLoopCore(policy, executor, state, on_batch=on_batch,
-                           c_max=c_max)
+    core = _core_class(policy, runtime)(policy, executor, state,
+                                        on_batch=on_batch, c_max=c_max)
     for _ in range(max_steps):
         if core.tick() in ("done", "stop"):
             break

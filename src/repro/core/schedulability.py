@@ -15,6 +15,7 @@ default) is the offline pre-run case: the whole timeline is still ahead.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import List, Optional, Sequence, Tuple
@@ -30,6 +31,15 @@ class FeasibilityReport:
 
     def __bool__(self) -> bool:
         return self.feasible
+
+
+def edf_order(queries: Sequence[Query]) -> List[Query]:
+    """Deadline-ascending (EDF) order — stable, so equal deadlines keep
+    their submission order.  THE shared helper behind every deadline-prefix
+    walk (``post_window_condition``, ``work_demand_condition``, the tiered
+    overload variant and the incremental ``DemandLedger``), which used to
+    be four private copies of the same ``sorted(..., key=deadline)``."""
+    return sorted(queries, key=lambda q: q.deadline)
 
 
 def max_prewindow_tuples(q: Query, now: Optional[float] = None) -> int:
@@ -84,6 +94,208 @@ def min_post_window_work(q: Query, now: Optional[float] = None) -> float:
     return q.cost_model.cost(rest) if rest > 0 else 0.0
 
 
+class DemandLedger:
+    """Maintained per-deadline demand structure for INCREMENTAL admission.
+
+    One row per live query, kept in EDF (deadline-ascending, stable) order
+    in a sorted container; each row caches the quantities the deadline-
+    prefix conditions read — minimum work (``min_comp_cost``), first-tuple
+    arrival instant, window end, and (lazily) the minimum post-window work.
+    ``add``/``discard``/``update`` apply single-row deltas — an O(n)
+    memmove in the row lists but NO cost-model or planner calls for the
+    untouched rows — instead of rebuilding the whole snapshot, and the
+    checks evaluate every deadline prefix at once as numpy prefix sums.
+
+    ``work_demand`` is byte-identical to ``work_demand_condition`` over the
+    same rows (``np.cumsum`` accumulates left-to-right exactly like the
+    scalar loop; the parity tests pin this).  ``post_window`` matches
+    ``post_window_condition`` when the cached post-window work is fresh;
+    rows cached at an earlier ``now`` UNDERSTATE the pinned work
+    (``min_post_window_work`` is nondecreasing in ``now``), so a stale
+    ledger errs on the admitting side — the direction the §4.3 gate is
+    documented to err in anyway.
+
+    ``extra`` rows (the incoming queries of an admission check) are merged
+    into deadline position on the fly without mutating the ledger.
+    """
+
+    def __init__(self, queries: Sequence[Query] = ()):
+        self._ids: List[str] = []
+        self._queries: List[Query] = []
+        self._deadlines: List[float] = []
+        self._work: List[float] = []
+        self._arrive: List[float] = []
+        self._wind_end: List[float] = []
+        self._post: List[Optional[float]] = []
+        self._arrays = None  # cached numpy views of the base rows
+        for q in edf_order(queries):
+            self._insert(len(self._ids), q, None)
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def __contains__(self, query_id: str) -> bool:
+        return query_id in self._ids
+
+    @property
+    def queries(self) -> List[Query]:
+        """Live rows in EDF order (e.g. for the tiered overload check)."""
+        return list(self._queries)
+
+    # -- delta maintenance ----------------------------------------------
+    def _insert(self, i: int, q: Query,
+                post_work: Optional[float]) -> None:
+        self._ids.insert(i, q.query_id)
+        self._queries.insert(i, q)
+        self._deadlines.insert(i, q.deadline)
+        self._work.insert(i, q.min_comp_cost)
+        self._arrive.insert(i, q.arrival.input_time(1))
+        self._wind_end.insert(i, q.wind_end)
+        self._post.insert(i, post_work)
+        self._arrays = None
+
+    def add(self, q: Query, now: Optional[float] = None,
+            post_work: Optional[float] = None) -> None:
+        """Insert a row at its deadline position (equal deadlines keep
+        insertion order, like the stable EDF sort).  ``post_work`` may be
+        supplied to skip the planner call; None computes it lazily on the
+        first ``post_window`` check."""
+        i = bisect.bisect_right(self._deadlines, q.deadline)
+        if post_work is None and now is not None:
+            post_work = min_post_window_work(q, now)
+        self._insert(i, q, post_work)
+
+    def discard(self, query_id: str) -> bool:
+        """Drop the row for ``query_id`` (False when absent)."""
+        try:
+            i = self._ids.index(query_id)
+        except ValueError:
+            return False
+        for rows in (self._ids, self._queries, self._deadlines, self._work,
+                     self._arrive, self._wind_end, self._post):
+            del rows[i]
+        self._arrays = None
+        return True
+
+    def update(self, q: Query, now: Optional[float] = None) -> None:
+        """Replace the row for ``q.query_id`` (shed thinned the stream,
+        renegotiation moved the deadline): discard + re-add."""
+        self.discard(q.query_id)
+        self.add(q, now=now)
+
+    # -- the checks ------------------------------------------------------
+    def _base_arrays(self):
+        if self._arrays is None:
+            import numpy as np
+
+            self._arrays = (
+                np.array(self._deadlines, dtype=np.float64),
+                np.array(self._work, dtype=np.float64),
+                np.array(self._arrive, dtype=np.float64),
+                np.array(self._wind_end, dtype=np.float64),
+            )
+        return self._arrays
+
+    def _merged(self, extra: Sequence[Query], now: Optional[float],
+                with_post: bool):
+        """Base rows + ``extra`` merged into deadline position.  Returns
+        (ids, deadlines, work, arrive, wind_end, post_or_None)."""
+        import numpy as np
+
+        dl, work, arrive, wend = self._base_arrays()
+        ids = self._ids
+        post = None
+        if with_post:
+            for i, p in enumerate(self._post):
+                if p is None:  # lazily computed, then cached
+                    self._post[i] = min_post_window_work(self._queries[i], now)
+            post = np.array(self._post, dtype=np.float64)
+        if extra:
+            # np.insert with sorted positions keeps the stable merge order:
+            # an extra row lands AFTER every equal-deadline base row, the
+            # same place the stable sort of [*base, *extra] puts it.
+            pos: List[int] = []
+            edl: List[float] = []
+            ework: List[float] = []
+            earr: List[float] = []
+            ewend: List[float] = []
+            epost: List[float] = []
+            eids = list(ids)
+            offset = 0
+            for q in edf_order(extra):
+                i = bisect.bisect_right(self._deadlines, q.deadline)
+                pos.append(i)
+                eids.insert(i + offset, q.query_id)
+                edl.append(q.deadline)
+                ework.append(q.min_comp_cost)
+                earr.append(q.arrival.input_time(1))
+                ewend.append(q.wind_end)
+                if with_post:
+                    epost.append(min_post_window_work(q, now))
+                offset += 1
+            dl = np.insert(dl, pos, edl)
+            work = np.insert(work, pos, ework)
+            arrive = np.insert(arrive, pos, earr)
+            wend = np.insert(wend, pos, ewend)
+            if with_post:
+                post = np.insert(post, pos, epost)
+            ids = eids
+        return ids, dl, work, arrive, wend, post
+
+    def work_demand(self, extra: Sequence[Query] = (),
+                    now: Optional[float] = None) -> FeasibilityReport:
+        """Processor-demand bound over the maintained rows (+ ``extra``):
+        vectorized twin of ``work_demand_condition``."""
+        import numpy as np
+
+        ids, dl, work, arrive, _, _ = self._merged(extra, now, False)
+        if not len(dl):
+            return FeasibilityReport(feasible=True, reasons=())
+        cumw = np.cumsum(work)
+        start = np.minimum.accumulate(arrive)
+        anchor = start if now is None else np.maximum(start, now)
+        budget = dl - anchor
+        reasons = tuple(
+            f"deadline-prefix through {ids[i]}: total work "
+            f"{float(cumw[i]):.4g} exceeds budget {float(budget[i]):.4g} "
+            f"(deadline {float(dl[i]):.6g} - work start {float(anchor[i]):.6g})"
+            for i in np.flatnonzero(cumw > budget + 1e-9)
+        )
+        return FeasibilityReport(feasible=not reasons, reasons=reasons)
+
+    def post_window(self, extra: Sequence[Query] = (),
+                    now: Optional[float] = None) -> FeasibilityReport:
+        """§7.4 post-window bound over the maintained rows (+ ``extra``):
+        vectorized twin of ``post_window_condition`` (exact when the cached
+        post-window work is fresh; see the class docstring)."""
+        import numpy as np
+
+        ids, dl, _, _, wend, post = self._merged(extra, now, True)
+        if not len(dl):
+            return FeasibilityReport(feasible=True, reasons=())
+        cumpost = np.cumsum(post)
+        anchor = np.minimum.accumulate(wend)
+        if now is not None:
+            anchor = np.maximum(anchor, now)
+        budget = dl - anchor
+        reasons = tuple(
+            f"deadline-prefix through {ids[i]}: post-window work "
+            f"{float(cumpost[i]):.4g} exceeds budget {float(budget[i]):.4g} "
+            f"(deadline {float(dl[i]):.6g} - work start {float(anchor[i]):.6g})"
+            for i in np.flatnonzero(cumpost > budget + 1e-9)
+        )
+        return FeasibilityReport(feasible=not reasons, reasons=reasons)
+
+    def check(self, extra: Sequence[Query] = (),
+              now: Optional[float] = None) -> FeasibilityReport:
+        """Both prefix conditions over the maintained rows (+ ``extra``)."""
+        parts = [self.post_window(extra, now), self.work_demand(extra, now)]
+        return FeasibilityReport(
+            feasible=all(p.feasible for p in parts),
+            reasons=tuple(r for p in parts for r in p.reasons),
+        )
+
+
 def post_window_condition(
     queries: Sequence[Query], now: Optional[float] = None
 ) -> FeasibilityReport:
@@ -96,23 +308,13 @@ def post_window_condition(
     regardless of strategy, so failure proves infeasibility.  (The paper's
     §7.4 instance — identical windows, sum of last-batch costs 105 vs
     largest deadline — is the degenerate case of this check.)
+
+    Evaluated as prefix sums over a one-shot ``DemandLedger`` built at
+    ``now``: each query's ``min_post_window_work`` is computed ONCE (the
+    per-prefix re-walk used to re-run the backward planner O(n^2) times)
+    and accumulated left-to-right exactly like the old inner sum.
     """
-    reasons: List[str] = []
-    qs = sorted(queries, key=lambda q: q.deadline)
-    for i in range(len(qs)):
-        prefix = qs[: i + 1]
-        anchor = min(q.wind_end for q in prefix)
-        if now is not None:
-            anchor = max(anchor, now)
-        work = sum(min_post_window_work(q, now) for q in prefix)
-        budget = qs[i].deadline - anchor
-        if work > budget + 1e-9:
-            reasons.append(
-                f"deadline-prefix through {qs[i].query_id}: post-window work "
-                f"{work:.4g} exceeds budget {budget:.4g} "
-                f"(deadline {qs[i].deadline:.6g} - work start {anchor:.6g})"
-            )
-    return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))
+    return DemandLedger(queries).post_window(now=now)
 
 
 def work_demand_condition(
@@ -132,25 +334,12 @@ def work_demand_condition(
     overlapping queries that individually keep up — but jointly offer k
     times the executor's capacity — pass it while failing this one.  The
     overloaded regime (``repro.core.overload``) is detected here.
+
+    Delegates to a one-shot ``DemandLedger`` (the maintained structure
+    sessions keep incrementally); the prefix sums accumulate in the same
+    order as the old scalar loop, so reports are byte-identical.
     """
-    reasons: List[str] = []
-    qs = sorted(queries, key=lambda q: q.deadline)
-    work = 0.0
-    start = math.inf
-    for i, q in enumerate(qs):
-        # min_comp_cost is each query's cheapest possible processing (one
-        # batch, no final agg) — a lower bound on its demand.
-        work += q.min_comp_cost
-        start = min(start, q.arrival.input_time(1))
-        anchor = start if now is None else max(start, now)
-        budget = q.deadline - anchor
-        if work > budget + 1e-9:
-            reasons.append(
-                f"deadline-prefix through {q.query_id}: total work "
-                f"{work:.4g} exceeds budget {budget:.4g} "
-                f"(deadline {q.deadline:.6g} - work start {anchor:.6g})"
-            )
-    return FeasibilityReport(feasible=not reasons, reasons=tuple(reasons))
+    return DemandLedger(queries).work_demand(now=now)
 
 
 def single_query_condition(queries: Sequence[Query]) -> FeasibilityReport:
@@ -204,6 +393,7 @@ def admission_check(
     active: Sequence[Query] = (),
     c_max: float = float("inf"),
     now: Optional[float] = None,
+    ledger: Optional[DemandLedger] = None,
 ) -> FeasibilityReport:
     """Online admission pre-flight: may ``incoming`` join the LIVE set?
 
@@ -223,13 +413,31 @@ def admission_check(
       passed this gate at their own admission);
     * the §7.4 post-window condition must hold across the UNION;
     * C_max blocking warnings are reported for the incoming set.
+
+    ``ledger`` switches the union checks to the INCREMENTAL path: the
+    prefix conditions read the maintained ``DemandLedger`` rows (with
+    ``incoming`` merged in on the fly) instead of rebuilding from an
+    ``active`` snapshot list — ``active`` is ignored in that case.  Ledger
+    rows are registered full-window demand, not remaining-work snapshots,
+    and cached post-window work may predate ``now``; both approximations
+    err on the admitting side (see ``DemandLedger``), so a session using
+    this as a fast pre-gate falls back to the exact snapshot path when the
+    fast verdict is infeasible.
     """
-    parts = [
-        single_query_condition(incoming),
-        post_window_condition([*active, *incoming], now),
-        work_demand_condition([*active, *incoming], now),
-        blocking_period_bound(incoming, c_max),
-    ]
+    if ledger is not None:
+        parts = [
+            single_query_condition(incoming),
+            ledger.post_window(extra=incoming, now=now),
+            ledger.work_demand(extra=incoming, now=now),
+            blocking_period_bound(incoming, c_max),
+        ]
+    else:
+        parts = [
+            single_query_condition(incoming),
+            post_window_condition([*active, *incoming], now),
+            work_demand_condition([*active, *incoming], now),
+            blocking_period_bound(incoming, c_max),
+        ]
     return FeasibilityReport(
         feasible=all(p.feasible for p in parts),
         reasons=tuple(r for p in parts for r in p.reasons),

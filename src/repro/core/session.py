@@ -82,14 +82,14 @@ from .overload import (
 )
 from .panes import PaneStats, SharedBook, pane_width
 from .runtime import (
-    DynamicLoopCore,
     DynamicQuerySpec,
     ExecutorPool,
     OracleCostExecutor,
     QueryRuntime,
     RuntimeState,
+    _core_class,
 )
-from .schedulability import FeasibilityReport, admission_check
+from .schedulability import DemandLedger, FeasibilityReport, admission_check
 from .types import (
     EPS,
     BatchExecution,
@@ -291,6 +291,8 @@ class SessionRuntime:
         on_renegotiate: Optional[
             Callable[[RenegotiationProposal], bool]] = None,
         forecast: Union[bool, ForecastConfig, None] = None,
+        runtime: Optional[str] = None,
+        admission: str = "snapshot",
         **policy_params,
     ):
         if isinstance(policy, str):
@@ -354,9 +356,29 @@ class SessionRuntime:
             num_workers=getattr(executor, "num_workers", 1),
             worker_names=tuple(getattr(executor, "worker_names", ())),
         )
-        self._core = DynamicLoopCore(
+        # Decision core: ``runtime="heap"`` opts the dynamic loop into the
+        # event-heap core (O(log n) per decision, trace-identical to the
+        # scan); ``"scan"``/None keep the reference full-walk core.
+        self._core = _core_class(policy, runtime)(
             policy, executor, self._state,
             on_batch=self._observe, c_max=self.c_max,
+        )
+        # Admission pre-flight mode: ``"snapshot"`` rebuilds remaining-work
+        # snapshots of the live set per submission (exact, O(n) cost-model
+        # and planner calls each time); ``"incremental"`` maintains a
+        # per-deadline ``DemandLedger`` updated by delta on window
+        # open/close/withdraw/shed and answers the prefix-sum conditions
+        # from it — full-window rows, so demand is over-estimated and an
+        # infeasible verdict falls back to the exact snapshot path before
+        # any reject/shed decision (the fast path only ever short-circuits
+        # ACCEPTS).
+        if admission not in ("snapshot", "incremental"):
+            raise ValueError(
+                f"admission must be 'snapshot' or 'incremental', "
+                f"got {admission!r}"
+            )
+        self._ledger: Optional[DemandLedger] = (
+            DemandLedger() if admission == "incremental" else None
         )
         self._is_dynamic = getattr(policy, "kind", "static") == "dynamic"
         self._start_time = start_time
@@ -532,12 +554,31 @@ class SessionRuntime:
                                                    sharers=k,
                                                    pane_tuples=width),
                     )
-        snaps = self._active_snapshot()
         c_max = self.c_max if self.c_max is not None else float("inf")
         now = self.now
-        report = admission_check([first], snaps, c_max=c_max, now=now)
+        snaps: List[Query] = []
+        fast_ok = False
+        if (self._ledger is not None and self.admission_control
+                and not force):
+            # Incremental fast path (admission="incremental"): answer the
+            # prefix-sum conditions from the maintained ledger — no
+            # snapshot rebuild, no per-row planner calls.  Ledger rows are
+            # FULL windows, so demand is over-estimated; a feasible verdict
+            # safely short-circuits to admit, an infeasible one falls back
+            # to the exact snapshot pre-flight below before any
+            # reject/shed decision.
+            report = admission_check([first], (), c_max=c_max, now=now,
+                                     ledger=self._ledger)
+            fast_ok = report.feasible and (
+                self.overload is None
+                or tiered_work_demand_condition(
+                    [*self._ledger.queries, first], now).feasible
+            )
+        if not fast_ok:
+            snaps = self._active_snapshot()
+            report = admission_check([first], snaps, c_max=c_max, now=now)
         decision, shed_fraction, error_bound, proposal = "admit", 0.0, 0.0, None
-        if self.admission_control and not force:
+        if self.admission_control and not force and not fast_ok:
             if self.overload is not None:
                 # Overload activation additionally consults the tier-strict
                 # demand bound: THIS runtime protects low tier numbers, so
@@ -603,6 +644,13 @@ class SessionRuntime:
         for rt in live.runtimes:
             if not rt.completed and rt.spec.delete_time is None:
                 rt.spec.delete_time = now
+                self._core.notify(rt)
+        if self._ledger is not None:
+            for rt in live.runtimes:
+                if not rt.completed:
+                    self._ledger.discard(rt.q.query_id)
+            for q in live.pending_static:
+                self._ledger.discard(q.query_id)
         if self.book is not None:
             # Release the withdrawn windows' pane references so shared
             # panes they alone were pinning get evicted.
@@ -650,6 +698,10 @@ class SessionRuntime:
                         hook(rt, now)
                     except InfeasibleDeadline:
                         pass  # keep the previous MinBatch; sizing is advisory
+                    self._core.notify(rt)
+                    if (self._ledger is not None
+                            and self._ledger.discard(rt.q.query_id)):
+                        self._ledger.add(rt.q)
 
     # ------------------------------------------------------------------
     # Overload control (repro.core.overload)
@@ -730,6 +782,9 @@ class SessionRuntime:
                     if thin is not q:
                         l.pending_static[i] = thin
                         self._window_shed[qid] = (cum, bound)
+                        if (self._ledger is not None
+                                and self._ledger.discard(qid)):
+                            self._ledger.add(thin)
                         self.trace.log(
                             "shed", now, qid,
                             f"fraction={cum:.4f};error_bound={bound:.4f}",
@@ -762,6 +817,9 @@ class SessionRuntime:
                 hook(rt, now)
             except InfeasibleDeadline:
                 pass  # keep the previous MinBatch; sizing is advisory
+        self._core.notify(rt)
+        if self._ledger is not None and self._ledger.discard(rt.q.query_id):
+            self._ledger.add(rt.q)
 
     def rebalance(self):
         """Mid-run overload response: when cost drift (recalibration) or a
@@ -969,10 +1027,16 @@ class SessionRuntime:
                     hook(rt, now)  # re-size MinBatch for the restored total
                 except InfeasibleDeadline:
                     pass  # keep the previous MinBatch; sizing is advisory
+            self._core.notify(rt)
+            if (self._ledger is not None
+                    and self._ledger.discard(rt.q.query_id)):
+                self._ledger.add(rt.q)
             return
         for i, q in enumerate(live.pending_static):
             if q.query_id == qid:
                 live.pending_static[i] = rec.orig_query
+                if self._ledger is not None and self._ledger.discard(qid):
+                    self._ledger.add(rec.orig_query)
                 self._window_shed.pop(qid, None)
                 self.trace.log("forecast_refund", now, qid,
                                f"fraction={rec.fraction:.4f}")
@@ -1214,6 +1278,10 @@ class SessionRuntime:
                 self._resync_sharers(q.stream)
         live.next_window += 1
         self.trace.log("window_open", q.submit_time, q.query_id)
+        if self._ledger is not None:
+            # One ledger row per open window, in deadline position; the
+            # post-window work is computed lazily at the first check.
+            self._ledger.add(q)
         if self._is_dynamic:
             shed_fr, err_b = (proactive if proactive is not None
                               else (live.shed_fraction, live.error_bound))
@@ -1316,6 +1384,17 @@ class SessionRuntime:
                         hook(rt, now)
                     except InfeasibleDeadline:
                         pass  # keep the previous MinBatch; sizing is advisory
+                    self._core.notify(rt)
+        if self._ledger is not None:
+            # The refit changed the shared cost model underneath every row
+            # of this spec: re-read the cached work quantities.
+            for rt in live.runtimes:
+                if (not (rt.completed or rt.deleted)
+                        and self._ledger.discard(rt.q.query_id)):
+                    self._ledger.add(rt.q)
+            for i, q in enumerate(live.pending_static):
+                if self._ledger.discard(q.query_id):
+                    self._ledger.add(q)
         # Drift can leave the corrected workload infeasible — the overload
         # path (when enabled) sheds the minimum from the lowest tiers to
         # restore the necessary conditions instead of riding into misses.
@@ -1379,6 +1458,8 @@ class SessionRuntime:
                 "window_close", o.completion_time, o.query_id,
                 f"met={o.met_deadline};shortfall={o.shortfall}",
             )
+            if self._ledger is not None:
+                self._ledger.discard(o.query_id)
             self._on_window_close(o)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 # The ONE comparison tolerance for modelled time and tuple counts.
 #
@@ -395,6 +395,104 @@ class ExecutionTrace:
     @property
     def all_met(self) -> bool:
         return all(o.met_deadline for o in self.outcomes)
+
+
+class QueryTable:
+    """Struct-of-arrays snapshot of per-query scheduling quantities.
+
+    Packs the fields the dynamic policies' priority math reads — tier,
+    rr ticket, deadline, effective target instant, MinBatch, progress and
+    the linear cost-model coefficients — into parallel numpy arrays so
+    laxity / target-laxity / remaining-cost evaluate vectorized over the
+    whole ready set at once (Eq. 9/10 math, one ufunc chain instead of
+    n Python attribute walks).
+
+    Packing is only defined for rows whose cost model is a plain
+    ``LinearCostModel`` with a known total (``spec.total_known``);
+    ``pack`` returns None otherwise and callers fall back to the
+    per-query Python path.  Every arithmetic step mirrors
+    ``QueryRuntime.remaining_cost``/``laxity``/``target_laxity``
+    operation-for-operation, so the packed floats are bit-identical to the
+    scalar ones — the property the heap/scan trace-parity gate rests on.
+    """
+
+    __slots__ = (
+        "n", "tier", "rr_seq", "deadline", "target_time", "min_batch",
+        "processed", "batches_done", "total", "tuple_cost", "overhead",
+        "agg_per_batch", "agg_overhead",
+    )
+
+    @classmethod
+    def pack(cls, runtimes: Sequence[object]) -> Optional["QueryTable"]:
+        """SoA over ``runtimes`` (``QueryRuntime`` rows), or None when any
+        row is ineligible for the vectorized path."""
+        from .cost_model import LinearCostModel
+
+        import numpy as np
+
+        # ONE attribute walk per row (``rt.q`` is a property — touching it
+        # 12 times per row dominated the packing cost), eligibility checked
+        # in the same pass.  All values are exact in float64 (counts are
+        # far below 2**53), so one 2-D conversion + int casts of the count
+        # columns reproduces the per-field arrays bit for bit.
+        rows = []
+        for rt in runtimes:
+            q = rt.q
+            cm = q.cost_model
+            if type(cm) is not LinearCostModel or not rt.spec.total_known:
+                return None
+            rows.append((
+                q.tier, rt.rr_seq, q.deadline, q.target_time, rt.min_batch,
+                rt.processed, rt.batches_done, q.num_tuples_total,
+                cm.tuple_cost, cm.overhead, cm.agg_per_batch, cm.agg_overhead,
+            ))
+        t = cls()
+        t.n = len(rows)
+        arr = np.array(rows, dtype=np.float64).reshape(t.n, 12)
+        t.tier = arr[:, 0].astype(np.int64)
+        t.rr_seq = arr[:, 1].astype(np.int64)
+        t.deadline = arr[:, 2]
+        t.target_time = arr[:, 3]
+        t.min_batch = arr[:, 4].astype(np.int64)
+        t.processed = arr[:, 5].astype(np.int64)
+        t.batches_done = arr[:, 6].astype(np.int64)
+        t.total = arr[:, 7].astype(np.int64)
+        t.tuple_cost = arr[:, 8]
+        t.overhead = arr[:, 9]
+        t.agg_per_batch = arr[:, 10]
+        t.agg_overhead = arr[:, 11]
+        return t
+
+    def remaining_cost(self, now: float):
+        """Vector twin of ``QueryRuntime.remaining_cost`` (FindMinCompCost):
+        pending tuples in MinBatch chunks + final aggregation."""
+        import numpy as np
+
+        pend = np.maximum(self.total - self.processed, 0)
+        mb = np.maximum(self.min_batch, 1)
+        full = pend // mb
+        rem = pend - full * mb
+        # LinearCostModel.cost, with its n<=0 branches, evaluated elementwise
+        cost_mb = np.where(
+            self.min_batch > 0,
+            self.min_batch * self.tuple_cost + self.overhead,
+            np.where(self.min_batch == 0, self.overhead, 0.0),
+        )
+        c = full * cost_mb + np.where(
+            rem > 0, rem * self.tuple_cost + self.overhead, 0.0)
+        total_batches = self.batches_done + full + (rem > 0)
+        agg = np.where(
+            total_batches > 1,
+            total_batches * self.agg_per_batch + self.agg_overhead, 0.0)
+        return np.where(pend == 0, 0.0, c + agg)
+
+    def laxity(self, now: float):
+        """Eq. (10): deadline - now - remaining cost (vectorized)."""
+        return self.deadline - now - self.remaining_cost(now)
+
+    def target_laxity(self, now: float):
+        """Laxity against the effective target instant (``target_time``)."""
+        return self.laxity(now) - (self.deadline - self.target_time)
 
 
 # ---------------------------------------------------------------------------

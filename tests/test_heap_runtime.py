@@ -1,0 +1,707 @@
+"""Event-heap decision core tests (PR "Event-heap scheduler core").
+
+Headline property: ``runtime="heap"`` (``HeapLoopCore``) produces traces
+BYTE-IDENTICAL to the reference scan core for every registered policy —
+through the bare runtime loop, executor pools, and full sessions with
+withdrawals, shedding, overload control and forecasting.  On top of that:
+heap lazy-deletion invariants checked in lockstep against the scan walk,
+the PR-6 stale-wake livelock regression driven through the heap path,
+vectorized policy-selection parity around the ``_VECTOR_MIN`` crossover,
+``find_min_batch_sizes`` vector/scalar parity (values AND error messages),
+``DemandLedger`` incremental-vs-rebuilt equivalence, the session's
+incremental admission fast path, and the pool's precomputed worker ranks.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    ConstantRateArrival,
+    DemandLedger,
+    DynamicQuerySpec,
+    ExecutionTrace,
+    ExecutorPool,
+    HeapLoopCore,
+    InfeasibleDeadline,
+    LinearCostModel,
+    Planner,
+    Query,
+    RecurringQuerySpec,
+    Session,
+    SimulatedExecutor,
+    UniformWindowArrival,
+    admission_check,
+    edf_order,
+    find_min_batch_size,
+    find_min_batch_sizes,
+    get_policy,
+    heap_capable,
+    list_policies,
+    post_window_condition,
+    run,
+    work_demand_condition,
+)
+from repro.core.policies.dynamic import (
+    _VECTOR_MIN,
+    _vector_select,
+    LLFPolicy,
+)
+from repro.core.runtime import (
+    DynamicLoopCore,
+    QueryRuntime,
+    RuntimeState,
+    _core_class,
+)
+
+N_TUPLES = 8
+
+DYNAMIC_POLICIES = sorted(
+    n for n in list_policies()
+    if getattr(get_policy(n), "kind", "static") == "dynamic"
+)
+
+
+def make_query(qid: str, start: float = 0.0, rate: float = 1.0,
+               n: int = N_TUPLES, slack: float = 3.0, tier: int = 0,
+               submit: float = None) -> Query:
+    arr = ConstantRateArrival(wind_start=start, rate=rate, num_tuples_total=n)
+    cm = LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2)
+    return Query(qid, start, arr.wind_end, arr.wind_end + slack * cm.cost(n),
+                 n, cm, arr, submit_time=submit, tier=tier)
+
+
+def churn_specs():
+    """A workload exercising every heap event kind: staggered windows,
+    a late submission, a strict-tier query, and a mid-run deletion."""
+    specs = [DynamicQuerySpec(query=make_query(f"q{i}", start=1.5 * i,
+                                               slack=4.0))
+             for i in range(4)]
+    specs.append(DynamicQuerySpec(
+        query=make_query("tiered", start=2.0, tier=1, slack=6.0)))
+    specs.append(DynamicQuerySpec(
+        query=make_query("late", start=0.0, submit=4.0, slack=6.0)))
+    specs.append(DynamicQuerySpec(
+        query=make_query("gone", start=0.0, slack=6.0), delete_time=5.0))
+    return specs
+
+
+def _traces_equal(a: ExecutionTrace, b: ExecutionTrace) -> bool:
+    return a.executions == b.executions and a.outcomes == b.outcomes
+
+
+# ---------------------------------------------------------------------------
+# Scan/heap trace identity
+# ---------------------------------------------------------------------------
+
+
+class TestHeapScanParity:
+    """runtime="heap" is decision-for-decision identical to the scan core."""
+
+    @pytest.mark.parametrize("policy_name", sorted(list_policies()))
+    def test_all_policies_trace_identical(self, policy_name):
+        def queries():
+            return [make_query(f"q{i}", start=float(i), slack=5.0)
+                    for i in range(3)]
+
+        scan = Planner(policy=policy_name).run(queries(), runtime="scan")
+        heap = Planner(policy=policy_name).run(queries(), runtime="heap")
+        assert _traces_equal(scan, heap)
+
+    @pytest.mark.parametrize("policy_name", DYNAMIC_POLICIES)
+    def test_churn_workload_trace_identical(self, policy_name):
+        """Late submissions, tiers and scheduled deletions flow through the
+        admit/delete/ready heaps exactly like the scan walk."""
+        policy = get_policy(policy_name)
+        scan = run(policy, churn_specs(), SimulatedExecutor(), runtime="scan")
+        heap = run(get_policy(policy_name), churn_specs(),
+                   SimulatedExecutor(), runtime="heap")
+        assert scan.executions, "churn workload must actually run batches"
+        assert _traces_equal(scan, heap)
+
+    @pytest.mark.parametrize("policy_name", DYNAMIC_POLICIES)
+    def test_pool_trace_identical(self, policy_name):
+        def queries():
+            return [make_query(f"q{i}", start=float(i), slack=5.0)
+                    for i in range(4)]
+
+        planner = Planner(policy=policy_name)
+        scan = planner.run(queries(), workers=3, runtime="scan")
+        heap = planner.run(queries(), workers=3, runtime="heap")
+        assert _traces_equal(scan, heap)
+
+    def test_sharded_dispatch_trace_identical(self):
+        """Worker-sharded decisions (shard_across > 1) go through the heap
+        core's own shard path — identical shard extents and workers."""
+        def queries():
+            return [make_query(f"q{i}", start=0.0, n=16, rate=8.0, slack=5.0)
+                    for i in range(2)]
+
+        scan = run(get_policy("llf-dynamic", shard_across=2), queries(),
+                   ExecutorPool(workers=2), runtime="scan")
+        heap = run(get_policy("llf-dynamic", shard_across=2), queries(),
+                   ExecutorPool(workers=2), runtime="heap")
+        assert any(e.worker for e in scan.executions)
+        assert _traces_equal(scan, heap)
+
+
+class TestCoreSelection:
+    """heap_capable / _core_class routing and knob validation."""
+
+    def test_dynamic_policies_are_heap_capable(self):
+        for name in DYNAMIC_POLICIES:
+            assert heap_capable(get_policy(name)), name
+
+    def test_static_policies_are_not(self):
+        for name in sorted(set(list_policies()) - set(DYNAMIC_POLICIES)):
+            assert not heap_capable(get_policy(name)), name
+
+    def test_custom_replan_falls_back_to_scan(self):
+        class Custom(LLFPolicy):
+            def replan(self, event, state):
+                return super().replan(event, state)
+
+        policy = Custom()
+        assert not heap_capable(policy)
+        assert _core_class(policy, "heap") is DynamicLoopCore
+        # Capable policy + runtime="heap" is the only heap route.
+        assert _core_class(get_policy("llf-dynamic"), "heap") is HeapLoopCore
+        assert _core_class(get_policy("llf-dynamic"), "scan") is DynamicLoopCore
+        assert _core_class(get_policy("llf-dynamic"), None) is DynamicLoopCore
+
+    def test_bad_runtime_value_raises(self):
+        with pytest.raises(ValueError, match="runtime must be"):
+            run(get_policy("llf-dynamic"), [make_query("q")],
+                runtime="btree")
+        with pytest.raises(ValueError, match="runtime must be"):
+            Session(runtime="btree")
+
+    def test_bad_admission_value_raises(self):
+        with pytest.raises(ValueError, match="admission must be"):
+            Session(admission="ledger")
+
+
+# ---------------------------------------------------------------------------
+# Heap bookkeeping invariants (lockstep against the scan definitions)
+# ---------------------------------------------------------------------------
+
+
+def _drive(runtime: str, mutate_at=None):
+    """Tick a core over the churn workload, checking heap invariants against
+    the walk-based definitions after EVERY tick.  ``mutate_at`` maps tick
+    index -> callable(core, state, now) for mid-run external changes."""
+    policy = get_policy("llf-dynamic")
+    specs = churn_specs()
+    runts = [QueryRuntime(spec=s) for s in specs]
+    trace = ExecutionTrace()
+    executor = SimulatedExecutor()
+    executor.reset(min(r.q.submit_time for r in runts))
+    state = RuntimeState(runtimes=runts, trace=trace)
+    core = _core_class(policy, runtime)(policy, executor, state,
+                                        c_max=policy.c_max)
+    statuses = []
+    for i in range(2000):
+        if mutate_at and i in mutate_at:
+            mutate_at[i](core, state, executor.clock())
+        status = core.tick()
+        statuses.append(status)
+        if isinstance(core, HeapLoopCore):
+            active = state.active()
+            unadmitted = [r for r in state.runtimes
+                          if not r.admitted and not r.deleted]
+            assert core._num_active == len(active)
+            assert core._num_unadmitted == len(unadmitted)
+            # Pool members are always live (lazy deletion never leaves a
+            # dead runtime competing for the executor).
+            for idx in core._ready_pool:
+                rt = state.runtimes[idx]
+                assert rt.admitted and not (rt.completed or rt.deleted)
+            # drained() from counters == drained() from the scan walk.
+            assert core.drained() == (
+                not active and all(r.admitted or r.deleted
+                                   for r in state.runtimes))
+        if status in ("done", "stop"):
+            break
+    return trace, statuses
+
+
+class TestHeapInvariants:
+    def test_counters_match_walk_every_tick(self):
+        trace, statuses = _drive("heap")
+        assert statuses[-1] == "done"
+        assert trace.outcomes  # deleted runtime emits no outcome; rest do
+
+    def test_statuses_match_scan_tick_for_tick(self):
+        scan_trace, scan_statuses = _drive("scan")
+        heap_trace, heap_statuses = _drive("heap")
+        assert scan_statuses == heap_statuses
+        assert _traces_equal(scan_trace, heap_trace)
+
+    def test_lazy_deletion_with_duplicate_events(self):
+        """Repeated notify() pushes duplicate delete-heap entries; stale
+        entries must be skipped on pop and the deletion applied once."""
+        def withdraw(core, state, now):
+            rt = state.by_id("q3")
+            rt.spec.delete_time = now
+            core.notify(rt)
+            core.notify(rt)  # duplicate lazy-deletion event
+            core.notify(rt)
+
+        scan_trace, _ = _drive("scan", mutate_at={4: withdraw})
+        heap_trace, _ = _drive("heap", mutate_at={4: withdraw})
+        assert all(o.query_id != "q3" for o in heap_trace.outcomes)
+        assert _traces_equal(scan_trace, heap_trace)
+
+    def test_future_delete_event_is_honored_once_due(self):
+        """A delete_time pushed for a FUTURE instant sits in the heap until
+        due; revoking it (delete_time=None) makes the entry stale."""
+        def schedule_then_revoke(core, state, now):
+            rt = state.by_id("q2")
+            rt.spec.delete_time = now + 0.5
+            core.notify(rt)
+            rt.spec.delete_time = None  # the heap entry is now stale
+
+        _, _ = _drive("heap", mutate_at={3: schedule_then_revoke})
+        trace, _ = _drive("heap", mutate_at={3: schedule_then_revoke})
+        assert any(o.query_id == "q2" for o in trace.outcomes)
+
+    def test_minbatch_resize_notify_parity(self):
+        """An external MinBatch resize (shed/recalibrate path) re-indexes
+        readiness via notify(); traces still match the scan."""
+        def resize(core, state, now):
+            rt = state.by_id("q1")
+            if not rt.completed and not rt.deleted:
+                rt.min_batch = max(1, rt.min_batch - 1)
+                core.notify(rt)
+
+        scan_trace, _ = _drive("scan", mutate_at={5: resize})
+        heap_trace, _ = _drive("heap", mutate_at={5: resize})
+        assert _traces_equal(scan_trace, heap_trace)
+
+
+# ---------------------------------------------------------------------------
+# PR-6 stale-wake livelock regression, through the heap path
+# ---------------------------------------------------------------------------
+
+
+SPAN = 50.0
+
+
+def burst_truth_spec(qid: str = "r", n: int = 40, windows: int = 3,
+                     slack: float = 30.0) -> RecurringQuerySpec:
+    """Predicted uniform, truth bursty: every window's tuples land in the
+    last 10 time units — the PR-6 livelock shape (predicted readiness
+    passes long before the truth stream delivers, so a stale wake instant
+    must not eps-step the wait loop)."""
+    base = Query(
+        query_id=qid, wind_start=0.0, wind_end=SPAN, deadline=SPAN + slack,
+        num_tuples_total=n,
+        cost_model=LinearCostModel(tuple_cost=0.2, overhead=0.1,
+                                   agg_per_batch=0.1),
+        arrival=UniformWindowArrival(wind_start=0.0, wind_end=SPAN,
+                                     num_tuples_total=n),
+    )
+
+    def truth(w):
+        start = w * SPAN
+        return UniformWindowArrival(wind_start=start + SPAN - 10.0,
+                                    wind_end=start + SPAN,
+                                    num_tuples_total=n)
+
+    return RecurringQuerySpec(base=base, period=SPAN, num_windows=windows,
+                              truth_factory=truth)
+
+
+class TestStaleWakeLivelock:
+    def _session_trace(self, runtime):
+        session = Session(policy="llf-dynamic", runtime=runtime,
+                          admission_control=False)
+        session.submit(burst_truth_spec())
+        # A livelocked wait loop would eps-step and exhaust max_steps long
+        # before the horizon; the bound is the regression assertion.
+        return session.run_until(SPAN * 3 + 40.0, max_steps=5_000)
+
+    def test_heap_completes_within_step_bound(self):
+        trace = self._session_trace("heap")
+        assert len(trace.outcomes) == 3  # every window closed
+
+    def test_heap_matches_scan_on_bursty_truth(self):
+        scan = self._session_trace("scan")
+        heap = self._session_trace("heap")
+        assert _traces_equal(scan, heap)
+
+    def test_bare_loop_bursty_truth_parity(self):
+        """Same shape through run(): truth arrivals later than predicted."""
+        def specs():
+            q = make_query("b", n=20, rate=1.0, slack=6.0)
+            truth = UniformWindowArrival(wind_start=q.wind_end - 4.0,
+                                         wind_end=q.wind_end,
+                                         num_tuples_total=20)
+            return [DynamicQuerySpec(query=q, truth=truth)]
+
+        policy = get_policy("llf-dynamic")
+        scan = run(policy, specs(), SimulatedExecutor(), runtime="scan",
+                   max_steps=5_000)
+        heap = run(policy, specs(), SimulatedExecutor(), runtime="heap",
+                   max_steps=5_000)
+        assert scan.outcomes and _traces_equal(scan, heap)
+
+
+# ---------------------------------------------------------------------------
+# Session parity: heap + incremental admission under the full feature set
+# ---------------------------------------------------------------------------
+
+
+class TestSessionHeapParity:
+    def _workload(self):
+        specs = []
+        for i in range(4):
+            base = make_query(f"r{i}", start=2.0 * i, n=6, slack=6.0,
+                              tier=i % 2)
+            specs.append(RecurringQuerySpec(base=base, period=30.0,
+                                            num_windows=2))
+        return specs
+
+    def _run(self, runtime, admission="snapshot"):
+        session = Session(policy="llf-dynamic", workers=2, overload=True,
+                          runtime=runtime, admission=admission)
+        for spec in self._workload():
+            session.submit(spec)
+        session.run_until(20.0)
+        session.withdraw("r2")  # mid-run withdrawal through the delete heap
+        session.run_until(100.0)
+        return session.trace
+
+    def test_overload_withdraw_pool_parity(self):
+        scan = self._run("scan")
+        heap = self._run("heap")
+        incr = self._run("heap", admission="incremental")
+        assert scan.executions
+        assert _traces_equal(scan, heap)
+        assert _traces_equal(scan, incr)
+
+    def test_forecast_session_parity(self):
+        def go(runtime):
+            session = Session(policy="llf-dynamic", runtime=runtime,
+                              overload=True, forecast=True)
+            session.submit(burst_truth_spec(slack=20.0))
+            return session.run_until(SPAN * 3 + 40.0, max_steps=10_000)
+
+        assert _traces_equal(go("scan"), go("heap"))
+
+    def test_calibrating_session_parity(self):
+        cm_true = LinearCostModel(tuple_cost=0.6, overhead=0.45,
+                                  agg_per_batch=0.3)
+
+        def go(runtime):
+            session = Session(policy="llf-dynamic", calibrate=True,
+                              runtime=runtime)
+            base = make_query("d", n=20, rate=2.0, slack=4.0)
+            session.submit(RecurringQuerySpec(base=base, period=30.0,
+                                              num_windows=3,
+                                              true_cost_model=cm_true))
+            return session.run_until(120.0)
+
+        assert _traces_equal(go("scan"), go("heap"))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized policy selection
+# ---------------------------------------------------------------------------
+
+
+def ready_set(width: int, now: float = 6.0, cost_model=None):
+    """``width`` admitted, ready runtimes with clashing deadlines, mixed
+    tiers and rotated rr tickets — enough structure to catch any ordering
+    divergence between the lexsort and the Python keys."""
+    cm = cost_model or LinearCostModel(tuple_cost=0.01, overhead=0.02,
+                                       agg_per_batch=0.01)
+    ready = []
+    for i in range(width):
+        arr = ConstantRateArrival(wind_start=0.0, rate=10.0,
+                                  num_tuples_total=50)
+        q = Query(f"q{i}", 0.0, arr.wind_end,
+                  deadline=20.0 + (i % 7), num_tuples_total=50,
+                  cost_model=cm, arrival=arr, tier=i % 3,
+                  latency_target=(5.0 if i % 5 == 0 else None))
+        rt = QueryRuntime(spec=DynamicQuerySpec(query=q), min_batch=3,
+                          processed=i % 4, admitted=True,
+                          rr_seq=(width - i) % width)
+        assert rt.ready(now)
+        ready.append(rt)
+    return ready
+
+
+class TestVectorSelectParity:
+    WIDTHS = (3, _VECTOR_MIN - 1, _VECTOR_MIN, _VECTOR_MIN + 1, 200)
+
+    @pytest.mark.parametrize("policy_name", ["llf-dynamic", "edf-dynamic",
+                                             "sjf-dynamic", "rr-dynamic"])
+    @pytest.mark.parametrize("width", WIDTHS)
+    def test_winner_matches_python_keys(self, policy_name, width):
+        policy = get_policy(policy_name)
+        now = 6.0
+        ready = ready_set(width, now)
+        scalar = min(ready,
+                     key=lambda r: (r.q.tier, *policy.priority(r, now)))
+        assert policy.select(ready, now) is scalar
+        i = _vector_select(policy, ready, now)  # forced, any width
+        assert i is not None and ready[i] is scalar
+
+    def test_unpackable_rows_fall_back(self):
+        class WrappedLinear(LinearCostModel):
+            pass
+
+        policy = get_policy("llf-dynamic")
+        now = 6.0
+        ready = ready_set(
+            _VECTOR_MIN + 5, now,
+            cost_model=WrappedLinear(tuple_cost=0.01, overhead=0.02,
+                                     agg_per_batch=0.01))
+        assert _vector_select(policy, ready, now) is None
+        scalar = min(ready,
+                     key=lambda r: (r.q.tier, *policy.priority(r, now)))
+        assert policy.select(ready, now) is scalar
+
+    def test_custom_priority_falls_back(self):
+        class Custom(LLFPolicy):
+            def priority(self, rt, now):
+                return (rt.q.deadline,)
+
+        now = 6.0
+        ready = ready_set(_VECTOR_MIN + 5, now)
+        policy = Custom()
+        assert _vector_select(policy, ready, now) is None
+        assert policy.select(ready, now) is min(
+            ready, key=lambda r: (r.q.tier, *policy.priority(r, now)))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized MinBatch sizing
+# ---------------------------------------------------------------------------
+
+
+class TestFindMinBatchSizes:
+    MODELS = [
+        LinearCostModel(tuple_cost=0.4, overhead=0.3, agg_per_batch=0.2),
+        LinearCostModel(tuple_cost=0.05, overhead=1.0, agg_per_batch=0.0),
+        LinearCostModel(tuple_cost=1.0, overhead=0.0, agg_per_batch=0.5,
+                        agg_overhead=0.3),
+        LinearCostModel(tuple_cost=0.001, overhead=0.02,
+                        agg_per_batch=0.004),
+    ]
+
+    @pytest.mark.parametrize("delta", [0.1, 0.5, 2.0])
+    @pytest.mark.parametrize("c_max", [3.0, 30.0, 1e6])
+    def test_elementwise_parity(self, delta, c_max):
+        ns = [0, 1, 2, 7, 64, 1000]
+        rows = [(n, m) for n in ns for m in self.MODELS]
+        groups = [(i % 4) for i in range(len(rows))]
+        try:
+            expect = [find_min_batch_size(n, m, delta, c_max, g)
+                      for (n, m), g in zip(rows, groups)]
+        except InfeasibleDeadline as e:
+            with pytest.raises(InfeasibleDeadline) as ei:
+                find_min_batch_sizes([n for n, _ in rows],
+                                     [m for _, m in rows], delta, c_max,
+                                     groups)
+            assert str(ei.value) == str(e)
+            return
+        got = find_min_batch_sizes([n for n, _ in rows],
+                                   [m for _, m in rows], delta, c_max,
+                                   groups)
+        assert got == expect
+
+    def test_error_message_parity_first_row_wins(self):
+        cm = LinearCostModel(tuple_cost=5.0, overhead=1.0)
+        with pytest.raises(InfeasibleDeadline) as scalar:
+            find_min_batch_size(10, cm, 0.5, 2.0)
+        with pytest.raises(InfeasibleDeadline) as vector:
+            find_min_batch_sizes([4, 10, 10], [self.MODELS[0], cm, cm],
+                                 0.5, 2.0)
+        assert str(vector.value) == str(scalar.value)
+
+    def test_non_linear_models_fall_back_to_scalar(self):
+        class Quirk(LinearCostModel):
+            pass
+
+        models = [self.MODELS[0], Quirk(tuple_cost=0.4, overhead=0.3)]
+        got = find_min_batch_sizes([64, 64], models, 0.5, 30.0)
+        assert got == [find_min_batch_size(64, m, 0.5, 30.0) for m in models]
+
+    def test_empty_input(self):
+        assert find_min_batch_sizes([], [], 0.5, 30.0) == []
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            find_min_batch_sizes([1, 2], self.MODELS[:1], 0.5, 30.0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental admission: DemandLedger + session fast path
+# ---------------------------------------------------------------------------
+
+
+def deadline_spread(k: int = 6):
+    qs = []
+    for i in range(k):
+        q = make_query(f"a{i}", start=2.0 * i, slack=2.0 + (i % 3))
+        if i in (2, 4):  # deadline ties exercise the stable EDF merge
+            q = dataclasses.replace(q, deadline=qs[1].deadline)
+        qs.append(q)
+    return qs
+
+
+class TestDemandLedger:
+    def test_incremental_equals_rebuilt(self):
+        qs = deadline_spread()
+        ledger = DemandLedger()
+        for q in qs:
+            ledger.add(q)
+        ledger.discard("a3")
+        resized = dataclasses.replace(qs[1], deadline=qs[1].deadline + 4.0)
+        ledger.update(resized)
+        live = [q for q in qs if q.query_id not in ("a1", "a3")] + [resized]
+        rebuilt = DemandLedger(live)
+        assert [q.query_id for q in ledger.queries] == [
+            q.query_id for q in rebuilt.queries]
+        for now in (None, 3.0):
+            assert ledger.work_demand(now=now) == rebuilt.work_demand(now=now)
+            assert ledger.post_window(now=now) == rebuilt.post_window(now=now)
+            assert ledger.check(now=now) == rebuilt.check(now=now)
+
+    def test_matches_scalar_conditions(self):
+        qs = deadline_spread()
+        ledger = DemandLedger(qs)
+        for now in (None, 1.0):
+            assert ledger.work_demand(now=now) == work_demand_condition(
+                edf_order(qs), now)
+            assert ledger.post_window(now=now) == post_window_condition(
+                edf_order(qs), now)
+
+    def test_extra_merge_does_not_mutate(self):
+        qs = deadline_spread(4)
+        ledger = DemandLedger(qs[:3])
+        extra = [qs[3], dataclasses.replace(qs[0], query_id="dup",
+                                            deadline=qs[1].deadline)]
+        merged = ledger.check(extra=extra, now=0.0)
+        assert merged == DemandLedger(qs[:3] + extra).check(now=0.0)
+        assert len(ledger) == 3 and "dup" not in ledger
+
+    def test_admission_check_ledger_vs_snapshot(self):
+        """Full-window rows: the ledger path must agree with the snapshot
+        path when the active set IS its full windows (fresh admission)."""
+        qs = deadline_spread()
+        ledger = DemandLedger(qs[:-1])
+        incoming = [qs[-1]]
+        fast = admission_check(incoming, c_max=30.0, now=0.0, ledger=ledger)
+        exact = admission_check(incoming, qs[:-1], c_max=30.0, now=0.0)
+        assert fast.feasible == exact.feasible
+        assert fast.reasons == exact.reasons
+
+    def test_edf_order_is_stable(self):
+        qs = deadline_spread()
+        ordered = edf_order(qs)
+        assert [q.deadline for q in ordered] == sorted(
+            q.deadline for q in qs)
+        ties = [q.query_id for q in ordered
+                if q.deadline == qs[1].deadline]
+        submitted = [q.query_id for q in qs if q.deadline == qs[1].deadline]
+        assert ties == submitted  # equal deadlines keep submission order
+
+
+class TestSessionIncrementalAdmission:
+    def _submit_all(self, admission):
+        session = Session(policy="llf-dynamic", admission=admission)
+        verdicts = []
+        # Feasible spread, then a hopeless deadline that must be REJECTED
+        # identically (incremental falls back to the exact snapshot path
+        # before rejecting).
+        for q in deadline_spread(4):
+            verdicts.append(session.submit(q).admitted)
+        doomed = make_query("doomed", start=0.0, n=50, rate=10.0)
+        doomed = dataclasses.replace(doomed, deadline=doomed.wind_end + 0.05)
+        res = session.submit(doomed)
+        verdicts.append(res.admitted)
+        return session, verdicts, res
+
+    def test_same_verdicts_and_traces(self):
+        snap, v_snap, r_snap = self._submit_all("snapshot")
+        incr, v_incr, r_incr = self._submit_all("incremental")
+        assert v_snap == v_incr
+        assert v_snap[-1] is False  # the doomed one was rejected by both
+        assert r_snap.report == r_incr.report  # exact-path reasons, verbatim
+        assert _traces_equal(snap.run(), incr.run())
+
+    def test_ledger_tracks_window_lifecycle(self):
+        session = Session(policy="llf-dynamic", admission="incremental")
+        session.submit(RecurringQuerySpec(base=make_query("r", slack=6.0),
+                                          period=30.0, num_windows=2))
+        ledger = session._runtime._ledger
+        assert len(ledger) == 1  # window 0 registered on submit
+        session.run()
+        assert len(ledger) == 0  # closed windows discharged
+
+
+# ---------------------------------------------------------------------------
+# ExecutorPool worker ranks
+# ---------------------------------------------------------------------------
+
+
+class TestPoolRank:
+    def test_tie_break_is_declaration_order_not_lexicographic(self):
+        pool = ExecutorPool(names=("zeta", "alpha"))
+        assert pool.earliest_free() == "zeta"
+        assert pool.earliest_free(exclude=["zeta"]) == "alpha"
+
+    def test_rank_map_matches_names(self):
+        pool = ExecutorPool(workers=4)
+        assert pool._rank == {n: i for i, n in enumerate(pool.worker_names)}
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep (gated; slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestHeapParitySweep:
+    def test_random_workloads_scan_heap_identical(self):
+        pytest.importorskip("hypothesis", reason="hypothesis not installed")
+        from hypothesis import given, settings, strategies as st
+
+        rows = st.lists(
+            st.tuples(
+                st.floats(min_value=0.0, max_value=6.0),   # window start
+                st.integers(min_value=1, max_value=12),    # tuples
+                st.floats(min_value=0.5, max_value=4.0),   # rate
+                st.floats(min_value=1.0, max_value=5.0),   # slack
+                st.integers(min_value=0, max_value=2),     # tier
+                st.floats(min_value=0.0, max_value=4.0),   # submit delay
+                st.one_of(st.none(),
+                          st.floats(min_value=1.0, max_value=8.0)),  # delete
+            ),
+            min_size=1, max_size=6,
+        )
+
+        @settings(max_examples=40, deadline=None)
+        @given(rows=rows, policy_name=st.sampled_from(DYNAMIC_POLICIES))
+        def check(rows, policy_name):
+            def specs():
+                out = []
+                for i, (start, n, rate, slack, tier, delay, dele) in \
+                        enumerate(rows):
+                    q = make_query(f"q{i}", start=start, n=n, rate=rate,
+                                   slack=slack, tier=tier,
+                                   submit=start + delay)
+                    out.append(DynamicQuerySpec(
+                        query=q,
+                        delete_time=None if dele is None else start + dele))
+                return out
+
+            scan = run(get_policy(policy_name), specs(),
+                       SimulatedExecutor(), runtime="scan", max_steps=20_000)
+            heap = run(get_policy(policy_name), specs(),
+                       SimulatedExecutor(), runtime="heap", max_steps=20_000)
+            assert _traces_equal(scan, heap)
+
+        check()
