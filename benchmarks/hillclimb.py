@@ -1,6 +1,17 @@
 """§Perf hillclimb driver (deliverable: perf-iteration log).
 
-Runs the hypothesis->change->measure loop on the three selected cells:
+Two modes:
+
+``--segagg`` — autotune the segagg kernel's launch parameters: greedy
+hillclimb over (block_n, block_g) per (backend, shape-class) plus a
+measured matmul-vs-scatter crossover sweep, persisted to the package's
+``tuned_blocks.json`` (``repro.kernels.segagg.tuning``) where the dispatch
+layer reads them at call time.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --segagg
+
+Default mode runs the hypothesis->change->measure loop on the three
+selected model cells:
 
   A. internvl2_76b x train_4k   — largest dense train cell (most chips-seconds)
   B. mixtral_8x22b x prefill_32k — worst mfu_bound of the runnable cells;
@@ -33,6 +44,7 @@ import dataclasses
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -170,6 +182,135 @@ def iter_S1(arch="mamba2_370m", shape="decode_32k"):
     return {"after": _terms(cost), "coll_counts": cost["coll_counts"]}
 
 
+# -- segagg block autotune (--segagg) ---------------------------------------
+#
+# Hillclimb per (backend, shape-class): start from the compiled-in default
+# blocks, greedily try doubling/halving each block dimension, keep the best
+# measured time, stop at a local optimum.  The interpreter backend is tuned
+# on scaled-down representatives (its cost per element is shape-linear, so
+# relative block ranking carries to the full class) to keep a tune run under
+# a couple of minutes on CPU; the compiled Pallas backend tunes on the full
+# representatives when a TPU/GPU is present.
+
+SEGAGG_REPS = {  # shape-class -> representative (N, G) for tuning
+    "small-narrow": (16_384, 256),
+    "small-wide": (8_192, 4_096),
+    "large-narrow": (131_072, 512),
+    "large-wide": (65_536, 8_192),
+}
+_BLOCK_N_RANGE = (128, 4096)
+_BLOCK_G_RANGE = (128, 1024)   # lane-dim multiples of 128
+
+
+def _time_segagg_blocks(n, g, backend, block_n, block_g, reps=1):
+    import time as _time
+
+    from repro.kernels.segagg.segagg import segagg_pallas
+
+    rng = np.random.default_rng(n + g)
+    Np = -(-n // block_n) * block_n
+    Gp = -(-(g + 1) // block_g) * block_g
+    keys = jnp.asarray(rng.integers(0, g, Np).astype(np.int32))
+    vals = jnp.ones((Np, 128), jnp.float32)
+    out = segagg_pallas(keys, vals, Gp, backend == "interpret",
+                        block_n, block_g, "matmul")
+    jax.block_until_ready(out)   # compile
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        out = segagg_pallas(keys, vals, Gp, backend == "interpret",
+                            block_n, block_g, "matmul")
+    jax.block_until_ready(out)
+    return (_time.perf_counter() - t0) / reps
+
+
+def _hillclimb_blocks(n, g, backend, start, log):
+    best = start
+    best_t = _time_segagg_blocks(n, g, backend, *best)
+    log.append({"blocks": best, "seconds": best_t})
+    improved = True
+    while improved:
+        improved = False
+        bn, bg = best
+        for cand in ((bn * 2, bg), (bn // 2, bg), (bn, bg * 2), (bn, bg // 2)):
+            if not (_BLOCK_N_RANGE[0] <= cand[0] <= _BLOCK_N_RANGE[1]
+                    and _BLOCK_G_RANGE[0] <= cand[1] <= _BLOCK_G_RANGE[1]):
+                continue
+            t = _time_segagg_blocks(n, g, backend, *cand)
+            log.append({"blocks": cand, "seconds": t})
+            if t < best_t * 0.97:   # >3% win: beyond timer noise
+                best, best_t, improved = cand, t, True
+                break
+    return best, best_t
+
+
+def _crossover_sweep(backend, n, g_grid):
+    """Largest G where the one-hot matmul formulation still beats
+    scatter-add, measured on ``backend`` at row count ``n``."""
+    from repro.kernels.segagg.ops import segagg
+
+    rng = np.random.default_rng(7)
+    last_matmul_win, rows = g_grid[0], []
+    for g in g_grid:
+        keys = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+        vals = jnp.ones((n, 1), jnp.float32)
+        times = {}
+        for form in ("matmul", "scatter"):
+            import time as _time
+
+            out = segagg(keys, vals, g, backend=backend, formulation=form)
+            jax.block_until_ready(out)
+            t0 = _time.perf_counter()
+            out = segagg(keys, vals, g, backend=backend, formulation=form)
+            jax.block_until_ready(out)
+            times[form] = _time.perf_counter() - t0
+        rows.append({"g": g, **{f"{k}_s": v for k, v in times.items()}})
+        if times["matmul"] <= times["scatter"]:
+            last_matmul_win = g
+    return last_matmul_win, rows
+
+
+def autotune_segagg() -> None:
+    from repro.kernels.segagg import tuning
+    from repro.kernels.segagg.segagg import BLOCK_G, BLOCK_N
+
+    compiled = "pallas" if jax.default_backend() in ("tpu", "gpu") else None
+    table = {"version": 1, "blocks": {}, "crossover": {}}
+    report = {"blocks": {}, "crossover": {}}
+
+    plans = []
+    for cls, (n, g) in SEGAGG_REPS.items():
+        # interpreter: scale rows down so a CPU tune stays affordable
+        plans.append(("interpret", cls, min(n, 16_384), min(g, 2_048)))
+        if compiled:
+            plans.append((compiled, cls, n, g))
+    for backend, cls, n, g in plans:
+        log = []
+        (bn, bg), best_t = _hillclimb_blocks(n, g, backend, (BLOCK_N, BLOCK_G),
+                                             log)
+        table["blocks"][f"{backend}:{cls}"] = {"block_n": bn, "block_g": bg}
+        report["blocks"][f"{backend}:{cls}"] = {
+            "rep_shape": [n, g], "best": [bn, bg], "seconds": best_t,
+            "trials": log,
+        }
+        emit(f"segagg_tune_{backend}_{cls}", best_t * 1e6,
+             f"blocks ({bn},{bg}) over {len(log)} trials")
+
+    sweeps = [("xla", 65_536, (32, 64, 128, 256, 512, 1024, 2048)),
+              ("interpret", 4_096, (32, 64, 128, 256, 512))]
+    if compiled:
+        sweeps.append((compiled, 65_536, (128, 256, 512, 1024, 2048, 4096)))
+    for backend, n, grid in sweeps:
+        max_g, rows = _crossover_sweep(backend, n, grid)
+        table["crossover"][backend] = {"matmul_max_g": int(max_g)}
+        report["crossover"][backend] = {"n": n, "matmul_max_g": int(max_g),
+                                        "sweep": rows}
+        emit(f"segagg_crossover_{backend}", 0, f"matmul wins up to G={max_g}")
+
+    path = tuning.save(table)
+    write_result("segagg_autotune", report)
+    emit("segagg_tuned_blocks", 0, f"persisted {path}")
+
+
 def main() -> None:
     results = {}
 
@@ -212,4 +353,13 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--segagg", action="store_true",
+                    help="autotune segagg (block_n, block_g) + crossover "
+                         "and persist tuned_blocks.json")
+    if ap.parse_args().segagg:
+        autotune_segagg()
+    else:
+        main()

@@ -6,12 +6,18 @@
   4. execute the plan on-device (segagg partial aggregation, host spill),
   5. final aggregation; verify the result equals a one-shot run.
 
+Execution uses the dispatched segagg kernel (``backend="auto"``: compiled
+Pallas on TPU/GPU, compiled XLA scatter-add on CPU — docs/API.md "Kernel
+backends"), so the calibrated cost model describes the compiled kernel's
+wall clock, not interpreter overhead.
+
     PYTHONPATH=src python examples/deadline_analytics.py
 """
 import numpy as np
 
 from repro.core import Planner, Query, TraceArrival, plan_cost
 from repro.data.tpch import PAPER_QUERIES, StreamScale, stream_files
+from repro.kernels.segagg.ops import resolve_backend
 from repro.serve.analytics import (
     measure_cost_model, run_batched, run_plan,
 )
@@ -25,8 +31,9 @@ for t, orders, lineitem in stream_files(seed=11, num_files=NUM_FILES, sc=SCALE):
     files.append(lineitem if query.stream == "lineitem" else orders)
     times.append(t)
 
-print(f"query {query.query_id}: {query.description}")
-cost_model = measure_cost_model(query, files, SCALE)
+print(f"query {query.query_id}: {query.description} "
+      f"(segagg backend: {resolve_backend()})")
+cost_model = measure_cost_model(query, files, SCALE, use_kernel=True)
 print(f"calibrated cost model: cost(1 file)={cost_model.cost(1)*1e3:.2f} ms, "
       f"cost({NUM_FILES})={cost_model.cost(NUM_FILES)*1e3:.1f} ms")
 
@@ -39,8 +46,8 @@ print(f"deadline {deadline:.2f}s -> plan: {plan.sch_tuples} files per batch "
       f"at t={[round(p, 2) for p in plan.sch_points]} "
       f"(modelled cost {plan_cost(q, plan)*1e3:.1f} ms)")
 
-result, log, agg_s = run_plan(query, files, plan, SCALE)
-oneshot, _, _ = run_batched(query, files, NUM_FILES, SCALE)
+result, log, agg_s = run_plan(query, files, plan, SCALE, use_kernel=True)
+oneshot, _, _ = run_batched(query, files, NUM_FILES, SCALE)  # jnp ref path
 np.testing.assert_allclose(result, oneshot, rtol=1e-5)
 print(f"executed {len(log)} real batches "
       f"({[b.num_records for b in log]} records), final agg {agg_s*1e3:.1f} ms")

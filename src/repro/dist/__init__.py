@@ -19,7 +19,13 @@ from .context import (
     constrain_param,
     mesh_context,
 )
-from .roofline import CollectiveStats, Roofline, parse_collectives
+from .roofline import (
+    CollectiveStats,
+    KernelRooflineManager,
+    MachineSpec,
+    Roofline,
+    parse_collectives,
+)
 from .sharding import (
     batch_shard_extents,
     batch_spec,
@@ -32,6 +38,8 @@ from .sharding import (
 __all__ = [
     "ACT_AXIS_RULES",
     "CollectiveStats",
+    "KernelRooflineManager",
+    "MachineSpec",
     "PARAM_AXIS_RULES",
     "Roofline",
     "active_mesh",

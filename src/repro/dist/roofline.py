@@ -8,6 +8,12 @@ the numerator of the ICI term of the roofline.
 ``Roofline`` records the three per-step time bounds (compute vs HBM vs
 interconnect) under the usual overlap assumption: step time ~= the max of
 the three ("whichever roof you hit").
+
+``KernelRooflineManager`` applies the same model to single-kernel
+micro-benchmarks (the RooflineManager pattern: a machine spec + per-op
+analytic FLOPs/bytes -> the bound and the achieved fraction): used by
+``benchmarks.bench_roofline`` to report how close the dispatched segagg
+backends run to the measured machine roofs.
 """
 from __future__ import annotations
 
@@ -114,4 +120,50 @@ class Roofline:
             "bytes_per_chip": self.bytes_per_chip,
             "collective_bytes_per_chip": self.collective_bytes_per_chip,
             "collective_counts": dict(self.collective_counts),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Peak rates of the machine a kernel micro-bench ran on.  For TPU these
+    are datasheet numbers; for the CPU container they are MEASURED
+    achievable rates (a copy-bandwidth probe and a big-matmul FLOPs probe),
+    so "achieved fraction" compares against what the host demonstrably
+    sustains, not a marketing peak."""
+
+    peak_flops: float    # FLOP/s
+    peak_bw: float       # bytes/s
+    source: str = "measured"
+
+
+class KernelRooflineManager:
+    """Achieved-vs-roofline accounting for single-kernel timings.
+
+    ``info`` rows carry analytic ``flops``/``bytes`` for one call (e.g.
+    ``repro.kernels.segagg.ops.flops_bytes``) plus the measured seconds;
+    ``get_roofline`` returns the two time bounds, the binding roof, and the
+    achieved fraction (bound / measured — 1.0 means running AT the roof).
+    """
+
+    def __init__(self, spec: MachineSpec):
+        self.spec = spec
+
+    def bound_seconds(self, flops: float, bytes_: float) -> float:
+        return max(flops / self.spec.peak_flops, bytes_ / self.spec.peak_bw)
+
+    def get_roofline(self, info: Dict) -> Dict:
+        flops, bytes_ = float(info["flops"]), float(info["bytes"])
+        measured = float(info["seconds"])
+        compute_s = flops / self.spec.peak_flops
+        memory_s = bytes_ / self.spec.peak_bw
+        bound = max(compute_s, memory_s)
+        return {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "bound_s": bound,
+            "dominant": "compute" if compute_s >= memory_s else "memory",
+            "measured_s": measured,
+            "achieved_frac": bound / measured if measured > 0 else 0.0,
+            "achieved_gbytes_s": bytes_ / measured / 1e9 if measured > 0 else 0.0,
+            "achieved_gflops_s": flops / measured / 1e9 if measured > 0 else 0.0,
         }

@@ -1,47 +1,173 @@
-"""Public segagg op: padding, dtype handling, multi-level combine."""
+"""Public segagg op: backend dispatch, padding, dtype handling, multi-level
+combine.
+
+Backend resolution (``backend=``):
+
+* ``"auto"`` (default) — compiled Pallas kernel on TPU/GPU, the jitted XLA
+  scatter-add formulation on CPU.  Every call site gets the fastest
+  compiled path for the platform it runs on.
+* ``"pallas"`` — the compiled Pallas kernel (requires a TPU/GPU backend;
+  raises on CPU, where Pallas can only interpret).
+* ``"xla"`` — jitted XLA formulation: ``zeros.at[keys].add(values)``
+  scatter-add, or a scan-blocked one-hot matmul for narrow G (the measured
+  crossover in ``tuning`` selects per call shape).
+* ``"interpret"`` — the Pallas kernel body run under the Pallas interpreter
+  (the pre-PR-8 default).  Kept for CI parity on CPU: it executes the SAME
+  kernel code the TPU path compiles, just slowly.
+
+The legacy ``interpret: bool`` positional is still accepted (``True`` →
+``backend="interpret"``, ``False`` → ``backend="pallas"``) so pre-dispatch
+callers keep working unchanged.
+
+Both kernel formulations (one-hot matmul vs scatter-add) exist in the
+Pallas and XLA backends; ``tuning.pick_formulation`` selects by the
+measured crossover group count, and ``tuning.tuned_blocks`` supplies
+hillclimb-tuned (block_n, block_g) per (backend, shape-class).
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .segagg import BLOCK_G, BLOCK_N, segagg_pallas
+from . import tuning
+from .segagg import segagg_pallas
+
+BACKENDS = ("auto", "pallas", "xla", "interpret")
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    interpret: Optional[bool] = None) -> str:
+    """Canonical concrete backend for one call.
+
+    ``interpret`` is the legacy knob: when given (not None) it wins, mapping
+    ``True`` → ``"interpret"`` and ``False`` → ``"pallas"``.  ``backend``
+    is then resolved: ``None``/``"auto"`` picks compiled Pallas on TPU/GPU
+    and compiled XLA on CPU; explicit names are validated.
+    """
+    if interpret is not None:
+        if backend not in (None, "auto"):
+            raise ValueError(
+                "pass either the legacy interpret= bool or backend=, not both")
+        backend = "interpret" if interpret else "pallas"
+    if backend is None:
+        backend = "auto"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown segagg backend: {backend!r} (expected one of {BACKENDS})")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "xla"
+    if backend == "pallas" and jax.default_backend() not in ("tpu", "gpu"):
+        raise ValueError(
+            "backend='pallas' compiles the Pallas kernel and needs a TPU/GPU "
+            "jax backend; on CPU use backend='xla' (compiled) or "
+            "backend='interpret' (Pallas interpreter, CI parity path)")
+    return backend
 
 
 def _pad_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def segagg(keys: jax.Array, values: jax.Array, num_groups: int,
-           interpret: bool = True) -> jax.Array:
-    """GROUP-BY partial aggregation: (N,) keys + (N, V) values ->
-    (num_groups, V) f32 sums.  Pads rows/groups/width to kernel blocks;
-    padded rows are routed to a sacrificial group and sliced away.
+# -- XLA formulations ------------------------------------------------------
 
-    ``interpret=True`` executes the kernel body with the Pallas interpreter
-    (CPU container); on TPU pass interpret=False.
+@functools.partial(jax.jit, static_argnums=(2,))
+def _segagg_xla_scatter(keys: jax.Array, values: jax.Array,
+                        num_groups: int) -> jax.Array:
+    """Scatter-add: O(N·V) work regardless of G.  Out-of-range keys (the
+    contract is keys in [0, num_groups)) are dropped, matching the kernel
+    path's sacrificial padding group."""
+    return jnp.zeros((num_groups, values.shape[1]), jnp.float32).at[keys].add(
+        values.astype(jnp.float32), mode="drop")
+
+
+_XLA_MM_BLOCK_N = 16_384  # rows per scan step: bounds the one-hot to ~G*64KB
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _segagg_xla_matmul(keys: jax.Array, values: jax.Array,
+                       num_groups: int) -> jax.Array:
+    """Scan-blocked one-hot matmul: same formulation the Pallas kernel runs
+    on the MXU, expressed as XLA ops.  O(N·G·V) FLOPs — only selected for
+    narrow G (below the measured crossover)."""
+    N, V = values.shape
+    block = min(_XLA_MM_BLOCK_N, _pad_to(N, 8))
+    Np = _pad_to(N, block)
+    # Padding rows carry key == num_groups: outside every gid, so their
+    # one-hot row is all zero.
+    keys_p = jnp.full((Np,), num_groups, jnp.int32).at[:N].set(keys)
+    vals_p = jnp.zeros((Np, V), jnp.float32).at[:N].set(
+        values.astype(jnp.float32))
+    gids = jnp.arange(num_groups, dtype=jnp.int32)
+
+    def body(acc, kv):
+        k, v = kv
+        onehot = (k[:, None] == gids[None, :]).astype(jnp.float32)
+        return acc + onehot.T @ v, None
+
+    out, _ = jax.lax.scan(
+        body, jnp.zeros((num_groups, V), jnp.float32),
+        (keys_p.reshape(-1, block), vals_p.reshape(-1, block, V)))
+    return out
+
+
+# -- dispatch --------------------------------------------------------------
+
+def segagg(keys: jax.Array, values: jax.Array, num_groups: int,
+           interpret: Optional[bool] = None, *,
+           backend: Optional[str] = None,
+           formulation: Optional[str] = None) -> jax.Array:
+    """GROUP-BY partial aggregation: (N,) keys + (N, V) values ->
+    (num_groups, V) f32 sums.
+
+    ``backend=`` selects the execution path (see module docstring);
+    ``formulation=`` overrides the matmul/scatter crossover ("matmul" |
+    "scatter", default measured per shape).  The legacy positional
+    ``interpret`` bool still works: True → the interpreter path, False →
+    compiled Pallas.
     """
-    N = keys.shape[0]
+    be = resolve_backend(backend, interpret)
+    if num_groups <= 0:
+        raise ValueError(f"num_groups must be positive, got {num_groups}")
     if values.ndim == 1:
         values = values[:, None]
+    N = keys.shape[0]
     V = values.shape[1]
-    Np = _pad_to(N, BLOCK_N)
-    Gp = _pad_to(num_groups + 1, BLOCK_G)   # +1 sacrificial group for padding
+    if N == 0:
+        return jnp.zeros((num_groups, V), jnp.float32)
+    if be == "xla":
+        form = tuning.pick_formulation(be, N, num_groups, V, formulation)
+        keys = keys.astype(jnp.int32)
+        if form == "scatter":
+            return _segagg_xla_scatter(keys, values, num_groups)
+        return _segagg_xla_matmul(keys, values, num_groups)
+    # Pallas paths (compiled or interpreted): pad rows/groups/width to the
+    # tuned kernel blocks; padded rows are routed to a sacrificial group
+    # and sliced away.  The formulation choice sees the PADDED width — that
+    # is what the scatter accumulator keeps resident on-chip.
+    block_n, block_g = tuning.tuned_blocks(be, N, num_groups)
+    Np = _pad_to(N, block_n)
+    Gp = _pad_to(num_groups + 1, block_g)   # +1 sacrificial group for padding
     Vp = _pad_to(V, 128)
+    form = tuning.pick_formulation(be, N, num_groups, Vp, formulation)
     keys_p = jnp.full((Np,), num_groups, jnp.int32).at[:N].set(
         keys.astype(jnp.int32))
     vals_p = jnp.zeros((Np, Vp), values.dtype).at[:N, :V].set(values)
-    out = segagg_pallas(keys_p, vals_p, Gp, interpret)
+    out = segagg_pallas(keys_p, vals_p, Gp, be == "interpret",
+                        block_n, block_g, form)
     return out[:num_groups, :V]
 
 
 def group_count(keys: jax.Array, num_groups: int,
-                interpret: bool = True) -> jax.Array:
+                interpret: Optional[bool] = None, *,
+                backend: Optional[str] = None) -> jax.Array:
     """COUNT(*) GROUP BY — values = ones."""
     ones = jnp.ones((keys.shape[0], 1), jnp.float32)
-    return segagg(keys, ones, num_groups, interpret)[:, 0]
+    return segagg(keys, ones, num_groups, interpret, backend=backend)[:, 0]
 
 
 def combine(partials: jax.Array) -> jax.Array:
@@ -49,10 +175,24 @@ def combine(partials: jax.Array) -> jax.Array:
     return partials.sum(axis=0)
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def pane_composite_groups(num_panes: int, num_groups: int) -> int:
+    """Composite segment count for the pane x group key space, guarded
+    against int32 overflow: pane_segagg keys are ``pane * num_groups +
+    group`` in int32, so the product must stay addressable."""
+    total = num_panes * num_groups  # Python ints: no silent wraparound
+    if total > _INT32_MAX:
+        raise ValueError(
+            f"pane_segagg composite key space num_panes*num_groups = "
+            f"{num_panes}*{num_groups} = {total} exceeds int32 "
+            f"({_INT32_MAX}); split the pane run into "
+            f"<= {_INT32_MAX // max(num_groups, 1)} panes per scan")
+    return total
+
+
 def pane_segagg(keys: jax.Array, values: jax.Array, pane_ids: jax.Array,
                 num_panes: int, num_groups: int,
-                interpret: bool = True) -> jax.Array:
+                interpret: Optional[bool] = None, *,
+                backend: Optional[str] = None) -> jax.Array:
     """Pane-partial aggregation for shared execution (repro.core.panes):
     one scan over (N,) keys + (N, V) values with per-row pane assignments
     ``pane_ids`` -> (num_panes, num_groups, V) f32 per-pane group sums.
@@ -61,12 +201,13 @@ def pane_segagg(keys: jax.Array, values: jax.Array, pane_ids: jax.Array,
     ``pane * num_groups + group`` — the pane axis is just more segments, so
     one kernel pass produces every pane's partial at once, ready to be
     cached in a ``PaneStore`` and fanned out to subscribed windows with
-    ``merge_panes``.
+    ``merge_panes``.  ``backend=`` dispatches exactly like ``segagg``.
     """
     if values.ndim == 1:
         values = values[:, None]
+    total = pane_composite_groups(num_panes, num_groups)
     composite = pane_ids.astype(jnp.int32) * num_groups + keys.astype(jnp.int32)
-    flat = segagg(composite, values, num_panes * num_groups, interpret)
+    flat = segagg(composite, values, total, interpret, backend=backend)
     return flat.reshape(num_panes, num_groups, values.shape[1])
 
 
@@ -75,3 +216,28 @@ def merge_panes(pane_partials: jax.Array) -> jax.Array:
     (P, G, V) -> (G, V).  The merge side of "one scan + k merges" — same
     combine as the final aggregation, over panes instead of batches."""
     return pane_partials.sum(axis=0)
+
+
+def flops_bytes(n: int, num_groups: int, v: int, formulation: str,
+                backend: str = "xla") -> Tuple[float, float]:
+    """Analytic (FLOPs, HBM bytes) of one segagg call — the numerators of
+    the roofline terms (benchmarks/bench_roofline.py).  The Pallas paths
+    pad rows/groups/width to kernel blocks and that padded work really
+    runs, so their counts use padded extents; the XLA paths only pad rows
+    for the matmul scan.  Matmul counts the one-hot contraction; scatter
+    one multiply-accumulate per row element.  Bytes: keys + values read,
+    (G, V) f32 partial written."""
+    if backend in ("pallas", "interpret"):
+        vp = _pad_to(v, 128)
+        bn, bg = tuning.tuned_blocks(backend, n, num_groups)
+        np_, gp = _pad_to(n, bn), _pad_to(num_groups + 1, bg)
+    else:
+        vp, gp = v, num_groups
+        np_ = _pad_to(n, min(_XLA_MM_BLOCK_N, _pad_to(n, 8))) \
+            if formulation == "matmul" else n
+    if formulation == "matmul":
+        flops = 2.0 * np_ * gp * vp
+    else:
+        flops = 2.0 * np_ * vp
+    bytes_ = 4.0 * np_ + 4.0 * np_ * vp + 4.0 * gp * vp
+    return flops, bytes_

@@ -1,17 +1,28 @@
 """Pallas TPU kernel: blocked GROUP-BY partial aggregation (the paper's
 query-executor hot spot — CQ1..CQ4 / TPC-H COUNT/SUM GROUP BY).
 
-TPU adaptation (DESIGN.md §2): instead of a hash table (the CPU/Spark
-formulation — pointer chasing, no TPU analogue), aggregation is a blocked
-ONE-HOT MATMUL on the MXU:
+Two formulations of the same segment-sum, selected per call shape by
+``ops.segagg`` (see ``tuning.crossover``):
+
+MATMUL (DESIGN.md §2): instead of a hash table (the CPU/Spark formulation —
+pointer chasing, no TPU analogue), aggregation is a blocked ONE-HOT MATMUL
+on the MXU:
 
     partial[g, v] = sum_i  [keys_i == g] * values[i, v]
 
 Grid: (num_group_blocks, num_row_blocks).  Each instance builds the
-(BLOCK_N x BLOCK_G) one-hot membership matrix in VMEM from an iota compare
-(never in HBM) and contracts it with the (BLOCK_N x V) value block on the
-MXU, accumulating into the (BLOCK_G x V) output block across the row-block
-grid dimension (the sequential minor axis on TPU).
+(block_n x block_g) one-hot membership matrix in VMEM from an iota compare
+(never in HBM) and contracts it with the (block_n x V) value block on the
+MXU, accumulating into the (block_g x V) output block across the row-block
+grid dimension (the sequential minor axis on TPU).  Work is O(N·G·V) MXU
+FLOPs — cheap for narrow G, quadratic waste for wide G.
+
+SCATTER-ADD: the classic formulation — one sequential pass over the row
+block doing ``out[key] += value`` into the full (G, V) accumulator held
+on-chip.  Work is O(N·V), independent of G, so it wins once the one-hot's
+O(N·G) FLOPs dominate; the price is a serial row loop (VPU, no MXU) and a
+resident (G, V) accumulator (must fit VMEM on real hardware — ``ops``
+checks before selecting it).
 
 Batches of rows become independent partial aggregates; the paper's "final
 aggregation" is then a trivial add over partials (`combine`), whose cost
@@ -25,24 +36,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_N = 512    # rows per block
-BLOCK_G = 256    # groups per block (lane-dim multiple of 128)
+BLOCK_N = 512    # default rows per block
+BLOCK_G = 256    # default groups per block (lane-dim multiple of 128)
 # value width is padded to the 128-lane MXU boundary by ops.segagg
 
+# VMEM budget for the scatter variant's resident (G, V) accumulator
+# (~16 MB/core on TPU; leave headroom for the row block + loop state).
+SCATTER_VMEM_BYTES = 8 * 2**20
 
-def _segagg_kernel(keys_ref, values_ref, out_ref):
+
+def _segagg_matmul_kernel(keys_ref, values_ref, out_ref, *, block_g: int):
     gi = pl.program_id(0)
     ni = pl.program_id(1)
 
-    keys = keys_ref[...]                     # (BLOCK_N,) int32
-    vals = values_ref[...]                   # (BLOCK_N, V)
+    keys = keys_ref[...]                     # (block_n,) int32
+    vals = values_ref[...]                   # (block_n, V)
 
-    g0 = gi * BLOCK_G
-    # (BLOCK_N, BLOCK_G) one-hot membership, built in VMEM.
-    gids = g0 + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_N, BLOCK_G), 1)
+    g0 = gi * block_g
+    # (block_n, block_g) one-hot membership, built in VMEM.
+    gids = g0 + jax.lax.broadcasted_iota(
+        jnp.int32, (keys.shape[0], block_g), 1)
     onehot = (keys[:, None] == gids).astype(vals.dtype)
 
-    # MXU contraction: (BLOCK_G, BLOCK_N) @ (BLOCK_N, V) -> (BLOCK_G, V)
+    # MXU contraction: (block_g, block_n) @ (block_n, V) -> (block_g, V)
     partial = jax.lax.dot_general(
         onehot, vals,
         dimension_numbers=(((0,), (0,)), ((), ())),
@@ -56,23 +72,58 @@ def _segagg_kernel(keys_ref, values_ref, out_ref):
     out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
+def _segagg_scatter_kernel(keys_ref, values_ref, out_ref):
+    ni = pl.program_id(0)
+
+    @pl.when(ni == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]                     # (block_n,) int32
+    vals = values_ref[...].astype(jnp.float32)
+
+    def body(i, _):
+        # out[key_i] += value_i — dynamic single-row accumulate.
+        out_ref[pl.ds(keys[i], 1), :] += vals[i][None, :]
+        return 0
+
+    jax.lax.fori_loop(0, keys.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
 def segagg_pallas(keys: jax.Array, values: jax.Array, num_groups: int,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool = True, block_n: int = BLOCK_N,
+                  block_g: int = BLOCK_G,
+                  formulation: str = "matmul") -> jax.Array:
     """keys: (N,) int32 in [0, num_groups); values: (N, V) float.
-    Returns (num_groups, V) f32 partial aggregate.  N, V, num_groups must be
-    pre-padded to block multiples (ops.segagg handles padding)."""
+    Returns (num_groups, V) f32 partial aggregate.  N must be a block_n
+    multiple; for the matmul formulation num_groups must be a block_g
+    multiple (ops.segagg handles padding).  ``formulation`` selects the
+    one-hot MXU matmul vs the sequential scatter-add variant."""
     N, V = values.shape
-    assert N % BLOCK_N == 0 and num_groups % BLOCK_G == 0, (N, num_groups)
-    grid = (num_groups // BLOCK_G, N // BLOCK_N)
+    assert N % block_n == 0, (N, block_n)
+    if formulation == "scatter":
+        return pl.pallas_call(
+            _segagg_scatter_kernel,
+            grid=(N // block_n,),
+            in_specs=[
+                pl.BlockSpec((block_n,), lambda n: (n,)),
+                pl.BlockSpec((block_n, V), lambda n: (n, 0)),
+            ],
+            out_specs=pl.BlockSpec((num_groups, V), lambda n: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((num_groups, V), jnp.float32),
+            interpret=interpret,
+        )(keys, values)
+    assert num_groups % block_g == 0, (num_groups, block_g)
+    grid = (num_groups // block_g, N // block_n)
     return pl.pallas_call(
-        _segagg_kernel,
+        functools.partial(_segagg_matmul_kernel, block_g=block_g),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((BLOCK_N,), lambda g, n: (n,)),
-            pl.BlockSpec((BLOCK_N, V), lambda g, n: (n, 0)),
+            pl.BlockSpec((block_n,), lambda g, n: (n,)),
+            pl.BlockSpec((block_n, V), lambda g, n: (n, 0)),
         ],
-        out_specs=pl.BlockSpec((BLOCK_G, V), lambda g, n: (g, 0)),
+        out_specs=pl.BlockSpec((block_g, V), lambda g, n: (g, 0)),
         out_shape=jax.ShapeDtypeStruct((num_groups, V), jnp.float32),
         interpret=interpret,
     )(keys, values)

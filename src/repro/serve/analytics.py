@@ -76,14 +76,21 @@ def _segagg_ref_jit(keys, values, num_groups: int):
 
 
 class AnalyticsExecutor:
-    """Executes one AnalyticsQuery in intermittent batches."""
+    """Executes one AnalyticsQuery in intermittent batches.
+
+    ``backend=`` selects the segagg execution path (``"auto"`` → compiled
+    kernel for the platform; ``"interpret"`` → the Pallas interpreter, the
+    pre-dispatch behaviour) — see ``repro.kernels.segagg.ops``.  Only
+    consulted with ``use_kernel=True``; the default path is the jnp
+    reference."""
 
     def __init__(self, query: AnalyticsQuery, scale: StreamScale,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, backend: Optional[str] = None):
         self.query = query
         self.scale = scale
         self.num_groups = query.num_groups(scale)
         self.use_kernel = use_kernel
+        self.backend = backend
         # Partials keyed by slot (tuple offset when driven by the runtime
         # loop): re-queued stragglers overwrite instead of double-counting.
         self.partials: Dict[int, np.ndarray] = {}
@@ -91,7 +98,8 @@ class AnalyticsExecutor:
         if use_kernel:
             from ..kernels.segagg.ops import segagg
 
-            self._agg = lambda k, v: segagg(k, v, self.num_groups, True)
+            self._agg = lambda k, v: segagg(k, v, self.num_groups,
+                                            backend=backend)
         else:
             self._agg = lambda k, v: _segagg_ref_jit(k, v, self.num_groups)
 
@@ -182,10 +190,11 @@ class AnalyticsRuntimeExecutor(BaseExecutor):
         jobs: Dict[str, Tuple[AnalyticsQuery, Sequence[Dict[str, np.ndarray]]]],
         scale: StreamScale,
         use_kernel: bool = False,
+        backend: Optional[str] = None,
     ):
         super().__init__()
         self._jobs = {
-            qid: (AnalyticsExecutor(aq, scale, use_kernel), files)
+            qid: (AnalyticsExecutor(aq, scale, use_kernel, backend), files)
             for qid, (aq, files) in jobs.items()
         }
         self.results: Dict[str, np.ndarray] = {}
@@ -259,6 +268,7 @@ class SharedAnalyticsExecutor(BaseExecutor):
         scale: StreamScale,
         book,  # repro.core.panes.SharedBook (shared with the runtime loop)
         use_kernel: bool = False,
+        backend: Optional[str] = None,
     ):
         super().__init__()
         self.aquery = query
@@ -266,6 +276,7 @@ class SharedAnalyticsExecutor(BaseExecutor):
         self.num_groups = query.num_groups(scale)
         self.book = book
         self.use_kernel = use_kernel
+        self.backend = backend
         # query_id -> {local offset: partial}: straggler-idempotent, like
         # AnalyticsExecutor.partials.
         self._acc: Dict[str, Dict[int, np.ndarray]] = {}
@@ -280,7 +291,7 @@ class SharedAnalyticsExecutor(BaseExecutor):
         vals = np.asarray(self.aquery.value_fn(records), np.float32)
         if self.use_kernel:
             part = segagg(jnp.asarray(keys), jnp.asarray(vals),
-                          self.num_groups, True)
+                          self.num_groups, backend=self.backend)
         else:
             part = _segagg_ref_jit(jnp.asarray(keys), jnp.asarray(vals),
                                    self.num_groups)
@@ -305,9 +316,13 @@ class SharedAnalyticsExecutor(BaseExecutor):
         pane_of_file = np.repeat(
             np.arange(count, dtype=np.int32), width)[: len(chunk)]
         pane_ids = np.repeat(pane_of_file, sizes).astype(np.int32)
+        # The pane pass always runs through the dispatched kernel (there is
+        # no jnp ref fast path for pane partials): pre-PR-8 this hardcoded
+        # the interpreter, so every shared scan paid interpreter overhead —
+        # now the compiled backend does the physical work being measured.
         parts = np.asarray(pane_segagg(
             jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(pane_ids),
-            count, self.num_groups, True,
+            count, self.num_groups, backend=self.backend,
         ))
         for j in range(count):
             self.book.store.deposit(stream, first_pane + j, by=by,
@@ -398,11 +413,12 @@ def _plan_query(query_id: str, num_files: int) -> Query:
 
 def run_plan(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
              plan: Schedule, scale: StreamScale,
-             use_kernel: bool = False) -> Tuple[np.ndarray, List[BatchResult], float]:
+             use_kernel: bool = False,
+             backend: Optional[str] = None) -> Tuple[np.ndarray, List[BatchResult], float]:
     """Execute a scheduler plan (batch sizes in FILES) against real files
     through the shared runtime loop (strict mode: replay the plan verbatim)."""
     rex = AnalyticsRuntimeExecutor({query.query_id: (query, files)}, scale,
-                                   use_kernel)
+                                   use_kernel, backend)
     q = _plan_query(query.query_id, len(files))
     execute_plan(q, plan, rex, strict=True)
     return (
@@ -414,10 +430,11 @@ def run_plan(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
 
 def run_batched(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
                 batch_files: int, scale: StreamScale,
-                use_kernel: bool = False) -> Tuple[np.ndarray, float, int]:
+                use_kernel: bool = False,
+                backend: Optional[str] = None) -> Tuple[np.ndarray, float, int]:
     """Process in fixed-size batches of ``batch_files``; returns
     (result, total_seconds incl. final agg, num_batches)."""
-    ex = AnalyticsExecutor(query, scale, use_kernel)
+    ex = AnalyticsExecutor(query, scale, use_kernel, backend)
     for i in range(0, len(files), batch_files):
         ex.process_batch(concat_files(files[i:i + batch_files]))
     result, agg_s = ex.finalize()
@@ -437,6 +454,7 @@ def run_session(
     policy: str = "llf-dynamic",
     calibrate: bool = True,
     use_kernel: bool = False,
+    backend: Optional[str] = None,
     forecast=None,
     latency_target: Optional[float] = None,
     **session_kw,
@@ -499,7 +517,7 @@ def run_session(
         rspec.window_query(w).query_id: (query, list(files))
         for w, files in enumerate(windows)
     }
-    executor = AnalyticsRuntimeExecutor(jobs, scale, use_kernel)
+    executor = AnalyticsRuntimeExecutor(jobs, scale, use_kernel, backend)
     session = Session(policy=policy, executor=executor, calibrate=calibrate,
                       forecast=forecast, **session_kw)
     session.submit(rspec)
@@ -524,6 +542,7 @@ def run_shared_jobs(
     pane_tuples: Optional[int] = None,
     deadline_frac: float = 3.0,
     use_kernel: bool = False,
+    backend: Optional[str] = None,
     **policy_params,
 ):
     """Overlapping GROUP-BY windows over ONE real stream, end to end.
@@ -568,7 +587,7 @@ def run_shared_jobs(
     else:
         specs, book = qs, SharedBook(pane_tuples=pane_tuples)
     executor = SharedAnalyticsExecutor(query, files, scale, book,
-                                       use_kernel=use_kernel)
+                                       use_kernel=use_kernel, backend=backend)
     trace = run_loop(pol, specs, executor,
                      sharing=book if share else None)
     if share:
@@ -580,16 +599,20 @@ def measure_cost_model(query: AnalyticsQuery,
                        files: Sequence[Dict[str, np.ndarray]],
                        scale: StreamScale,
                        batch_sizes: Sequence[int] = (1, 4, 16, 64),
-                       use_kernel: bool = False) -> CostModelBase:
+                       use_kernel: bool = False,
+                       backend: Optional[str] = None) -> CostModelBase:
     """§6.2 calibration: measure execution time vs batch size, fit the
-    piecewise-linear model (file units)."""
+    piecewise-linear model (file units).  ``backend=`` picks the segagg
+    path being calibrated (with ``use_kernel=True``) — cost models fitted
+    here describe THAT backend's wall clock, so calibrate against the same
+    backend the session will execute on."""
     samples = []
     agg_samples = [(1, 0.0)]
     for bs in batch_sizes:
         bs = min(bs, len(files))
         # warmup: first call at each padded shape compiles
-        run_batched(query, files[:bs], bs, scale, use_kernel)
-        ex = AnalyticsExecutor(query, scale, use_kernel)
+        run_batched(query, files[:bs], bs, scale, use_kernel, backend)
+        ex = AnalyticsExecutor(query, scale, use_kernel, backend)
         reps = max(3, min(8, len(files) // bs))
         for i in range(reps):
             lo = (i * bs) % max(len(files) - bs, 1)
@@ -599,7 +622,7 @@ def measure_cost_model(query: AnalyticsQuery,
     # final-agg cost vs #batches
     for nb in (2, 8, 32):
         per = max(len(files) // nb, 1)
-        ex = AnalyticsExecutor(query, scale, use_kernel)
+        ex = AnalyticsExecutor(query, scale, use_kernel, backend)
         for i in range(nb):
             ex.process_batch(concat_files(files[i * per: (i + 1) * per] or
                                           files[:1]))

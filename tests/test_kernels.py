@@ -10,7 +10,15 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rglru.ops import rglru as rglru_kernel
 from repro.kernels.rglru.ref import rglru_rec_ref
 from repro.kernels.rglru.rglru import rglru_pallas
-from repro.kernels.segagg.ops import group_count, merge_panes, pane_segagg, segagg
+from repro.kernels.segagg import tuning
+from repro.kernels.segagg.ops import (
+    group_count,
+    merge_panes,
+    pane_composite_groups,
+    pane_segagg,
+    resolve_backend,
+    segagg,
+)
 from repro.kernels.segagg.ref import combine_ref, pane_segagg_ref, segagg_ref
 from repro.kernels.ssd.ops import ssd as ssd_kernel
 from repro.kernels.ssd.ref import ssd_rec_ref
@@ -19,6 +27,11 @@ from repro.kernels.ssd.ref import ssd_rec_ref
 # fast CI selection (-m "not slow"); the full-suite job still runs them.
 pytestmark = pytest.mark.slow
 
+# Compiled-path backends available on this host: the XLA formulations are
+# always compilable; the compiled Pallas kernel needs a TPU/GPU.
+SEGAGG_BACKENDS = ["xla", "interpret"]
+if jax.default_backend() in ("tpu", "gpu"):
+    SEGAGG_BACKENDS.append("pallas")
 
 
 def _tol(dtype):
@@ -36,7 +49,7 @@ class TestSegAgg:
         key = jax.random.PRNGKey(n + groups)
         keys = jax.random.randint(key, (n,), 0, groups)
         vals = jax.random.normal(key, (n, width)).astype(dtype)
-        got = segagg(keys, vals, groups)
+        got = segagg(keys, vals, groups)   # default dispatch (backend=auto)
         want = segagg_ref(keys, vals, groups)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    **_tol(dtype))
@@ -88,6 +101,166 @@ class TestSegAgg:
         direct = segagg(keys[500:1500], vals[500:1500], 31)
         np.testing.assert_allclose(np.asarray(window), np.asarray(direct),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestSegAggBackends:
+    """Compiled-vs-interpret-vs-ref parity across the dispatch layer."""
+
+    # Shapes chosen to cross every padding seam: non-block-multiple N, G
+    # and V, G below/above the default crossover, tiny and skinny extremes.
+    SHAPES = [
+        (100, 7, 1), (1000, 37, 3), (513, 300, 1), (64, 1000, 1),
+        (2048, 1, 2), (1531, 129, 5),
+    ]
+
+    @pytest.mark.parametrize("backend", SEGAGG_BACKENDS)
+    @pytest.mark.parametrize("n,groups,width", SHAPES)
+    def test_float_sums_allclose_to_ref(self, backend, n, groups, width):
+        key = jax.random.PRNGKey(n * 31 + groups)
+        keys = jax.random.randint(key, (n,), 0, groups)
+        vals = jax.random.normal(key, (n, width))
+        got = segagg(keys, vals, groups, backend=backend)
+        want = segagg_ref(keys, vals, groups)
+        assert got.shape == (groups, width)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("backend", SEGAGG_BACKENDS)
+    @pytest.mark.parametrize("n,groups", [(1000, 37), (513, 300), (4096, 64)])
+    def test_counts_exact(self, backend, n, groups):
+        """COUNT(*) is integer-valued: every backend must be bit-exact
+        against the oracle (f32 adds of 1.0 are exact below 2^24)."""
+        keys = jax.random.randint(jax.random.PRNGKey(n), (n,), 0, groups)
+        got = group_count(keys, groups, backend=backend)
+        want = segagg_ref(keys, jnp.ones((n, 1)), groups)[:, 0]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert float(got.sum()) == float(n)
+
+    @pytest.mark.parametrize("backend", SEGAGG_BACKENDS)
+    def test_empty_input(self, backend):
+        got = segagg(jnp.zeros((0,), jnp.int32), jnp.zeros((0, 3)), 11,
+                     backend=backend)
+        assert got.shape == (11, 3)
+        assert float(jnp.abs(got).sum()) == 0.0
+
+    @pytest.mark.parametrize("backend", SEGAGG_BACKENDS)
+    def test_sacrificial_padding_group(self, backend):
+        """Padded rows are routed to group num_groups and sliced away: with
+        every real key in the LAST group and N far off block multiples,
+        nothing may leak into other groups or get lost."""
+        n, groups = 777, 13
+        keys = jnp.full((n,), groups - 1, jnp.int32)
+        vals = jnp.ones((n, 1), jnp.float32)
+        got = np.asarray(segagg(keys, vals, groups, backend=backend))
+        assert got[groups - 1, 0] == float(n)
+        assert got.sum() == float(n)
+
+    @pytest.mark.parametrize("backend", SEGAGG_BACKENDS)
+    @pytest.mark.parametrize("formulation", ["matmul", "scatter"])
+    def test_formulation_override_parity(self, backend, formulation):
+        key = jax.random.PRNGKey(5)
+        keys = jax.random.randint(key, (900,), 0, 41)
+        vals = jax.random.normal(key, (900, 2))
+        got = segagg(keys, vals, 41, backend=backend,
+                     formulation=formulation)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(segagg_ref(keys, vals, 41)),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_crossover_boundary(self):
+        """The matmul/scatter crossover must be seamless: G at the measured
+        boundary and one past it give identical results, and the selected
+        formulations actually differ across it."""
+        max_g = tuning.matmul_max_g("xla")
+        for g in (max_g, max_g + 1):
+            keys = jax.random.randint(jax.random.PRNGKey(g), (2048,), 0, g)
+            vals = jax.random.normal(jax.random.PRNGKey(g + 1), (2048, 2))
+            got = segagg(keys, vals, g, backend="xla")
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(segagg_ref(keys, vals, g)),
+                                       rtol=2e-5, atol=2e-5)
+        assert tuning.pick_formulation("xla", 2048, max_g, 2) == "matmul"
+        assert tuning.pick_formulation("xla", 2048, max_g + 1, 2) == "scatter"
+
+    @pytest.mark.parametrize("backend", SEGAGG_BACKENDS)
+    def test_pane_segagg_backend_parity(self, backend):
+        key = jax.random.PRNGKey(9)
+        keys = jax.random.randint(key, (700,), 0, 23)
+        pane_ids = jnp.sort(jax.random.randint(key, (700,), 0, 6))
+        vals = jax.random.normal(key, (700, 2))
+        got = pane_segagg(keys, vals, pane_ids, 6, 23, backend=backend)
+        want = pane_segagg_ref(keys, vals, pane_ids, 6, 23)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_legacy_interpret_flag_still_dispatches(self):
+        """Pre-PR-8 call sites pass interpret=True positionally."""
+        keys = jax.random.randint(jax.random.PRNGKey(1), (300,), 0, 17)
+        vals = jnp.ones((300, 1))
+        np.testing.assert_allclose(
+            np.asarray(segagg(keys, vals, 17, True)),
+            np.asarray(segagg_ref(keys, vals, 17)), rtol=1e-6)
+
+
+class TestSegAggDispatch:
+    def test_auto_resolves_to_compiled(self):
+        be = resolve_backend()
+        if jax.default_backend() in ("tpu", "gpu"):
+            assert be == "pallas"
+        else:
+            assert be == "xla"
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown segagg backend"):
+            resolve_backend("mkl")
+
+    def test_both_knobs_rejected(self):
+        with pytest.raises(ValueError, match="not both"):
+            resolve_backend("xla", interpret=True)
+
+    @pytest.mark.skipif(jax.default_backend() in ("tpu", "gpu"),
+                        reason="pallas IS compilable here")
+    def test_pallas_on_cpu_rejected(self):
+        with pytest.raises(ValueError, match="needs a TPU/GPU"):
+            resolve_backend("pallas")
+        with pytest.raises(ValueError, match="needs a TPU/GPU"):
+            segagg(jnp.zeros((8,), jnp.int32), jnp.ones((8, 1)), 4,
+                   interpret=False)
+
+    def test_bad_formulation_rejected(self):
+        with pytest.raises(ValueError, match="unknown segagg formulation"):
+            segagg(jnp.zeros((8,), jnp.int32), jnp.ones((8, 1)), 4,
+                   backend="xla", formulation="hash")
+
+    def test_shape_class_buckets(self):
+        assert tuning.shape_class(1_000, 64) == "small-narrow"
+        assert tuning.shape_class(1_000, 50_000) == "small-wide"
+        assert tuning.shape_class(500_000, 64) == "large-narrow"
+        assert tuning.shape_class(500_000, 50_000) == "large-wide"
+
+    def test_tuned_blocks_fallback(self):
+        # unknown backend key -> compiled-in defaults, never a KeyError
+        from repro.kernels.segagg.segagg import BLOCK_G, BLOCK_N
+
+        assert tuning.tuned_blocks("no-such-backend", 100, 10) == \
+            (BLOCK_N, BLOCK_G)
+
+
+class TestPaneSegAggOverflow:
+    def test_composite_within_int32_ok(self):
+        assert pane_composite_groups(2, 3) == 6
+        assert pane_composite_groups(1, 2**31 - 1) == 2**31 - 1
+
+    def test_composite_overflow_raises(self):
+        with pytest.raises(ValueError, match="exceeds int32"):
+            pane_composite_groups(2**16, 2**15)
+
+    def test_pane_segagg_overflow_raises_before_compute(self):
+        keys = jnp.zeros((4,), jnp.int32)
+        vals = jnp.ones((4, 1))
+        pane_ids = jnp.zeros((4,), jnp.int32)
+        with pytest.raises(ValueError, match="exceeds int32"):
+            pane_segagg(keys, vals, pane_ids, 2**20, 2**20, backend="xla")
 
 
 class TestFlashAttention:
