@@ -75,6 +75,7 @@ from .arrivals import (
     TraceArrival,
     UniformWindowArrival,
     jittered_trace,
+    partition_stream,
 )
 from .cost_model import (
     CalibratingCostModel,
@@ -145,6 +146,17 @@ from .schedulability import (
     min_post_window_work,
     post_window_condition,
     work_demand_condition,
+)
+from .tenancy import (
+    TenancyConfig,
+    TenantQuota,
+    demand_by_tenant,
+    fair_shares,
+    tenant_quota_condition,
+    tenant_summary,
+    zipf_counts,
+    zipf_shares,
+    zipf_traffic,
 )
 from .simulator import (
     MemoryModel,
@@ -242,6 +254,8 @@ __all__ = [
     "SimulatedExecutor",
     "SpecHistory",
     "Strategy",
+    "TenancyConfig",
+    "TenantQuota",
     "ThinnedArrival",
     "SublinearCostModel",
     "TraceArrival",
@@ -252,7 +266,9 @@ __all__ = [
     "batched_cost_curve",
     "brute_force_optimal",
     "check_schedulability",
+    "demand_by_tenant",
     "edf_order",
+    "fair_shares",
     "execute_plan",
     "execute_single",
     "feasible_assignment",
@@ -272,6 +288,7 @@ __all__ = [
     "one_shot_trace",
     "overload_check",
     "pane_width",
+    "partition_stream",
     "plan_cost",
     "plan_shedding",
     "post_window_condition",
@@ -287,8 +304,13 @@ __all__ = [
     "schedule_without_agg_cost",
     "split_window_id",
     "staggered_deadlines",
+    "tenant_quota_condition",
+    "tenant_summary",
     "tiered_work_demand_condition",
     "validate_schedule",
     "work_demand_condition",
     "window_query_id",
+    "zipf_counts",
+    "zipf_shares",
+    "zipf_traffic",
 ]

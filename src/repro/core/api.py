@@ -347,7 +347,11 @@ class Session:
     and the scaling knobs (``runtime="heap"`` for the O(log n) event-heap
     decision core, ``admission="incremental"`` for the maintained
     ``DemandLedger`` admission fast path — docs/API.md "Scaling the
-    decision core").
+    decision core").  ``tenancy=`` (a ``repro.core.tenancy.TenancyConfig``
+    or a ``{tenant: TenantQuota}`` dict) turns on multi-tenant arbitration:
+    per-tenant rate/capacity quotas at admission, weighted max-min fairness
+    ACROSS tenants when overload shedding kicks in, and ``set_quota`` for
+    runtime quota changes (docs/API.md "Multi-tenancy").
     """
 
     def __init__(self, policy: Union[str, SchedulingPolicy] = "llf-dynamic",
@@ -425,6 +429,20 @@ class Session:
         """Remove a live query mid-run: active windows are deleted at the
         next between-batch instant (§4.2), future windows never open."""
         self._runtime.withdraw(base_id)
+
+    def set_quota(self, tenant: str, quota=None):
+        """Set, replace or (``quota=None``) remove one tenant's
+        ``TenantQuota`` at run time, then rebalance so a tightened quota
+        immediately sheds that tenant's own live windows against its new
+        share.  Returns the applied ``SheddingPlan`` (None when nothing
+        had to move)."""
+        return self._runtime.set_quota(tenant, quota)
+
+    def rebalance(self):
+        """Mid-run overload response: shed the minimum from the lowest
+        tiers (fair shares first under ``tenancy=``) when the live set has
+        drifted infeasible.  Returns the applied ``SheddingPlan`` or None."""
+        return self._runtime.rebalance()
 
     def run_until(self, horizon: float, max_steps: int = 1_000_000):
         """Advance the continuous timeline to ``horizon``, processing every

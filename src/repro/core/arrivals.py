@@ -274,6 +274,36 @@ class ThinnedArrival(ArrivalModel):
             self.keep)
 
 
+def partition_stream(
+    base: ArrivalModel,
+    counts: List[int],
+    seed: Optional[int] = None,
+) -> List[ThinnedArrival]:
+    """Split one shared stream across principals: partition ``i`` sees a
+    systematic uniform subsample of ``base`` with ``counts[i]`` tuples.
+
+    The multi-tenant traffic generator (``repro.core.tenancy.zipf_counts``
+    supplies Zipf-skewed ``counts``) models many tenants filtering the
+    SAME eventstream: each tenant's query reads its own thinned view, all
+    views anchored to the base window (a ``ThinnedArrival`` always keeps
+    the last base tuple, so every partition closes with the stream).
+    Partitions are views, not a disjoint cover — two tenants may keep the
+    same base tuple, exactly like two filters matching the same record.
+    ``seed`` decorrelates the sampling phases (partition ``i`` draws phase
+    ``seed + i``); ``None`` keeps every phase 0.
+    """
+    total = base.num_tuples_total
+    out: List[ThinnedArrival] = []
+    for i, keep in enumerate(counts):
+        if not 0 <= keep <= total:
+            raise ValueError(
+                f"counts[{i}] = {keep} outside [0, {total}]")
+        out.append(ThinnedArrival(
+            base=base, keep=keep,
+            seed=None if seed is None else seed + i))
+    return out
+
+
 def jittered_trace(
     base: ArrivalModel,
     seed: int,

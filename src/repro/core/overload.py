@@ -46,7 +46,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .arrivals import ThinnedArrival
 from .schedulability import FeasibilityReport, admission_check, edf_order
-from .types import Query
+from .tenancy import (TenancyConfig, demand_by_tenant,
+                      tenant_quota_condition)
+from .types import EPS, Query
 
 __all__ = [
     "OverloadConfig",
@@ -344,6 +346,79 @@ def _tighten(queries: Sequence[Query], now: Optional[float],
     return out
 
 
+def _tenant_shed_groups(
+    queries: Sequence[Query],
+    tenancy: TenancyConfig,
+    now: Optional[float],
+) -> List[List[str]]:
+    """Shed-group order under tenancy: fairness ABOVE tiers.
+
+    Capacity over the workload's deadline horizon is divided across
+    tenants by weight: tenant ``t``'s entitlement is ``w_t / sum(w) *
+    capacity``, further capped by its ``capacity`` quota.  Tenants OVER
+    their entitlement drain first, in order of normalized utilization
+    (demand / entitlement, highest first) — the weighted max-min
+    draining order: bursters consuming multiples of their slice shed
+    against their own excess before anyone else is touched.  If pinning
+    every over-entitlement tenant at its cap still leaves the set
+    infeasible, the residual comes from the within-entitlement tenants
+    in ascending WEIGHT order (utilization descending as tie-break):
+    the weight is precisely the knob a tenant's SLO buys, so a weight-2
+    victim outlasts every weight-1 neighbour even when the victim's own
+    utilization is momentarily higher.  That is the no-starvation
+    property the tenancy test suite pins: a well-behaved tenant is
+    never degraded while an over-entitlement tenant still has shed
+    budget left, and never before a lower-weight peer.  Tiers order
+    groups WITHIN each tenant exactly as the single-principal planner
+    does (lowest tier first).
+
+    The ratio is taken against the UNCAPPED entitlement, not the
+    demand-capped ``fair_shares`` allocation — under the latter every
+    satisfied tenant's ratio degenerates to exactly 1.0 and the order
+    between them would collapse to the name tie-break.
+
+    Deterministic: final ties break on the tenant name (tenantless
+    queries sort last among equals).
+    """
+    demand = demand_by_tenant(queries)
+    anchor = now if now is not None else min(
+        q.arrival.input_time(1) for q in queries)
+    capacity = max(max(q.deadline for q in queries) - anchor, 0.0)
+    weights = {t: tenancy.weight(t) for t in demand}
+    total_w = sum(weights.values())
+
+    def entitlement(t) -> float:
+        slice_ = capacity * weights[t] / total_w if total_w > EPS else 0.0
+        quota = tenancy.quota(t)
+        if quota is not None and quota.capacity is not None:
+            slice_ = min(slice_, quota.capacity * capacity)
+        return slice_
+
+    def ratio(t) -> float:
+        d = demand[t]
+        if d <= EPS:
+            return 0.0
+        s = entitlement(t)
+        return d / s if s > EPS else math.inf
+
+    def sort_key(t):
+        name = "" if t is None else str(t)
+        if ratio(t) > 1.0 + 1e-9:
+            # Over entitlement: most-over first.
+            return (0, -ratio(t), 0.0, name)
+        # Within entitlement: lowest weight first, then highest
+        # utilization — weight buys protection, not just share.
+        return (1, weights[t], -ratio(t), name)
+
+    order = sorted(demand, key=sort_key)
+    groups: List[List[str]] = []
+    for t in order:
+        mine = [q for q in queries if _sheddable(q) and q.tenant == t]
+        for tier in sorted({q.tier for q in mine}, reverse=True):
+            groups.append([q.query_id for q in mine if q.tier == tier])
+    return groups
+
+
 def plan_shedding(
     queries: Sequence[Query],
     c_max: float = float("inf"),
@@ -351,22 +426,41 @@ def plan_shedding(
     config: OverloadConfig = OverloadConfig(),
     processed: Optional[Dict[str, int]] = None,
     prior_shed: Optional[Dict[str, float]] = None,
+    tenancy: Optional[TenancyConfig] = None,
 ) -> SheddingPlan:
     """Minimum load shed restoring the necessary schedulability conditions.
 
     ``queries`` is the would-be live set (remaining-work snapshots for
     in-flight queries; ``processed`` marks tuples of each that already ran
     and are exempt from shedding).  Sheddable queries (``Query.shed=True``,
-    not pane-shared) are degraded LOWEST tier first (largest ``tier``
-    number): a drop fraction is binary-searched per tier — each member
-    sheds ``min(tier level, its own cap)``, where a query's cap is the
-    largest fraction keeping its cumulative shed within ``config.max_shed``
-    and its reported error bound within ``config.max_error_bound``.  Only
-    if a tier's maximum allowed shed still leaves the set infeasible does
-    the next tier up join the search.  Within the deciding tier the level
-    is minimized to the search resolution (0.1%), so the plan is the
-    smallest shed — tier-lexicographically — that the (headroom-tightened)
-    necessary conditions accept.
+    not pane-shared) are degraded group by group — one group per tier,
+    lowest tier (largest ``tier`` number) first: a drop fraction is
+    binary-searched per group — each member sheds ``min(group level, its
+    own cap)``, where a query's cap is the largest fraction keeping its
+    cumulative shed within ``config.max_shed`` and its reported error
+    bound within ``config.max_error_bound``.  Only if a group's maximum
+    allowed shed still leaves the set infeasible does the next group join
+    the search.  Within the deciding group the level is minimized to the
+    search resolution (0.1%), so the plan is the smallest shed — group-
+    lexicographically — that the (headroom-tightened) necessary conditions
+    accept.
+
+    ``tenancy`` switches on multi-tenant arbitration (inert while every
+    query has ``tenant=None`` — the group order, every probe and every
+    report stay byte-identical to the single-principal planner).  With
+    tenants present, feasibility additionally requires
+    ``tenant_quota_condition`` and groups are ordered tenant-major by
+    ``_tenant_shed_groups``: over-fair-share tenants shed first (against
+    their OWN quota), tiers order groups within each tenant, and a tenant
+    within its share is touched only after every over-share tenant is
+    exhausted.
+
+    Error bounds are stamped PER QUERY, from each query's own kept sample
+    (``effective``/``realize``), never from the pooled totals of its
+    group: two queries at the same group level report different bounds
+    when their kept counts differ, and a small tenant population can
+    never borrow a large pool's optimistic bound.  The tenancy regression
+    tests pin this invariant.
 
     The returned plan's ``feasible`` is False when even shedding every
     allowed query to its cap cannot restore the conditions.
@@ -380,22 +474,58 @@ def plan_shedding(
     """
     processed = processed or {}
     prior_shed = prior_shed or {}
-    base_report = overload_check(queries, c_max=c_max, now=now)
+    tenant_mode = tenancy is not None and any(
+        q.tenant is not None for q in queries)
+
+    def feasibility(qs: Sequence[Query]) -> FeasibilityReport:
+        rep = overload_check(qs, c_max=c_max, now=now)
+        if not tenant_mode:
+            return rep
+        tq = tenant_quota_condition(qs, tenancy, now)
+        return FeasibilityReport(
+            feasible=rep.feasible and tq.feasible,
+            reasons=(*rep.reasons, *tq.reasons),
+        )
+
+    base_report = feasibility(queries)
     if base_report.feasible:
         return SheddingPlan({}, {}, True, base_report)
 
-    tiers = sorted({q.tier for q in queries if _sheddable(q)}, reverse=True)
-    if not tiers:
+    if tenant_mode:
+        groups = _tenant_shed_groups(queries, tenancy, now)
+    else:
+        tiers = sorted({q.tier for q in queries if _sheddable(q)},
+                       reverse=True)
+        groups = [[q.query_id for q in queries
+                   if _sheddable(q) and q.tier == t] for t in tiers]
+    groups = [g for g in groups if g]
+    if not groups:
         return SheddingPlan({}, {}, False, base_report)
+    group_of = {qid: gi for gi, g in enumerate(groups) for qid in g}
 
-    def effective(q: Query, cum_local: float, kept_local: int):
-        """(cumulative fraction vs the TRUE original, error bound) after a
-        local shed of ``cum_local`` on top of any prior rounds.  The bound
+    def effective(q: Query, kept_local: int):
+        """(cumulative fraction vs the TRUE original, error bound) of a
+        candidate shed leaving ``kept_local`` of ``q``'s current tuples.
+
+        The prior degradation is the LARGER of ``prior_shed``'s entry and
+        what the query's own arrival chain still shows (a remaining-work
+        snapshot may retain the thin chain or erase it); the cumulative
+        fraction is then one minus the surviving ratio — prior kept times
+        this round's local keep ratio.  Composing ``apply_shed``'s
+        returned fraction with ``prior_shed`` instead would double-count
+        every round whose snapshot retained its chain (``apply_shed``
+        already reports CUMULATIVE fractions for those), collapsing the
+        query's remaining cap and recruiting higher-priority groups for
+        load the degraded query could still absorb itself.  The bound
         uses the locally-kept count, which under-counts a prior round's
         processed prefix — conservative (never reports a bound smaller
         than the realized one)."""
-        pf = prior_shed.get(q.query_id, 0.0)
-        cum = pf + (1.0 - pf) * cum_local
+        total = q.num_tuples_total
+        orig = original_total(q)
+        pf_visible = 1.0 - total / orig if orig > 0 else 0.0
+        pf = max(prior_shed.get(q.query_id, 0.0), pf_visible)
+        ratio = kept_local / total if total > 0 else 1.0
+        cum = max(1.0 - (1.0 - pf) * ratio, 0.0)
         return cum, shed_error_bound(cum, kept_local)
 
     def query_cap(q: Query) -> float:
@@ -407,8 +537,8 @@ def plan_shedding(
         while lo < hi:
             mid = (lo + hi + 1) // 2
             f = mid / _SHED_RESOLUTION
-            thin, cum_l, _ = apply_shed(q, f, processed=pr)
-            cum, bound = effective(q, cum_l, thin.num_tuples_total)
+            thin, _, _ = apply_shed(q, f, processed=pr)
+            cum, bound = effective(q, thin.num_tuples_total)
             if (cum <= config.max_shed + 1e-9
                     and bound <= config.max_error_bound + 1e-9):
                 lo = mid
@@ -419,50 +549,51 @@ def plan_shedding(
     caps = {q.query_id: query_cap(q) for q in queries if _sheddable(q)}
 
     def realize(levels: Dict[int, float]):
-        """Apply per-tier levels (clipped to each member's own cap);
-        returns (shed set, fractions, bounds)."""
+        """Apply per-group levels (clipped to each member's own cap);
+        returns (shed set, fractions, bounds).  The bound stamped for a
+        query comes from ITS OWN cumulative fraction and kept count —
+        never from pooled group totals (see the docstring invariant)."""
         out: List[Query] = []
         fr: Dict[str, float] = {}
         eb: Dict[str, float] = {}
         for q in queries:
-            f = levels.get(q.tier, 0.0) if _sheddable(q) else 0.0
+            f = levels.get(group_of.get(q.query_id, -1), 0.0)
             f = min(f, caps.get(q.query_id, 0.0))
             if f <= 0:
                 out.append(q)
                 continue
-            thin, cum_l, _ = apply_shed(
+            thin, _, _ = apply_shed(
                 q, f, processed=processed.get(q.query_id, 0))
             out.append(thin)
-            if cum_l > 0:
-                cum, bound = effective(q, cum_l, thin.num_tuples_total)
+            if thin is not q:
+                cum, bound = effective(q, thin.num_tuples_total)
                 fr[q.query_id] = f
                 eb[q.query_id] = bound
         return out, fr, eb
 
     def check_levels(levels: Dict[int, float]):
         out, fr, eb = realize(levels)
-        rep = overload_check(_tighten(out, now, config.headroom),
-                             c_max=c_max, now=now)
+        rep = feasibility(_tighten(out, now, config.headroom))
         return rep.feasible, fr, eb, rep
 
     levels: Dict[int, float] = {}
-    for i, tier in enumerate(tiers):
+    for gi in range(len(groups)):
         probe = dict(levels)
-        probe[tier] = 1.0  # every member clipped to its own cap
+        probe[gi] = 1.0  # every member clipped to its own cap
         feas, _, _, rep = check_levels(probe)
         if not feas:
-            if i < len(tiers) - 1:
-                # Even this tier's maximum shed is not enough: pin it and
-                # recruit the next tier up.
-                levels[tier] = 1.0
+            if gi < len(groups) - 1:
+                # Even this group's maximum shed is not enough: pin it and
+                # recruit the next group.
+                levels[gi] = 1.0
                 continue
             return SheddingPlan({}, {}, False, rep)
-        # Binary-search the minimal level for THIS tier (lower tiers stay
-        # pinned): feasibility is monotone in the level.
+        # Binary-search the minimal level for THIS group (earlier groups
+        # stay pinned): feasibility is monotone in the level.
         lo, hi = 0, _SHED_RESOLUTION
         while lo < hi:
             mid = (lo + hi) // 2
-            probe[tier] = mid / _SHED_RESOLUTION
+            probe[gi] = mid / _SHED_RESOLUTION
             feas, _, _, _ = check_levels(probe)
             if feas:
                 hi = mid
@@ -470,7 +601,7 @@ def plan_shedding(
                 lo = mid + 1
         # ``lo`` always lands on a level that tested feasible (``hi`` only
         # ever holds feasible levels, and the loop exits with lo == hi).
-        probe[tier] = lo / _SHED_RESOLUTION
+        probe[gi] = lo / _SHED_RESOLUTION
         _, fr, eb, rep = check_levels(probe)
         return SheddingPlan(fr, eb, True, rep)
     return SheddingPlan({}, {}, False, base_report)

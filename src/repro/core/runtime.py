@@ -673,6 +673,7 @@ def _record_outcome(
         latency_target=query.latency_target,
         target_time=(query.target_time
                      if query.latency_target is not None else None),
+        tenant=query.tenant,
     )
     trace.outcomes.append(out)
     return out

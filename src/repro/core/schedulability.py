@@ -295,6 +295,41 @@ class DemandLedger:
             reasons=tuple(r for p in parts for r in p.reasons),
         )
 
+    # -- tenancy ---------------------------------------------------------
+    def merged_queries(self, extra: Sequence[Query] = ()) -> List[Query]:
+        """Live ``Query`` rows with ``extra`` merged into deadline position
+        — the same stable merge as ``_merged`` (an extra row lands AFTER
+        every equal-deadline base row), but materialized as query objects
+        for checks that need more than the cached numeric columns."""
+        if not extra:
+            return list(self._queries)
+        out = list(self._queries)
+        deadlines = list(self._deadlines)
+        for q in edf_order(extra):
+            i = bisect.bisect_right(deadlines, q.deadline)
+            out.insert(i, q)
+            deadlines.insert(i, q.deadline)
+        return out
+
+    def tenant_check(self, extra: Sequence[Query] = (),
+                     now: Optional[float] = None,
+                     config: Optional["TenancyConfig"] = None,  # noqa: F821
+                     ) -> FeasibilityReport:
+        """Per-tenant quota conditions over the maintained rows
+        (+ ``extra``): the incremental twin of calling
+        ``repro.core.tenancy.tenant_quota_condition`` on the equivalent
+        snapshot list.  Verdicts AND reason strings are byte-identical to
+        the snapshot path over the same rows — the condition re-sorts each
+        tenant's rows with the stable EDF helper, so the merge order above
+        collapses to the stable sort of ``[*base, *extra]`` (the tenancy
+        regression tests pin this).  ``config=None`` is trivially
+        feasible (no quotas to violate)."""
+        if config is None:
+            return FeasibilityReport(feasible=True, reasons=())
+        from .tenancy import tenant_quota_condition
+
+        return tenant_quota_condition(self.merged_queries(extra), config, now)
+
 
 def post_window_condition(
     queries: Sequence[Query], now: Optional[float] = None

@@ -90,6 +90,7 @@ from .runtime import (
     _core_class,
 )
 from .schedulability import DemandLedger, FeasibilityReport, admission_check
+from .tenancy import TenancyConfig, TenantQuota, tenant_quota_condition
 from .types import (
     EPS,
     BatchExecution,
@@ -99,6 +100,7 @@ from .types import (
     RecurringQuerySpec,
     SessionTrace,
     split_window_id,
+    window_query_id,
 )
 
 # Remaining-arrival snapshots for the admission pre-flight are exact up to
@@ -293,6 +295,7 @@ class SessionRuntime:
         forecast: Union[bool, ForecastConfig, None] = None,
         runtime: Optional[str] = None,
         admission: str = "snapshot",
+        tenancy: Union[TenancyConfig, Dict[str, TenantQuota], None] = None,
         **policy_params,
     ):
         if isinstance(policy, str):
@@ -337,6 +340,15 @@ class SessionRuntime:
             self.forecast: Optional[ForecastConfig] = forecast
         else:
             self.forecast = ForecastConfig() if forecast else None
+        # Multi-tenancy (repro.core.tenancy): None == disabled — every
+        # query belongs to the anonymous pool and all traces stay
+        # byte-identical to the single-tenant session.  Enabled, admission
+        # enforces per-tenant rate/capacity quotas and overload shedding
+        # arbitrates ACROSS tenants by weighted max-min fairness before the
+        # strict tiers order work WITHIN each tenant's share.
+        if isinstance(tenancy, dict):
+            tenancy = TenancyConfig(quotas=dict(tenancy))
+        self.tenancy: Optional[TenancyConfig] = tenancy
         # Pane sharing (repro.core.panes): ONE book for the whole session, so
         # pane partials cached in window w carry over to every later window
         # that overlaps it (slide < range), and across queries on the stream.
@@ -400,6 +412,10 @@ class SessionRuntime:
             str, Tuple[_LiveSpec, ArrivalForecast]] = {}
         self._proactive: Dict[str, _ProactiveShed] = {}
         self._prewarmed: set = set()
+        # cascaded rollups: window ids currently deferred on an upstream
+        # spec (their panes pre-subscribed so the upstream's partials
+        # survive until the downstream window materializes)
+        self._cascade_wait: set = set()
         if start_time is not None:
             executor.reset(start_time)
 
@@ -506,6 +522,11 @@ class SessionRuntime:
                 f"{base_id!r} already used in this session (live or "
                 "withdrawn); pick a fresh base id per incarnation"
             )
+        if rspec.base.upstream == base_id:
+            raise ValueError(
+                f"{base_id!r} names itself as upstream; a cascaded rollup "
+                "must consume a DIFFERENT live spec's output"
+            )
         calibrator = None
         if self.calibrate:
             if isinstance(rspec.base.cost_model, CalibratingCostModel):
@@ -573,10 +594,24 @@ class SessionRuntime:
                 self.overload is None
                 or tiered_work_demand_condition(
                     [*self._ledger.queries, first], now).feasible
+            ) and (
+                self.tenancy is None
+                or self._ledger.tenant_check(
+                    [first], now=now, config=self.tenancy).feasible
             )
         if not fast_ok:
             snaps = self._active_snapshot()
             report = admission_check([first], snaps, c_max=c_max, now=now)
+            if self.tenancy is not None:
+                # Per-tenant quota pre-flight rides on top of the generic
+                # schedulability conditions (same merged ordering as the
+                # ledger's ``tenant_check`` so reasons stay byte-equal).
+                quota = tenant_quota_condition(
+                    [*snaps, first], self.tenancy, now)
+                report = FeasibilityReport(
+                    feasible=report.feasible and quota.feasible,
+                    reasons=(*report.reasons, *quota.reasons),
+                )
         decision, shed_fraction, error_bound, proposal = "admit", 0.0, 0.0, None
         if self.admission_control and not force and not fast_ok:
             if self.overload is not None:
@@ -718,7 +753,8 @@ class SessionRuntime:
         rspec = live.rspec
         base_id = rspec.base_id
         plan = plan_shedding([first, *snaps], c_max=c_max, now=now,
-                             config=cfg, prior_shed=self._prior_shed())
+                             config=cfg, prior_shed=self._prior_shed(),
+                             tenancy=self.tenancy)
         if plan.feasible and not plan.fractions:
             return "admit", plan.report, 0.0, 0.0, None
         # ``plan.report`` explains every rejection below: it is the FAILING
@@ -833,15 +869,39 @@ class SessionRuntime:
         now = self.now
         snaps = self._active_snapshot()
         c_max = self.c_max if self.c_max is not None else float("inf")
-        if overload_check(snaps, c_max=c_max, now=now).feasible:
+        ok = overload_check(snaps, c_max=c_max, now=now).feasible
+        if ok and self.tenancy is not None:
+            ok = tenant_quota_condition(snaps, self.tenancy, now).feasible
+        if ok:
             return None
         plan = plan_shedding(snaps, c_max=c_max, now=now,
                              config=self.overload,
-                             prior_shed=self._prior_shed())
+                             prior_shed=self._prior_shed(),
+                             tenancy=self.tenancy)
         if plan.feasible:
             for qid, f in plan.fractions.items():
                 self._shed_active(qid, f, now)
         return plan
+
+    def set_quota(self, tenant: str,
+                  quota: Optional[TenantQuota] = None):
+        """Set, replace or (``quota=None``) remove one tenant's quota at
+        run time, then ``rebalance()`` so a tightened quota immediately
+        sheds that tenant's own live windows against its new share.  Logged
+        as a ``"quota"`` session event; enables tenancy on first use if the
+        session was built without ``tenancy=``.  Returns the applied
+        ``SheddingPlan`` (None when nothing had to move)."""
+        if self.tenancy is None:
+            self.tenancy = TenancyConfig()
+        if quota is None:
+            self.tenancy.quotas.pop(tenant, None)
+            detail = "removed"
+        else:
+            self.tenancy.quotas[tenant] = quota
+            detail = (f"weight={quota.weight:.6g};"
+                      f"capacity={quota.capacity};rate={quota.rate}")
+        self.trace.log("quota", self.now, tenant, detail)
+        return self.rebalance()
 
     @property
     def _shed_seed(self) -> Optional[int]:
@@ -948,11 +1008,14 @@ class SessionRuntime:
         snaps = self._active_snapshot()
         probe = [fq, *snaps]
         if (overload_check(probe, c_max=c_max, now=now).feasible
-                and tiered_work_demand_condition(probe, now).feasible):
+                and tiered_work_demand_condition(probe, now).feasible
+                and (self.tenancy is None or tenant_quota_condition(
+                    probe, self.tenancy, now).feasible)):
             return q, None  # the forecast burst fits — nothing to do
         plan = plan_shedding(probe, c_max=c_max, now=now,
                              config=self.overload,
-                             prior_shed=self._prior_shed())
+                             prior_shed=self._prior_shed(),
+                             tenancy=self.tenancy)
         if not plan.feasible:
             return q, None  # reactive path will deal with the real burst
         f = plan.fractions.get(fq.query_id, 0.0)
@@ -1201,6 +1264,7 @@ class SessionRuntime:
                     num_batches=0,
                     tuples_processed=0,
                     num_tuples_total=q.num_tuples_total,
+                    tenant=q.tenant,
                 ))
                 self._drain_outcome_events()
                 continue
@@ -1234,10 +1298,63 @@ class SessionRuntime:
     # ------------------------------------------------------------------
     # Window roll-over
     # ------------------------------------------------------------------
+    def _cascade_ready(self, live: _LiveSpec, w: int) -> bool:
+        """A cascaded window (its spec names ``upstream=``) only opens once
+        every upstream window its span covers has CLOSED — the rollup
+        consumes the upstream's per-window outputs, so opening earlier
+        would read a partial cascade.  Upstream windows are covered when
+        their window end falls within the downstream window's span.  An
+        unknown or withdrawn upstream ungates (nothing left to wait for)."""
+        up = live.rspec.base.upstream
+        if up is None:
+            return True
+        uplive = self._live.get(up)
+        if uplive is None or uplive.withdrawn:
+            return True
+        ur = uplive.rspec
+        q_end = live.rspec.base.wind_end + w * live.rspec.period
+        kmax = math.floor((q_end - ur.base.wind_end) / ur.period + EPS)
+        if ur.num_windows is not None:
+            kmax = min(kmax, ur.num_windows - 1)
+        if kmax < 0:
+            return True
+        if uplive.next_window <= kmax:
+            return False  # a covered upstream window has not even opened
+        for rt in uplive.runtimes:
+            uw = split_window_id(rt.q.query_id)[1] or 0
+            if uw <= kmax and not (rt.completed or rt.deleted):
+                return False
+        for uq in uplive.pending_static:
+            if (split_window_id(uq.query_id)[1] or 0) <= kmax:
+                return False
+        return True
+
+    def _cascade_defer(self, live: _LiveSpec, w: int) -> None:
+        """First deferral of a cascaded window: pre-subscribe its panes so
+        the upstream windows' reference-counted partials survive in the
+        ``PaneStore`` until the rollup materializes, and log one
+        ``"cascade_defer"`` event.  Subsequent deferrals of the same window
+        are silent — ``_replenish`` retries every heartbeat."""
+        qid = (live.rspec.base_id if live.rspec.num_windows == 1
+               else window_query_id(live.rspec.base_id, w))
+        if qid in self._cascade_wait:
+            return
+        self._cascade_wait.add(qid)
+        if (self.book is not None and live.pane_ok
+                and live.rspec.base.stream is not None
+                and live.rspec.base.stream in self.book.widths):
+            q = live.rspec.window_query(w, cost_model=live.cost_model())
+            self.book.register(q)
+        self.trace.log("cascade_defer", self.now, qid,
+                       f"upstream={live.rspec.base.upstream}")
+
     def _instantiate_next(self, live: _LiveSpec) -> None:
         if live.exhausted:
             return
         w = live.next_window
+        if not self._cascade_ready(live, w):
+            self._cascade_defer(live, w)
+            return
         q = live.rspec.window_query(w, cost_model=live.cost_model())
         truth = live.window_truth(w)
         # Arrival history is collected for EVERY window (the fuel of
@@ -1277,7 +1394,9 @@ class SessionRuntime:
                     (q.query_id, q.cost_model))
                 self._resync_sharers(q.stream)
         live.next_window += 1
-        self.trace.log("window_open", q.submit_time, q.query_id)
+        self.trace.log("window_open", q.submit_time, q.query_id,
+                       "" if q.upstream is None
+                       else f"upstream={q.upstream}")
         if self._ledger is not None:
             # One ledger row per open window, in deadline position; the
             # post-window work is computed lazily at the first check.
@@ -1322,7 +1441,10 @@ class SessionRuntime:
                     and live.rspec.window_start(live.next_window)
                     <= horizon + EPS
                 ):
+                    before = live.next_window
                     self._instantiate_next(live)
+                    if live.next_window == before:
+                        break  # cascade-deferred: retry next heartbeat
 
     # ------------------------------------------------------------------
     # Calibration feedback

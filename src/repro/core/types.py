@@ -109,6 +109,24 @@ class Query:
     the target was met.  With the default ``None`` the target instant IS
     the deadline and every ordering — and trace — is byte-identical to the
     targetless runtime.
+
+    ``tenant`` names the principal the query belongs to
+    (``repro.core.tenancy``): sessions configured with a ``TenancyConfig``
+    arbitrate capacity ACROSS tenants with weighted max-min fairness and
+    per-tenant quotas, sitting *above* the strict tiers — fairness decides
+    how much capacity each tenant gets, tiers order queries within the
+    tenant's share.  ``tenant=None`` (the default) keeps the query in the
+    single-principal world of the paper: no tenancy machinery runs and
+    every trace is byte-identical to the tenantless runtime.
+
+    ``upstream`` declares a CASCADE dependency for session windows: the
+    base id of another recurring spec in the same session whose windows
+    produce this query's input (bronze→silver→gold rollups).  A session
+    defers instantiating a window of this query until every upstream
+    window covering its span has closed, and — when both name the same
+    ``stream`` with pane sharing enabled — pre-subscribes the window's
+    panes so the upstream windows' partials survive in the PaneStore for
+    reuse.  Pure metadata outside sessions.
     """
 
     query_id: str
@@ -125,6 +143,8 @@ class Query:
     tier: int = 0  # strict priority tier (overload control; 0 = highest)
     shed: bool = True  # may this answer degrade to a sampled estimate?
     latency_target: Optional[float] = None  # desired answer latency past wind_end
+    tenant: Optional[str] = None  # owning principal (multi-tenant arbitration)
+    upstream: Optional[str] = None  # cascade: base id of the producing spec
 
     def __post_init__(self) -> None:
         if self.wind_end < self.wind_start:
@@ -328,6 +348,10 @@ class QueryOutcome:
     the absolute instant the answer was wanted by and ``met_target`` the
     verdict against it.  Both stay ``None`` — and ``met_target`` reports
     the plain deadline verdict — for queries without a target.
+
+    ``tenant`` carries the owning principal through to the trace so
+    per-tenant SLO rollups (``repro.core.tenancy.tenant_summary``) need no
+    side table; ``None`` for single-principal queries.
     """
 
     query_id: str
@@ -341,6 +365,7 @@ class QueryOutcome:
     error_bound: float = 0.0
     latency_target: Optional[float] = None
     target_time: Optional[float] = None
+    tenant: Optional[str] = None
 
     @property
     def met_deadline(self) -> bool:
@@ -543,6 +568,11 @@ class RecurringQuerySpec:
     the window range makes consecutive windows overlap, which is exactly
     what pane sharing (``repro.core.panes``) exploits: pane partials
     computed for window ``w`` carry over to window ``w+1``.
+
+    ``tenant`` is a convenience mirror of ``base.tenant`` (multi-tenant
+    arbitration, ``repro.core.tenancy``): setting either stamps both, so
+    every instantiated window carries the owning principal.  Conflicting
+    non-None values raise.
     """
 
     base: Query
@@ -555,8 +585,17 @@ class RecurringQuerySpec:
     delete_time: Optional[float] = None
     total_known: bool = True
     slide_tuples: Optional[int] = None
+    tenant: Optional[str] = None
 
     def __post_init__(self) -> None:
+        if self.tenant is None:
+            self.tenant = self.base.tenant
+        elif self.base.tenant is None:
+            self.base = dataclasses.replace(self.base, tenant=self.tenant)
+        elif self.base.tenant != self.tenant:
+            raise ValueError(
+                f"{self.base.query_id}: spec tenant {self.tenant!r} conflicts "
+                f"with base query tenant {self.base.tenant!r}")
         if self.period <= 0:
             raise ValueError(f"period must be positive, got {self.period}")
         if self.num_windows is not None and self.num_windows < 1:
@@ -612,6 +651,8 @@ class RecurringQuerySpec:
             tier=self.base.tier,
             shed=self.base.shed,
             latency_target=self.base.latency_target,
+            tenant=self.base.tenant,
+            upstream=self.base.upstream,
         )
 
     def window_truth(self, window: int) -> Optional["ArrivalModel"]:  # noqa: F821
@@ -627,7 +668,8 @@ class SessionEvent:
     kind: str   # "submit" | "reject" | "withdraw" | "window_open" |
     #             "window_close" | "recalibrate" | "shed" | "renegotiate" |
     #             "pane_incompatible" | "window_infeasible" |
-    #             "forecast_shed" | "forecast_refund" | "pane_prewarm"
+    #             "forecast_shed" | "forecast_refund" | "pane_prewarm" |
+    #             "quota" | "cascade_defer"
     time: float
     query_id: str = ""
     detail: str = ""

@@ -457,6 +457,7 @@ def run_session(
     backend: Optional[str] = None,
     forecast=None,
     latency_target: Optional[float] = None,
+    tenant: Optional[str] = None,
     **session_kw,
 ) -> Tuple[Dict[int, np.ndarray], SessionTrace]:
     """Session mode over the REAL segagg backend: the paper's continuously
@@ -477,7 +478,11 @@ def run_session(
     tuple arrivals in simulation; ``latency_target=`` stamps a Cameo-style
     per-query latency target (seconds past window close) onto the
     recurring query, tightening its urgency in the dynamic policies and
-    reported per window via ``QueryOutcome.met_target``.
+    reported per window via ``QueryOutcome.met_target``; ``tenant=``
+    stamps the tenant identity onto the recurring query so per-window
+    outcomes carry it (``QueryOutcome.tenant``) and a ``tenancy=``
+    session config (forwarded via ``**session_kw``) can enforce the
+    tenant's quota.
 
     Returns ({window_index: combined_aggregate}, SessionTrace).
     """
@@ -503,6 +508,7 @@ def run_session(
         cost_model=cost_model,
         arrival=base_arr,
         latency_target=latency_target,
+        tenant=tenant,
     )
     truths = [TraceArrival(timestamps=tuple(ts)) for ts in window_timestamps]
     rspec = RecurringQuerySpec(

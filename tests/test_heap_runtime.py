@@ -24,11 +24,13 @@ from repro.core import (
     HeapLoopCore,
     InfeasibleDeadline,
     LinearCostModel,
+    OverloadConfig,
     Planner,
     Query,
     RecurringQuerySpec,
     Session,
     SimulatedExecutor,
+    TenantQuota,
     UniformWindowArrival,
     admission_check,
     edf_order,
@@ -404,6 +406,63 @@ class TestSessionHeapParity:
         assert _traces_equal(go("scan"), go("heap"))
 
 
+class TestTenantChurnParity:
+    """Tenant identity, quotas and cascades ride the same decision loop:
+    scan and heap traces stay byte-identical under tenant submissions,
+    mid-run quota changes (``set_quota`` → rebalance/shed) and tenanted
+    withdrawals."""
+
+    def _run(self, runtime):
+        session = Session(
+            policy="llf-dynamic", runtime=runtime,
+            overload=OverloadConfig(max_shed=0.9, max_error_bound=5.0),
+            tenancy={"t0": TenantQuota(weight=2.0)})
+        for i, tenant in enumerate(("t0", "t1", "t2")):
+            base = make_query(f"r{i}", start=2.0 * i, n=6, slack=6.0,
+                              tier=i % 2)
+            base = dataclasses.replace(base, tenant=tenant)
+            session.submit(RecurringQuerySpec(base=base, period=30.0,
+                                              num_windows=2))
+        session.run_until(10.0)
+        # Quota churn: tighten one tenant (its own windows shed against the
+        # new share), then a late tenanted submission, then withdraw+relax.
+        session.set_quota("t1", TenantQuota(weight=0.5, capacity=0.4))
+        late = dataclasses.replace(make_query("late", start=12.0, n=4,
+                                              slack=6.0), tenant="t2")
+        session.submit(late)
+        session.run_until(20.0)
+        session.withdraw("r2")
+        session.set_quota("t1", None)
+        session.run_until(100.0)
+        return session.trace
+
+    def test_scan_heap_identical_under_tenant_churn(self):
+        scan = self._run("scan")
+        heap = self._run("heap")
+        assert scan.executions
+        assert _traces_equal(scan, heap)
+
+    def test_cascade_defer_parity(self):
+        """A deferred (cascaded) window flows through both cores' admit
+        paths at the same instants."""
+        def go(runtime):
+            session = Session(policy="llf-dynamic", runtime=runtime)
+            silver = make_query("silver", start=0.0, n=6, slack=6.0)
+            session.submit(RecurringQuerySpec(base=silver, period=30.0,
+                                              num_windows=2))
+            gold = dataclasses.replace(
+                make_query("gold", start=0.0, n=4, slack=40.0),
+                upstream="silver")
+            session.submit(RecurringQuerySpec(base=gold, period=60.0,
+                                              num_windows=1))
+            session.run_until(120.0)
+            return session.trace
+
+        scan, heap = go("scan"), go("heap")
+        assert any(o.query_id.startswith("gold") for o in scan.outcomes)
+        assert _traces_equal(scan, heap)
+
+
 # ---------------------------------------------------------------------------
 # Vectorized policy selection
 # ---------------------------------------------------------------------------
@@ -703,5 +762,59 @@ class TestHeapParitySweep:
             heap = run(get_policy(policy_name), specs(),
                        SimulatedExecutor(), runtime="heap", max_steps=20_000)
             assert _traces_equal(scan, heap)
+
+        check()
+
+    def test_random_tenant_churn_scan_heap_identical(self):
+        """Session-level sweep: random tenant assignments, a mid-run quota
+        change and a withdrawal — the tenancy layer acts only through
+        admission/shedding, so both cores see identical decision streams."""
+        pytest.importorskip("hypothesis", reason="hypothesis not installed")
+        from hypothesis import given, settings, strategies as st
+
+        rows = st.lists(
+            st.tuples(
+                st.floats(min_value=0.0, max_value=4.0),   # window start
+                st.integers(min_value=2, max_value=8),     # tuples
+                st.floats(min_value=3.0, max_value=8.0),   # slack
+                st.integers(min_value=0, max_value=1),     # tier
+                st.integers(min_value=0, max_value=2),     # tenant index
+            ),
+            min_size=1, max_size=4,
+        )
+        quota = st.tuples(
+            st.integers(min_value=0, max_value=2),         # tenant index
+            st.floats(min_value=0.3, max_value=3.0),       # new weight
+            st.one_of(st.none(),
+                      st.floats(min_value=0.2, max_value=0.9)),  # capacity
+        )
+
+        @settings(max_examples=25, deadline=None)
+        @given(rows=rows, quota=quota,
+               withdraw=st.integers(min_value=0, max_value=3))
+        def check(rows, quota, withdraw):
+            def go(runtime):
+                session = Session(
+                    policy="llf-dynamic", runtime=runtime,
+                    overload=OverloadConfig(max_shed=0.9,
+                                            max_error_bound=5.0),
+                    tenancy={"t0": TenantQuota(weight=2.0)})
+                for i, (start, n, slack, tier, t) in enumerate(rows):
+                    base = dataclasses.replace(
+                        make_query(f"r{i}", start=start, n=n, slack=slack,
+                                   tier=tier),
+                        tenant=f"t{t}")
+                    session.submit(RecurringQuerySpec(base=base, period=25.0,
+                                                      num_windows=2))
+                session.run_until(8.0)
+                ti, w, cap = quota
+                session.set_quota(f"t{ti}", TenantQuota(weight=w,
+                                                        capacity=cap))
+                if withdraw < len(rows):
+                    session.withdraw(f"r{withdraw}")
+                session.run_until(80.0)
+                return session.trace
+
+            assert _traces_equal(go("scan"), go("heap"))
 
         check()
