@@ -91,9 +91,26 @@ def measure_machine_spec():
     return MachineSpec(peak_flops=flops, peak_bw=bw)
 
 
+def mesh_spec(spec):
+    """The MESH roof this process should report against: the per-device
+    spec aggregated over the visible devices.  Forced-host CPU "devices"
+    all share one socket — the measured host rate already IS the aggregate
+    — so only real accelerator meshes scale the roof."""
+    import jax
+
+    n = jax.device_count()
+    if n <= 1 or jax.default_backend() not in ("tpu", "gpu"):
+        return spec
+    return spec.scaled(n)
+
+
 def segagg_report():
     """Achieved-vs-roofline rows for every timed segagg/pane_segagg bench
-    entry; returns (report dict, summary line) or (None, reason)."""
+    entry; returns (report dict, summary line) or (None, reason).
+
+    Reports BOTH roofs: the single-device achieved fraction per row, and
+    the mesh-aggregate spec (``MachineSpec.scaled`` over the visible
+    devices) a sharded run is measured against."""
     from repro.dist import KernelRooflineManager
 
     kernels_path = RESULTS / "kernels.json"
@@ -101,13 +118,19 @@ def segagg_report():
         return None, "results/kernels.json missing (run benchmarks.bench_kernels)"
     data = json.loads(kernels_path.read_text())
     spec = measure_machine_spec()
+    mspec = mesh_spec(spec)
     mng = KernelRooflineManager(spec)
+    mesh_mng = KernelRooflineManager(mspec)
     rows = []
     for r in data.get("rows", ()):
         if r.get("kernel") not in ("segagg", "pane_segagg") or "flops" not in r:
             continue
-        roof = mng.get_roofline({"flops": r["flops"], "bytes": r["bytes"],
-                                 "seconds": r["us"] / 1e6})
+        info = {"flops": r["flops"], "bytes": r["bytes"],
+                "seconds": r["us"] / 1e6}
+        roof = mng.get_roofline(info)
+        if mspec is not spec:
+            roof["mesh_achieved_frac"] = \
+                mesh_mng.get_roofline(info)["achieved_frac"]
         rows.append({k: r[k] for k in
                      ("kernel", "backend", "formulation", "n", "groups")
                      if k in r} | roof)
@@ -118,7 +141,9 @@ def segagg_report():
             best[key] = r
     report = {
         "spec": {"peak_flops": spec.peak_flops, "peak_bw": spec.peak_bw,
-                 "source": spec.source},
+                 "source": spec.source, "devices": spec.devices},
+        "mesh_spec": {"peak_flops": mspec.peak_flops, "peak_bw": mspec.peak_bw,
+                      "source": mspec.source, "devices": mspec.devices},
         "rows": rows,
         "best_per_shape": {
             f"{k[0]}@{k[1]}x{k[2]}":

@@ -83,6 +83,7 @@ from .cost_model import (
     LinearCostModel,
     PiecewiseLinearCostModel,
     SharedCostModel,
+    ShardedCostModel,
     SublinearCostModel,
     fit_piecewise_linear,
 )
@@ -250,6 +251,7 @@ __all__ = [
     "SessionTrace",
     "SharedBook",
     "SharedCostModel",
+    "ShardedCostModel",
     "SheddingPlan",
     "SimulatedExecutor",
     "SpecHistory",

@@ -284,6 +284,58 @@ class SharedCostModel(CostModelBase):
         )
 
 
+class ShardedCostModel(CostModelBase):
+    """Planning view of W-way fused shard dispatch (mesh execution).
+
+    On a device mesh a logical batch of ``n`` tuples is split into W
+    near-equal shards that run CONCURRENTLY as one fused ``shard_map``
+    call, so its wall time is the cost of one ``ceil(n / ways)``-tuple
+    shard — per-batch overhead (dispatch, one compiled call) is paid once
+    per GROUP, not once per shard.  Exposing that parallel cost to the
+    planners makes Eq. 9's MinBatch ~W times larger: W times fewer logical
+    batches, each amortizing its overhead over W shards — the paper's
+    overhead-amortization argument applied to dispatch fan-out.
+
+    The modelled executor must NOT advance a single worker's clock by this
+    parallel cost for an n-tuple shard; ``shard_cost`` supplies the
+    per-shard charge (the base model's cost of the shard's own tuples) and
+    ``BaseExecutor._modelled_batch_cost`` prefers it when present.
+
+    ``agg_cost``/``merge_cost`` pass through: partial combination is not
+    sharded.  Monotone whenever ``base`` is, so the generic
+    ``tuples_processable`` bisection stands.
+    """
+
+    def __init__(self, base: CostModelBase, ways: int):
+        if ways < 1:
+            raise ValueError(f"ways must be >= 1, got {ways}")
+        self.base = base
+        self.ways = ways
+
+    def cost(self, num_tuples: int) -> float:
+        """Parallel wall time of one fused W-way dispatch of ``n`` tuples:
+        the largest shard's cost."""
+        if num_tuples < 0:
+            return 0.0
+        if num_tuples == 0:
+            return self.base.cost(0)  # zero-batch convention: one overhead
+        return self.base.cost(-(-num_tuples // self.ways))
+
+    def shard_cost(self, num_tuples: int) -> float:
+        """Per-shard charge for a worker clock: the shard's own tuples at
+        the base model's (sequential) cost."""
+        return self.base.cost(num_tuples)
+
+    def agg_cost(self, num_batches: int) -> float:
+        return self.base.agg_cost(num_batches)
+
+    def merge_cost(self, num_panes: int) -> float:
+        return self.base.merge_cost(num_panes)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"ShardedCostModel(ways={self.ways}, base={self.base!r})"
+
+
 def _isotonic(samples: Sequence[Tuple[float, float]]) -> List[Tuple[float, float]]:
     """Sort, dedupe (max y per x — repeated measurements of one size), and
     make costs monotone by cumulative max: measurement noise can otherwise
@@ -371,6 +423,11 @@ class CalibratingCostModel(CostModelBase):
         self._samples: List[Tuple[float, float]] = []
         self._agg_samples: List[Tuple[float, float]] = []
         self._errors: List[float] = []   # relative error per observation
+        # worker name -> observed/predicted cost ratios (window-capped):
+        # per-device calibration on a heterogeneous mesh.  The pooled fit
+        # absorbs the AVERAGE level; these capture each device's deviation
+        # from it (see ``worker_scale``).
+        self._worker_ratios: dict = {}
         self._fitted: Optional[PiecewiseLinearCostModel] = None
         self._fitted_agg = False  # did the current fit include agg samples?
         self._since_refit = 0
@@ -415,16 +472,31 @@ class CalibratingCostModel(CostModelBase):
         ``(num_batches, observed_cost)`` pairs in observation order."""
         return tuple(self._agg_samples)
 
-    def observe(self, num_tuples: int, observed_cost: float) -> None:
+    def observe(
+        self,
+        num_tuples: int,
+        observed_cost: float,
+        worker: Optional[str] = None,
+    ) -> None:
         """Record one executed batch: ``observed_cost`` is the batch's true
         duration (modelled true cost in simulation, wall seconds on a real
-        backend — cost units == time units, §1)."""
+        backend — cost units == time units, §1).
+
+        ``worker`` (when the dispatching executor is a pool) additionally
+        feeds per-device calibration: each worker accumulates its own
+        observed/predicted ratios, so ``worker_scale``/``worker_weights``
+        can expose REAL per-shard speed skew to the planners (weighted
+        shard extents on a heterogeneous mesh)."""
         if num_tuples <= 0 or observed_cost < 0:
             return
         predicted = self.cost(num_tuples)
         scale = max(abs(observed_cost), abs(predicted), 1e-12)
         self._errors.append(abs(observed_cost - predicted) / scale)
         del self._errors[: -self.window or None]
+        if worker is not None and predicted > 1e-12:
+            ratios = self._worker_ratios.setdefault(worker, [])
+            ratios.append(observed_cost / predicted)
+            del ratios[: -self.window or None]
         self._samples.append((float(num_tuples), float(observed_cost)))
         del self._samples[: -self.max_samples or None]
         self._since_refit += 1
@@ -495,3 +567,47 @@ class CalibratingCostModel(CostModelBase):
             return 0.0
         recent = self._errors[-self.window:]
         return sum(recent) / len(recent)
+
+    # -- per-device calibration ------------------------------------------
+    @staticmethod
+    def _median(values: List[float]) -> float:
+        s = sorted(values)
+        n = len(s)
+        mid = n // 2
+        return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+    def worker_scale(self, worker: str) -> float:
+        """Relative cost multiplier of ``worker`` vs the pool average:
+        >1 means slower than its peers, <1 faster, 1.0 when there is not
+        yet enough evidence (fewer than 2 samples for this worker).
+
+        Computed as this worker's median observed/predicted ratio divided
+        by the median over ALL per-worker observations, so the pooled fit
+        (which absorbs the average level) and the per-device deviations
+        compose instead of double-counting drift."""
+        ratios = self._worker_ratios.get(worker)
+        if not ratios or len(ratios) < 2:
+            return 1.0
+        pooled = [r for rs in self._worker_ratios.values() for r in rs]
+        base = self._median(pooled)
+        if base <= 1e-12:
+            return 1.0
+        return self._median(ratios) / base
+
+    def worker_cost(self, num_tuples: int, worker: str) -> float:
+        """Predicted cost of one batch ON ``worker`` — the pooled model's
+        prediction scaled by the device's calibrated deviation."""
+        return self.cost(num_tuples) * self.worker_scale(worker)
+
+    def worker_weights(self, names: Sequence[str]) -> Tuple[float, ...]:
+        """Relative worker SPEEDS aligned with ``names`` (inverse cost
+        scales, normalized to mean 1.0) — the shape
+        ``weighted_shard_extents`` consumes.  All-1.0 until at least one
+        worker has calibrated away from its peers."""
+        inv = [1.0 / max(self.worker_scale(n), 1e-12) for n in names]
+        if not inv:
+            return ()
+        mean = sum(inv) / len(inv)
+        if mean <= 1e-12:
+            return (1.0,) * len(inv)
+        return tuple(v / mean for v in inv)

@@ -39,6 +39,49 @@ from ..types import (
 _VECTOR_MIN = 64
 
 
+def make_shards(
+    state: "RuntimeState", take: int, ways: int, now: float  # noqa: F821
+) -> Tuple[BatchShard, ...]:
+    """Split ``take`` tuples into up to ``ways`` shards for one dispatch.
+
+    Homogeneous pools (the default — every ``worker_weights`` entry equal,
+    or no weights reported) get unnamed, evenly balanced shards via
+    ``batch_shard_extents``; the loop assigns workers earliest-free, which
+    keeps pre-refactor traces byte-identical.
+
+    Heterogeneous pools (per-device calibration found real speed skew —
+    ``repro.dist.mesh.MeshBackend`` reports measured throughput ratios) get
+    NAMED shards cut by ``weighted_shard_extents`` so every worker finishes
+    its shard at the same instant: the ``ways`` earliest-free workers are
+    claimed in the loop's own (clock, declaration order) tie-break, then
+    each gets tuples in proportion to its weight.  Zero-sized assignments
+    (a worker far slower than its peers) are dropped."""
+    weights = state.worker_weights
+    if (
+        len(weights) == len(state.worker_names)
+        and len(weights) == len(state.worker_clocks)
+        and len(set(weights)) > 1
+    ):
+        from ...dist.sharding import weighted_shard_extents
+
+        order = sorted(
+            range(len(state.worker_names)),
+            key=lambda i: (state.worker_clocks[i], i),
+        )[:ways]
+        extents = weighted_shard_extents(take, [weights[i] for i in order])
+        return tuple(
+            BatchShard(num_tuples=size, worker=state.worker_names[i])
+            for i, (_, size) in zip(order, extents)
+            if size > 0
+        )
+    from ...dist.sharding import batch_shard_extents
+
+    return tuple(
+        BatchShard(num_tuples=size)
+        for _, size in batch_shard_extents(take, ways)
+    )
+
+
 class DynamicPolicy:
     """Base for Algorithm-2 policies; subclasses fix the strategy order.
 
@@ -186,14 +229,9 @@ class DynamicPolicy:
         take = min(rt.avail(now), rt.min_batch)
         ways = min(self.shard_across, state.free_workers(now), take)
         if ways > 1:
-            from ...dist.sharding import batch_shard_extents
-
-            shards = tuple(
-                BatchShard(num_tuples=size)
-                for _, size in batch_shard_extents(take, ways)
-            )
             return PolicyDecision(
-                query_id=rt.q.query_id, num_tuples=take, shards=shards
+                query_id=rt.q.query_id, num_tuples=take,
+                shards=make_shards(state, take, ways, now),
             )
         return PolicyDecision(query_id=rt.q.query_id, num_tuples=take)
 

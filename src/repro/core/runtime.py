@@ -50,7 +50,6 @@ from .cost_model import CostModelBase
 from .types import (
     EPS,
     BatchExecution,
-    BatchShard,
     ExecutionTrace,
     PolicyDecision,
     Query,
@@ -237,6 +236,11 @@ class RuntimeState:
     num_workers: int = 1
     worker_names: Tuple[str, ...] = ()
     worker_clocks: Tuple[float, ...] = ()
+    # Relative worker speeds aligned with worker_names (1.0 = nominal; ()
+    # outside a pool or when the backend reports none).  Heterogeneous
+    # weights let policies cut weighted shard extents so every device
+    # finishes its shard at the same instant.
+    worker_weights: Tuple[float, ...] = ()
     # Lazily built query_id -> runtime index (first match wins, like the
     # linear scan it replaces; new runtimes appended mid-run are absorbed
     # on the next lookup).
@@ -343,7 +347,17 @@ class BaseExecutor:
     def _modelled_batch_cost(self, query: Query, num_tuples: int) -> float:
         """TRUE modelled duration of one batch — what the clock advances by.
         Default: the query's own cost model (prediction == truth).  Override
-        to inject cost drift (see ``OracleCostExecutor``)."""
+        to inject cost drift (see ``OracleCostExecutor``).
+
+        A cost model with a ``shard_cost`` hook (``ShardedCostModel``) is a
+        PLANNING view of a W-way fused dispatch: its ``cost(n)`` is the
+        parallel wall time of n tuples split W ways, which must not be what
+        a single worker's clock advances by for an n-tuple shard.  The hook
+        supplies the per-shard charge (the base model's cost), so the
+        modelled clock stays in per-worker work units."""
+        shard_cost = getattr(query.cost_model, "shard_cost", None)
+        if shard_cost is not None:
+            return shard_cost(num_tuples)
         return query.cost_model.cost(num_tuples)
 
     def _modelled_agg_cost(self, query: Query, num_batches: int) -> float:
@@ -415,6 +429,176 @@ class Dispatch:
     end: float
 
 
+class WorkerBackend:
+    """Dispatch seam of ``ExecutorPool``: owns the per-worker clocks and
+    physically runs batches on its workers.
+
+    The pool keeps the Executor protocol, worker selection
+    (``earliest_free``) and the final-aggregation barrier; HOW a batch runs
+    and WHAT a worker's clock means is the backend's business:
+
+    * ``ModelledWorkerBackend`` (the default) — W modelled clocks over one
+      shared physical ``Executor``; a batch occupies [clock, clock +
+      modelled cost) on its worker.  This is PR 2's pool, bit for bit.
+    * ``repro.dist.mesh.MeshBackend`` — one worker per jax device; clocks
+      are stitched from MEASURED device wall seconds, and a shard group is
+      dispatched as ONE fused ``shard_map`` call across the mesh
+      (``prefers_group_dispatch``).
+
+    Subclasses must implement ``run_batch``/``run_agg`` (and may implement
+    ``run_shard_group``); the clock bookkeeping here is shared.
+    """
+
+    #: when True, the runtime loop hands a whole PolicyDecision.shards group
+    #: to ``ExecutorPool.submit_shard_group`` as one fused dispatch instead
+    #: of one ``submit_batch`` per shard.
+    prefers_group_dispatch = False
+
+    def __init__(self, names: Sequence[str]):
+        self.worker_names: Tuple[str, ...] = tuple(names)
+        self._clocks: Dict[str, float] = {n: 0.0 for n in self.worker_names}
+        self.last_batch_wall: Optional[float] = None
+        self.last_agg_wall: Optional[float] = None
+        self.wall_seconds: Dict[str, float] = {}
+
+    # -- clocks ----------------------------------------------------------
+    def worker_clock(self, name: str) -> float:
+        return self._clocks[name]
+
+    def clock(self) -> float:
+        return min(self._clocks.values())
+
+    def advance(self, t: float) -> None:
+        for n, c in self._clocks.items():
+            if t > c:
+                self._clocks[n] = t
+
+    def reset(self, t: float) -> None:
+        for n in self._clocks:
+            self._clocks[n] = t
+
+    @property
+    def worker_weights(self) -> Tuple[float, ...]:
+        """Relative worker speeds (1.0 = nominal) for weighted shard
+        splits; homogeneous by default."""
+        return (1.0,) * len(self.worker_names)
+
+    # -- dispatch hooks ---------------------------------------------------
+    def run_batch(
+        self, query: Query, num_tuples: int, offset: int, worker: str
+    ) -> Tuple[Dispatch, float]:
+        """Run one batch on ``worker``; returns (dispatch, duration) where
+        duration is what the Executor protocol's ``submit_batch`` returns."""
+        raise NotImplementedError
+
+    def run_agg(
+        self,
+        query: Query,
+        num_batches: int,
+        worker: str,
+        start: float,
+        barrier: float,
+    ) -> Tuple[Dispatch, float]:
+        """Run the final aggregation on ``worker`` beginning at ``start``
+        (already >= both the worker clock and the last-partial ``barrier``).
+        Zero-duration aggregations occupy no worker and complete at the
+        barrier."""
+        raise NotImplementedError
+
+    def run_shard_group(
+        self,
+        query: Query,
+        sizes: Tuple[int, ...],
+        base_offset: int,
+        workers: Tuple[str, ...],
+    ) -> Tuple[Dispatch, ...]:
+        """Run one logical batch's shard group, one shard per worker.
+        Default: sequential ``run_batch`` calls (semantically identical to
+        the loop's per-shard dispatch); fused backends override this to run
+        the whole [base_offset, base_offset + sum(sizes)) range as one mesh
+        call and return per-shard Dispatches sharing its start/end."""
+        dispatches = []
+        offset = base_offset
+        for size, worker in zip(sizes, workers):
+            disp, _ = self.run_batch(query, size, offset, worker)
+            dispatches.append(disp)
+            offset += size
+        return tuple(dispatches)
+
+    def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
+        """Straggler re-dispatch of an idempotent batch (no clock motion)."""
+
+
+class ModelledWorkerBackend(WorkerBackend):
+    """W modelled per-worker clocks over ONE shared physical backend — the
+    pre-refactor ``ExecutorPool`` dispatch arithmetic, verbatim: physical
+    work flows through ``backend`` (whose own modelled clock prices the
+    batch), and the named worker's clock advances by that modelled cost."""
+
+    def __init__(self, backend: Executor, names: Sequence[str]):
+        super().__init__(names)
+        self.backend = backend
+
+    def reset(self, t: float) -> None:
+        super().reset(t)
+        self.backend.reset(t)
+
+    def run_batch(
+        self, query: Query, num_tuples: int, offset: int, worker: str
+    ) -> Tuple[Dispatch, float]:
+        start = self._clocks[worker]
+        dur = self.backend.submit_batch(query, num_tuples, offset)
+        end = start + dur
+        self._clocks[worker] = end
+        return Dispatch(worker=worker, start=start, end=end), dur
+
+    def run_agg(
+        self,
+        query: Query,
+        num_batches: int,
+        worker: str,
+        start: float,
+        barrier: float,
+    ) -> Tuple[Dispatch, float]:
+        agg = self.backend.finalize(query, num_batches)
+        if agg > 0:
+            self._clocks[worker] = start + agg
+            return Dispatch(worker=worker, start=start, end=start + agg), agg
+        # No aggregation work: the result is ready the instant the last
+        # partial lands; no worker is occupied.
+        return Dispatch(worker=worker, start=barrier, end=barrier), agg
+
+    def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
+        requeue = getattr(self.backend, "requeue_batch", None)
+        if requeue is not None:
+            requeue(query, num_tuples, offset)
+
+    # -- wall-clock bookkeeping lives on the physical backend -------------
+    @property
+    def last_batch_wall(self) -> Optional[float]:
+        return getattr(self.backend, "last_batch_wall", None)
+
+    @last_batch_wall.setter
+    def last_batch_wall(self, value: Optional[float]) -> None:
+        pass  # the physical backend owns it (base __init__ assigns None)
+
+    @property
+    def last_agg_wall(self) -> Optional[float]:
+        return getattr(self.backend, "last_agg_wall", None)
+
+    @last_agg_wall.setter
+    def last_agg_wall(self, value: Optional[float]) -> None:
+        pass
+
+    @property
+    def wall_seconds(self) -> Dict[str, float]:
+        return getattr(self.backend, "wall_seconds", {})
+
+    @wall_seconds.setter
+    def wall_seconds(self, value: Dict[str, float]) -> None:
+        pass
+
+
 class ExecutorPool:
     """W parallel workers with independent modelled clocks over one backend.
 
@@ -437,6 +621,13 @@ class ExecutorPool:
     ``backend``, so offset-keyed results combine across workers and
     straggler re-queue stays idempotent.  ``workers=1`` is trace-identical
     to running the bare backend.
+
+    ``worker_backend=`` swaps the whole dispatch seam for an explicit
+    ``WorkerBackend`` (e.g. ``repro.dist.mesh.MeshBackend``: one worker per
+    jax device, clocks from measured device wall time, shard groups fused
+    into one ``shard_map`` call).  Without it the pool builds the
+    ``ModelledWorkerBackend`` over ``backend`` — the PR 2 semantics,
+    byte-identical.
     """
 
     is_pool = True
@@ -446,28 +637,48 @@ class ExecutorPool:
         backend: Optional[Executor] = None,
         workers: int = 1,
         names: Optional[Sequence[str]] = None,
+        worker_backend: Optional[WorkerBackend] = None,
     ):
-        if getattr(backend, "is_pool", False):
-            raise TypeError("cannot nest ExecutorPools")
-        self.backend: Executor = SimulatedExecutor() if backend is None else backend
-        if names is not None:
-            names = tuple(names)
-            if len(set(names)) != len(names):
-                raise ValueError(f"duplicate worker names: {names}")
-            if not names:
-                raise ValueError("names must be non-empty")
-            if workers not in (1, len(names)):
-                # workers=1 is the constructor default, i.e. "unspecified".
-                raise ValueError(
-                    f"workers={workers} conflicts with {len(names)} names"
+        if worker_backend is not None:
+            if backend is not None:
+                raise TypeError(
+                    "pass either backend= (modelled dispatch over one "
+                    "physical executor) or worker_backend=, not both"
                 )
+            if names is not None or workers != 1:
+                raise ValueError(
+                    "workers=/names= conflict with worker_backend= (the "
+                    "worker backend declares its own workers)"
+                )
+            self._wb = worker_backend
+            # The physical executor, for callers that reach through the
+            # pool (results, calibration); a mesh backend IS its own
+            # physical layer.
+            self.backend = getattr(worker_backend, "backend", worker_backend)
         else:
-            if workers < 1:
-                raise ValueError(f"need at least one worker, got {workers}")
-            names = tuple(f"w{i}" for i in range(workers))
-        self.worker_names: Tuple[str, ...] = names
-        self._rank: Dict[str, int] = {n: i for i, n in enumerate(names)}
-        self._clocks: Dict[str, float] = {n: 0.0 for n in names}
+            if getattr(backend, "is_pool", False):
+                raise TypeError("cannot nest ExecutorPools")
+            if names is not None:
+                names = tuple(names)
+                if len(set(names)) != len(names):
+                    raise ValueError(f"duplicate worker names: {names}")
+                if not names:
+                    raise ValueError("names must be non-empty")
+                if workers not in (1, len(names)):
+                    # workers=1 is the constructor default, i.e. "unspecified".
+                    raise ValueError(
+                        f"workers={workers} conflicts with {len(names)} names"
+                    )
+            else:
+                if workers < 1:
+                    raise ValueError(f"need at least one worker, got {workers}")
+                names = tuple(f"w{i}" for i in range(workers))
+            self.backend = SimulatedExecutor() if backend is None else backend
+            self._wb = ModelledWorkerBackend(self.backend, names)
+        self.worker_names: Tuple[str, ...] = self._wb.worker_names
+        self._rank: Dict[str, int] = {
+            n: i for i, n in enumerate(self.worker_names)
+        }
         # query_id -> (end, worker) of the query's LAST-ENDING batch so far:
         # its final aggregation cannot start before ``end``.
         self._q_last: Dict[str, Tuple[float, str]] = {}
@@ -478,8 +689,20 @@ class ExecutorPool:
     def num_workers(self) -> int:
         return len(self.worker_names)
 
+    @property
+    def worker_backend(self) -> WorkerBackend:
+        return self._wb
+
+    @property
+    def worker_weights(self) -> Tuple[float, ...]:
+        return self._wb.worker_weights
+
+    @property
+    def prefers_group_dispatch(self) -> bool:
+        return self._wb.prefers_group_dispatch
+
     def worker_clock(self, name: str) -> float:
-        return self._clocks[name]
+        return self._wb.worker_clock(name)
 
     def earliest_free(self, exclude: Sequence[str] = ()) -> str:
         """Name of the earliest-free worker (ties: declaration order).
@@ -488,23 +711,24 @@ class ExecutorPool:
         pool = [n for n in self.worker_names if n not in exclude]
         if not pool:
             pool = list(self.worker_names)
-        return min(pool, key=lambda n: (self._clocks[n], self._rank[n]))
+        return min(pool, key=lambda n: (self._wb.worker_clock(n), self._rank[n]))
 
     # -- Executor protocol -----------------------------------------------
     def clock(self) -> float:
-        return min(self._clocks.values())
+        return self._wb.clock()
 
     def advance(self, t: float) -> None:
-        for n, c in self._clocks.items():
-            if t > c:
-                self._clocks[n] = t
+        self._wb.advance(t)
 
     def reset(self, t: float) -> None:
-        for n in self._clocks:
-            self._clocks[n] = t
+        self._wb.reset(t)
         self._q_last.clear()
         self.last_dispatch = None
-        self.backend.reset(t)
+
+    def _note_last(self, query: Query, end: float, name: str) -> None:
+        prev = self._q_last.get(query.query_id)
+        if prev is None or end >= prev[0]:
+            self._q_last[query.query_id] = (end, name)
 
     def submit_batch(
         self,
@@ -514,60 +738,69 @@ class ExecutorPool:
         worker: Optional[str] = None,
     ) -> float:
         name = self.earliest_free() if worker is None else worker
-        if name not in self._clocks:
+        if name not in self._rank:
             raise KeyError(
                 f"unknown worker {name!r}; pool workers: {self.worker_names}"
             )
-        start = self._clocks[name]
-        dur = self.backend.submit_batch(query, num_tuples, offset)
-        end = start + dur
-        self._clocks[name] = end
-        prev = self._q_last.get(query.query_id)
-        if prev is None or end >= prev[0]:
-            self._q_last[query.query_id] = (end, name)
-        self.last_dispatch = Dispatch(worker=name, start=start, end=end)
+        disp, dur = self._wb.run_batch(query, num_tuples, offset, name)
+        self._note_last(query, disp.end, name)
+        self.last_dispatch = disp
         return dur
+
+    def submit_shard_group(
+        self,
+        query: Query,
+        sizes: Sequence[int],
+        base_offset: int,
+    ) -> Tuple[Dispatch, ...]:
+        """One logical batch's shard group as a SINGLE fused dispatch
+        (worker backends with ``prefers_group_dispatch``): claims one worker
+        per shard in earliest-free order and hands the whole group to the
+        backend, which runs it as one mesh call.  Returns one Dispatch per
+        shard (they share the fused call's start/end)."""
+        names: List[str] = []
+        for _ in sizes:
+            names.append(self.earliest_free(exclude=names))
+        dispatches = self._wb.run_shard_group(
+            query, tuple(sizes), base_offset, tuple(names)
+        )
+        end = max(d.end for d in dispatches)
+        self._note_last(query, end, dispatches[-1].worker)
+        self.last_dispatch = dispatches[-1]
+        return dispatches
 
     def finalize(self, query: Query, num_batches: int) -> float:
         barrier = self._q_last.get(query.query_id, (self.clock(), None))[0]
         # Earliest admissible start: max(worker free, last partial ready).
         name = min(
             self.worker_names,
-            key=lambda n: (max(self._clocks[n], barrier), self._rank[n]),
+            key=lambda n: (max(self._wb.worker_clock(n), barrier), self._rank[n]),
         )
-        start = max(self._clocks[name], barrier)
-        agg = self.backend.finalize(query, num_batches)
-        if agg > 0:
-            self._clocks[name] = start + agg
-            self.last_dispatch = Dispatch(worker=name, start=start, end=start + agg)
-        else:
-            # No aggregation work: the result is ready the instant the last
-            # partial lands; no worker is occupied.
-            self.last_dispatch = Dispatch(worker=name, start=barrier, end=barrier)
+        start = max(self._wb.worker_clock(name), barrier)
+        disp, agg = self._wb.run_agg(query, num_batches, name, start, barrier)
+        self.last_dispatch = disp
         return agg
 
-    # -- optional loop members, proxied to the backend -------------------
+    # -- optional loop members, proxied to the worker backend -------------
     @property
     def last_batch_wall(self) -> Optional[float]:
-        return getattr(self.backend, "last_batch_wall", None)
+        return self._wb.last_batch_wall
 
     @property
     def last_agg_wall(self) -> Optional[float]:
-        return getattr(self.backend, "last_agg_wall", None)
+        return self._wb.last_agg_wall
 
     @property
     def wall_seconds(self) -> Dict[str, float]:
-        return getattr(self.backend, "wall_seconds", {})
+        return self._wb.wall_seconds
 
     def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
-        requeue = getattr(self.backend, "requeue_batch", None)
-        if requeue is not None:
-            requeue(query, num_tuples, offset)
+        self._wb.requeue_batch(query, num_tuples, offset)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return (
             f"ExecutorPool(workers={self.num_workers}, "
-            f"backend={type(self.backend).__name__})"
+            f"backend={type(self._wb).__name__})"
         )
 
 
@@ -618,6 +851,38 @@ def _record_batch(
     if on_batch:
         on_batch(ex)
     return ex
+
+
+def _record_shard_group(
+    trace: ExecutionTrace,
+    executor: "ExecutorPool",
+    query: Query,
+    sizes: Sequence[int],
+    base_offset: int,
+    on_batch: Optional[Callable[[BatchExecution], None]],
+    c_max: Optional[float],
+) -> List[BatchExecution]:
+    """Fused-dispatch analogue of ``_record_batch`` for one shard group:
+    the pool hands the whole group to its worker backend as ONE call (e.g.
+    one ``shard_map`` over the mesh) and returns per-shard Dispatches that
+    share the fused call's timeline.  One BatchExecution is recorded per
+    shard so traces stay shaped like per-shard dispatch; the C_max check
+    applies to the fused call's measured wall time, and a straggling group
+    is requeued as a single covering batch (idempotent offset-keyed redo)."""
+    dispatches = executor.submit_shard_group(query, sizes, base_offset)
+    exs = [
+        BatchExecution(query.query_id, d.start, d.end, size, worker=d.worker)
+        for d, size in zip(dispatches, sizes)
+    ]
+    trace.executions.extend(exs)
+    wall = getattr(executor, "last_batch_wall", None)
+    if c_max is not None and wall is not None and wall > c_max:
+        trace.stragglers.append(query.query_id)
+        executor.requeue_batch(query, sum(sizes), base_offset)
+    if on_batch:
+        for ex in exs:
+            on_batch(ex)
+    return exs
 
 
 def _record_final_agg(
@@ -1008,6 +1273,9 @@ class DynamicLoopCore:
             state.worker_clocks = tuple(
                 executor.worker_clock(n) for n in state.worker_names
             )
+            state.worker_weights = tuple(
+                getattr(executor, "worker_weights", None) or ()
+            )
         decision = self._decide(now)
         if decision.is_stop:
             return "stop"
@@ -1030,21 +1298,38 @@ class DynamicLoopCore:
                 "an ExecutorPool"
             )
         if decision.shards:
-            # One logical batch split across workers: each shard becomes its
-            # own offset-keyed partial (combined in finalize), dispatched to
-            # its named worker or the next unclaimed earliest-free one.
-            claimed: List[str] = []
-            for shard in decision.shards:
-                name = shard.worker
-                if name is None:
-                    name = executor.earliest_free(exclude=claimed)
-                claimed.append(name)
-                _record_batch(
-                    trace, executor, rt.q, shard.num_tuples, rt.processed,
-                    on_batch=self.on_batch, c_max=self.c_max, worker=name,
+            if (
+                getattr(executor, "prefers_group_dispatch", False)
+                and all(s.worker is None for s in decision.shards)
+            ):
+                # Fused group dispatch: the whole shard group runs as ONE
+                # backend call (e.g. one shard_map over the mesh) — the
+                # dispatch-overhead amortization the modelled per-shard
+                # path cannot express.
+                sizes = [s.num_tuples for s in decision.shards]
+                _record_shard_group(
+                    trace, executor, rt.q, sizes, rt.processed,
+                    on_batch=self.on_batch, c_max=self.c_max,
                 )
-                rt.processed += shard.num_tuples
-                rt.batches_done += 1
+                rt.processed += sum(sizes)
+                rt.batches_done += len(sizes)
+            else:
+                # One logical batch split across workers: each shard becomes
+                # its own offset-keyed partial (combined in finalize),
+                # dispatched to its named worker or the next unclaimed
+                # earliest-free one.
+                claimed: List[str] = []
+                for shard in decision.shards:
+                    name = shard.worker
+                    if name is None:
+                        name = executor.earliest_free(exclude=claimed)
+                    claimed.append(name)
+                    _record_batch(
+                        trace, executor, rt.q, shard.num_tuples, rt.processed,
+                        on_batch=self.on_batch, c_max=self.c_max, worker=name,
+                    )
+                    rt.processed += shard.num_tuples
+                    rt.batches_done += 1
         else:
             _record_batch(
                 trace, executor, rt.q, decision.num_tuples, rt.processed,
@@ -1291,14 +1576,11 @@ class HeapLoopCore(DynamicLoopCore):
         ways = min(self.policy.shard_across, self.state.free_workers(now),
                    take)
         if ways > 1:
-            from ..dist.sharding import batch_shard_extents
+            from .policies.dynamic import make_shards
 
-            shards = tuple(
-                BatchShard(num_tuples=size)
-                for _, size in batch_shard_extents(take, ways)
-            )
             return PolicyDecision(
-                query_id=rt.q.query_id, num_tuples=take, shards=shards
+                query_id=rt.q.query_id, num_tuples=take,
+                shards=make_shards(self.state, take, ways, now),
             )
         return PolicyDecision(query_id=rt.q.query_id, num_tuples=take)
 

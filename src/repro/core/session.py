@@ -1477,7 +1477,8 @@ class SessionRuntime:
         )
         wall = getattr(self.executor, "last_batch_wall", None)
         cal.observe(ex.num_tuples,
-                    wall if wall is not None else ex.end - ex.start)
+                    wall if wall is not None else ex.end - ex.start,
+                    worker=ex.worker or None)
         drift = cal.drift()
         if drift > self.drift_threshold and cal.num_observations >= cal.min_samples:
             self._recalibrate(live, drift)

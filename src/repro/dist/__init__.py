@@ -7,7 +7,14 @@ Three small modules consumed across the model zoo and launch tooling:
                  same model code runs on a laptop CPU and a multi-pod mesh.
 * ``sharding`` — PartitionSpec derivation from the logical axis names of
                  ``repro.models.params.ParamSpec`` (FSDP on "data", TP on
-                 "model", DP for inputs/caches).
+                 "model", DP for inputs/caches), plus the scheduler's 1-D
+                 batch splits (``batch_shard_extents`` /
+                 ``weighted_shard_extents``) and divisibility-fallback
+                 reporting (``on_fallback``).
+* ``mesh``     — ``DeviceMesh``/``MeshBackend``: real multi-device
+                 execution of the scheduler's shard dispatch (fused
+                 ``shard_map`` segagg across the data axis, worker clocks
+                 from measured wall seconds).
 * ``roofline`` — compute/memory/collective roofline record + HLO collective
                  parser used by ``repro.launch.dryrun``.
 """
@@ -26,20 +33,25 @@ from .roofline import (
     Roofline,
     parse_collectives,
 )
+from .mesh import DeviceMesh, MeshBackend
 from .sharding import (
     batch_shard_extents,
     batch_spec,
     cache_pspecs,
     input_pspecs,
+    on_fallback,
     param_pspecs,
     param_shardings,
+    weighted_shard_extents,
 )
 
 __all__ = [
     "ACT_AXIS_RULES",
     "CollectiveStats",
+    "DeviceMesh",
     "KernelRooflineManager",
     "MachineSpec",
+    "MeshBackend",
     "PARAM_AXIS_RULES",
     "Roofline",
     "active_mesh",
@@ -50,7 +62,9 @@ __all__ = [
     "constrain_param",
     "input_pspecs",
     "mesh_context",
+    "on_fallback",
     "param_pspecs",
     "param_shardings",
     "parse_collectives",
+    "weighted_shard_extents",
 ]

@@ -129,11 +129,36 @@ class MachineSpec:
     are datasheet numbers; for the CPU container they are MEASURED
     achievable rates (a copy-bandwidth probe and a big-matmul FLOPs probe),
     so "achieved fraction" compares against what the host demonstrably
-    sustains, not a marketing peak."""
+    sustains, not a marketing peak.
 
-    peak_flops: float    # FLOP/s
-    peak_bw: float       # bytes/s
+    ``peak_flops``/``peak_bw`` are PER-DEVICE rates; ``devices`` records how
+    many devices the spec aggregates over (1 = a single device, the
+    pre-mesh convention).  ``scaled(n)`` builds the MESH roof — aggregate
+    FLOPs/bandwidth across ``n`` devices — so ``bench_roofline`` can report
+    achieved fraction of the whole mesh instead of one device's roof.  A
+    forced-host CPU mesh shares one socket, so its honest mesh roof is the
+    single measured host rate — pass ``n=1`` worth of scaling there (the
+    bench decides from the platform)."""
+
+    peak_flops: float    # FLOP/s (per device)
+    peak_bw: float       # bytes/s (per device)
     source: str = "measured"
+    devices: int = 1
+
+    def scaled(self, num_devices: int) -> "MachineSpec":
+        """Aggregate roof over ``num_devices`` devices: peaks multiplied,
+        provenance recorded in ``source``."""
+        if num_devices < 1:
+            raise ValueError(f"need at least one device, got {num_devices}")
+        if num_devices == 1:
+            return self
+        return dataclasses.replace(
+            self,
+            peak_flops=self.peak_flops * num_devices,
+            peak_bw=self.peak_bw * num_devices,
+            source=f"{self.source} x{num_devices} devices",
+            devices=self.devices * num_devices,
+        )
 
 
 class KernelRooflineManager:

@@ -18,7 +18,8 @@ which keeps reduced-config CPU tests working on 1-device meshes.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -27,6 +28,43 @@ from .context import PARAM_AXIS_RULES, _resolve
 
 Structs = Dict[str, jax.ShapeDtypeStruct]
 
+# Divisibility-fallback listeners: when a batch-like dim stays REPLICATED
+# because the data-parallel axis size does not divide it, every registered
+# listener receives one ``{"kind": "sharding_fallback", ...}`` event dict.
+# Under-sharding is correct but slow (the whole array lands on every
+# device), so it must be reported, not silent — a ``DeviceMesh`` registers
+# a listener and surfaces the events on its trace hook.
+_fallback_listeners: List[Callable[[Dict], None]] = []
+
+
+def on_fallback(listener: Callable[[Dict], None]) -> Callable[[], None]:
+    """Register a divisibility-fallback listener; returns an unsubscribe
+    callable (idempotent)."""
+    _fallback_listeners.append(listener)
+
+    def unsubscribe() -> None:
+        try:
+            _fallback_listeners.remove(listener)
+        except ValueError:
+            pass
+
+    return unsubscribe
+
+
+def _emit_fallback(dim: int, axes: Tuple[str, ...], axis_size: int) -> None:
+    event = {
+        "kind": "sharding_fallback",
+        "dim": dim,
+        "axes": axes,
+        "axis_size": axis_size,
+        "detail": (
+            f"dim {dim} not divisible by axis size {axis_size} "
+            f"({'x'.join(axes)}); dim stays replicated"
+        ),
+    }
+    for listener in tuple(_fallback_listeners):
+        listener(event)
+
 
 def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Data-parallel mesh axes, outermost first."""
@@ -34,12 +72,17 @@ def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def _dp_entry(mesh: Mesh, dim: int):
-    """Spec entry for a batch-like dim: the DP axes if evenly divisible."""
+    """Spec entry for a batch-like dim: the DP axes if evenly divisible.
+    A non-divisible dim stays replicated AND emits a ``sharding_fallback``
+    event to the registered ``on_fallback`` listeners."""
     axes = _dp_axes(mesh)
     size = 1
     for ax in axes:
         size *= mesh.shape[ax]
-    if not axes or size <= 0 or dim % size:
+    if not axes or size <= 0:
+        return None
+    if dim % size:  # only reachable with size >= 2: every dim divides 1
+        _emit_fallback(dim, axes, size)
         return None
     return axes if len(axes) > 1 else axes[0]
 
@@ -97,6 +140,46 @@ def batch_shard_extents(
         size = base + (1 if i < rem else 0)
         if size == 0:
             break
+        extents.append((offset, size))
+        offset += size
+    return tuple(extents)
+
+
+def weighted_shard_extents(
+    num_tuples: int, weights: Sequence[float]
+) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous (offset, size) extents splitting one logical batch across
+    heterogeneous workers in proportion to ``weights`` (relative worker
+    speeds from per-device calibration).  Largest-remainder apportionment:
+    each worker gets ``floor(n * w_i / sum(w))`` tuples, the leftover going
+    one-by-one to the largest fractional parts (ties to the earliest
+    worker).  With equal weights this reduces EXACTLY to
+    ``batch_shard_extents``.
+
+    Unlike ``batch_shard_extents``, the result is aligned 1:1 with
+    ``weights`` — zero-sized extents are KEPT so callers can zip the result
+    with their worker list and drop empty assignments themselves.
+    """
+    if num_tuples < 0:
+        raise ValueError(f"negative num_tuples {num_tuples}")
+    if not weights:
+        raise ValueError("need at least one weight")
+    if any(w < 0 for w in weights):
+        raise ValueError(f"weights must be non-negative, got {tuple(weights)}")
+    total_w = float(sum(weights))
+    if total_w <= 0:
+        raise ValueError("at least one weight must be positive")
+    ideal = [num_tuples * float(w) / total_w for w in weights]
+    sizes = [int(math.floor(x)) for x in ideal]
+    leftover = num_tuples - sum(sizes)
+    # Largest fractional part first; ties broken toward the earliest worker
+    # (matching batch_shard_extents' remainder-to-earliest rule).
+    order = sorted(range(len(weights)), key=lambda i: (-(ideal[i] - sizes[i]), i))
+    for i in order[:leftover]:
+        sizes[i] += 1
+    extents = []
+    offset = 0
+    for size in sizes:
         extents.append((offset, size))
         offset += size
     return tuple(extents)

@@ -55,6 +55,7 @@ from ..core import (
 )
 from ..core.runtime import BaseExecutor, execute_plan
 from ..data.tpch import AnalyticsQuery, StreamScale
+from ..dist.mesh import MeshBackend
 
 
 @dataclasses.dataclass
@@ -82,20 +83,31 @@ class AnalyticsExecutor:
     kernel for the platform; ``"interpret"`` → the Pallas interpreter, the
     pre-dispatch behaviour) — see ``repro.kernels.segagg.ops``.  Only
     consulted with ``use_kernel=True``; the default path is the jnp
-    reference."""
+    reference.
+
+    ``mesh=`` (a ``repro.dist.DeviceMesh``) routes every scan through the
+    SHARDED kernel path: rows split over the mesh's data axis, one segagg
+    per device, partials merged across devices.  Numerically equal to the
+    single-device path (integer-valued f32 sums are exact under any
+    association); ``mesh=None`` is byte-for-byte the pre-mesh behaviour."""
 
     def __init__(self, query: AnalyticsQuery, scale: StreamScale,
-                 use_kernel: bool = False, backend: Optional[str] = None):
+                 use_kernel: bool = False, backend: Optional[str] = None,
+                 mesh=None):
         self.query = query
         self.scale = scale
         self.num_groups = query.num_groups(scale)
         self.use_kernel = use_kernel
         self.backend = backend
+        self.mesh = mesh
         # Partials keyed by slot (tuple offset when driven by the runtime
         # loop): re-queued stragglers overwrite instead of double-counting.
         self.partials: Dict[int, np.ndarray] = {}
         self.batch_log: List[BatchResult] = []
-        if use_kernel:
+        if mesh is not None:
+            self._agg = lambda k, v: mesh.segagg(k, v, self.num_groups,
+                                                 backend=backend)
+        elif use_kernel:
             from ..kernels.segagg.ops import segagg
 
             self._agg = lambda k, v: segagg(k, v, self.num_groups,
@@ -191,10 +203,12 @@ class AnalyticsRuntimeExecutor(BaseExecutor):
         scale: StreamScale,
         use_kernel: bool = False,
         backend: Optional[str] = None,
+        mesh=None,
     ):
         super().__init__()
         self._jobs = {
-            qid: (AnalyticsExecutor(aq, scale, use_kernel, backend), files)
+            qid: (AnalyticsExecutor(aq, scale, use_kernel, backend, mesh),
+                  files)
             for qid, (aq, files) in jobs.items()
         }
         self.results: Dict[str, np.ndarray] = {}
@@ -269,6 +283,7 @@ class SharedAnalyticsExecutor(BaseExecutor):
         book,  # repro.core.panes.SharedBook (shared with the runtime loop)
         use_kernel: bool = False,
         backend: Optional[str] = None,
+        mesh=None,
     ):
         super().__init__()
         self.aquery = query
@@ -277,6 +292,7 @@ class SharedAnalyticsExecutor(BaseExecutor):
         self.book = book
         self.use_kernel = use_kernel
         self.backend = backend
+        self.mesh = mesh
         # query_id -> {local offset: partial}: straggler-idempotent, like
         # AnalyticsExecutor.partials.
         self._acc: Dict[str, Dict[int, np.ndarray]] = {}
@@ -289,7 +305,10 @@ class SharedAnalyticsExecutor(BaseExecutor):
 
         keys = np.asarray(self.aquery.key_fn(records), np.int32)
         vals = np.asarray(self.aquery.value_fn(records), np.float32)
-        if self.use_kernel:
+        if self.mesh is not None:
+            part = self.mesh.segagg(keys, vals, self.num_groups,
+                                    backend=self.backend)
+        elif self.use_kernel:
             part = segagg(jnp.asarray(keys), jnp.asarray(vals),
                           self.num_groups, backend=self.backend)
         else:
@@ -320,10 +339,16 @@ class SharedAnalyticsExecutor(BaseExecutor):
         # no jnp ref fast path for pane partials): pre-PR-8 this hardcoded
         # the interpreter, so every shared scan paid interpreter overhead —
         # now the compiled backend does the physical work being measured.
-        parts = np.asarray(pane_segagg(
-            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(pane_ids),
-            count, self.num_groups, backend=self.backend,
-        ))
+        if self.mesh is not None:
+            parts = np.asarray(self.mesh.pane_segagg(
+                keys, vals, pane_ids, count, self.num_groups,
+                backend=self.backend,
+            ))
+        else:
+            parts = np.asarray(pane_segagg(
+                jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(pane_ids),
+                count, self.num_groups, backend=self.backend,
+            ))
         for j in range(count):
             self.book.store.deposit(stream, first_pane + j, by=by,
                                     data=parts[j])
@@ -397,6 +422,93 @@ class SharedAnalyticsExecutor(BaseExecutor):
         return dt
 
 
+class MeshAnalyticsBackend(MeshBackend):
+    """``repro.dist.mesh.MeshBackend`` over real segagg analytics jobs:
+    one pool worker per mesh device, worker clocks stitched from MEASURED
+    wall seconds, shard groups fused into one ``shard_map`` call.
+
+    Usage::
+
+        mesh = DeviceMesh(8)
+        wb = MeshAnalyticsBackend(jobs, scale, mesh)
+        pool = ExecutorPool(worker_backend=wb)
+        run(Planner(policy="llf-dynamic", shard_across=8).policy, specs, pool)
+
+    Dispatch-ahead invariants: a dispatch's partial aggregate is kept ON
+    DEVICE (host spill deferred to ``_agg_execute``), and the sharded
+    segagg donates its values buffer — so XLA may overlap the next batch's
+    host→device transfer with compute, and the measured duration covers
+    exactly the device work (``block_until_ready``).  Partials stay
+    offset-keyed like ``AnalyticsExecutor.partials``: a straggler requeue
+    of a shard group re-runs the covering range and OVERWRITES its slot.
+    """
+
+    def __init__(
+        self,
+        jobs: Dict[str, Tuple[AnalyticsQuery, Sequence[Dict[str, np.ndarray]]]],
+        scale: StreamScale,
+        mesh,  # repro.dist.DeviceMesh
+        backend: Optional[str] = None,
+        names: Optional[Sequence[str]] = None,
+    ):
+        super().__init__(mesh, names)
+        self._jobs = {qid: (aq, list(files)) for qid, (aq, files) in jobs.items()}
+        self._groups = {qid: aq.num_groups(scale) for qid, (aq, _) in jobs.items()}
+        self._segagg_backend = backend
+        # query_id -> {offset: ON-DEVICE partial} (deferred host spill).
+        self._partials: Dict[str, Dict[int, jax.Array]] = {}
+        self.results: Dict[str, np.ndarray] = {}
+
+    def reset(self, t: float) -> None:
+        super().reset(t)
+        self._partials.clear()
+        self.results.clear()
+
+    # -- physical hooks ----------------------------------------------------
+    def _run_range(self, query: Query, num_tuples: int, offset: int) -> None:
+        aq, files = self._jobs[query.query_id]
+        chunk = files[offset: offset + num_tuples]
+        if not chunk:
+            return
+        records = concat_files(chunk)
+        keys = np.asarray(aq.key_fn(records), np.int32)
+        vals = np.asarray(aq.value_fn(records), np.float32)
+        part = self.mesh.segagg(keys, vals, self._groups[query.query_id],
+                                backend=self._segagg_backend)
+        part.block_until_ready()  # the measured dt covers the device work
+        self._partials.setdefault(query.query_id, {})[offset] = part
+
+    def _batch_execute(self, query: Query, num_tuples: int, offset: int) -> None:
+        self._run_range(query, num_tuples, offset)
+
+    def _group_execute(
+        self,
+        query: Query,
+        sizes: Tuple[int, ...],
+        base_offset: int,
+        workers: Tuple[str, ...],
+    ) -> None:
+        # ONE fused mesh call over the covering range: the shard split is
+        # realized by the mesh's own row sharding (shard_extents match the
+        # pool's batch_shard_extents), not by per-shard dispatches.
+        self._run_range(query, sum(sizes), base_offset)
+
+    def _agg_execute(self, query: Query, num_batches: int) -> None:
+        parts = self._partials.get(query.query_id, {})
+        if parts:
+            total = np.sum(
+                np.stack([np.asarray(p) for p in parts.values()]), axis=0
+            )
+        else:
+            total = np.zeros((self._groups[query.query_id], 1), np.float32)
+        self.results[query.query_id] = total
+
+    def requeue_batch(self, query: Query, num_tuples: int, offset: int) -> None:
+        """Straggler redo: re-run the covering range; the offset-keyed
+        partial overwrites, so no double counting."""
+        self._run_range(query, num_tuples, offset)
+
+
 def _plan_query(query_id: str, num_files: int) -> Query:
     """Untimed stand-in Query for replaying a vetted plan over materialized
     files (all inputs present; modelled costs zero)."""
@@ -414,11 +526,12 @@ def _plan_query(query_id: str, num_files: int) -> Query:
 def run_plan(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
              plan: Schedule, scale: StreamScale,
              use_kernel: bool = False,
-             backend: Optional[str] = None) -> Tuple[np.ndarray, List[BatchResult], float]:
+             backend: Optional[str] = None,
+             mesh=None) -> Tuple[np.ndarray, List[BatchResult], float]:
     """Execute a scheduler plan (batch sizes in FILES) against real files
     through the shared runtime loop (strict mode: replay the plan verbatim)."""
     rex = AnalyticsRuntimeExecutor({query.query_id: (query, files)}, scale,
-                                   use_kernel, backend)
+                                   use_kernel, backend, mesh)
     q = _plan_query(query.query_id, len(files))
     execute_plan(q, plan, rex, strict=True)
     return (
@@ -431,10 +544,11 @@ def run_plan(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
 def run_batched(query: AnalyticsQuery, files: Sequence[Dict[str, np.ndarray]],
                 batch_files: int, scale: StreamScale,
                 use_kernel: bool = False,
-                backend: Optional[str] = None) -> Tuple[np.ndarray, float, int]:
+                backend: Optional[str] = None,
+                mesh=None) -> Tuple[np.ndarray, float, int]:
     """Process in fixed-size batches of ``batch_files``; returns
     (result, total_seconds incl. final agg, num_batches)."""
-    ex = AnalyticsExecutor(query, scale, use_kernel, backend)
+    ex = AnalyticsExecutor(query, scale, use_kernel, backend, mesh)
     for i in range(0, len(files), batch_files):
         ex.process_batch(concat_files(files[i:i + batch_files]))
     result, agg_s = ex.finalize()
@@ -455,6 +569,7 @@ def run_session(
     calibrate: bool = True,
     use_kernel: bool = False,
     backend: Optional[str] = None,
+    mesh=None,
     forecast=None,
     latency_target: Optional[float] = None,
     tenant: Optional[str] = None,
@@ -523,7 +638,8 @@ def run_session(
         rspec.window_query(w).query_id: (query, list(files))
         for w, files in enumerate(windows)
     }
-    executor = AnalyticsRuntimeExecutor(jobs, scale, use_kernel, backend)
+    executor = AnalyticsRuntimeExecutor(jobs, scale, use_kernel, backend,
+                                        mesh)
     session = Session(policy=policy, executor=executor, calibrate=calibrate,
                       forecast=forecast, **session_kw)
     session.submit(rspec)
@@ -549,6 +665,7 @@ def run_shared_jobs(
     deadline_frac: float = 3.0,
     use_kernel: bool = False,
     backend: Optional[str] = None,
+    mesh=None,
     **policy_params,
 ):
     """Overlapping GROUP-BY windows over ONE real stream, end to end.
@@ -593,7 +710,8 @@ def run_shared_jobs(
     else:
         specs, book = qs, SharedBook(pane_tuples=pane_tuples)
     executor = SharedAnalyticsExecutor(query, files, scale, book,
-                                       use_kernel=use_kernel, backend=backend)
+                                       use_kernel=use_kernel, backend=backend,
+                                       mesh=mesh)
     trace = run_loop(pol, specs, executor,
                      sharing=book if share else None)
     if share:
@@ -606,7 +724,8 @@ def measure_cost_model(query: AnalyticsQuery,
                        scale: StreamScale,
                        batch_sizes: Sequence[int] = (1, 4, 16, 64),
                        use_kernel: bool = False,
-                       backend: Optional[str] = None) -> CostModelBase:
+                       backend: Optional[str] = None,
+                       mesh=None) -> CostModelBase:
     """§6.2 calibration: measure execution time vs batch size, fit the
     piecewise-linear model (file units).  ``backend=`` picks the segagg
     path being calibrated (with ``use_kernel=True``) — cost models fitted
@@ -617,8 +736,8 @@ def measure_cost_model(query: AnalyticsQuery,
     for bs in batch_sizes:
         bs = min(bs, len(files))
         # warmup: first call at each padded shape compiles
-        run_batched(query, files[:bs], bs, scale, use_kernel, backend)
-        ex = AnalyticsExecutor(query, scale, use_kernel, backend)
+        run_batched(query, files[:bs], bs, scale, use_kernel, backend, mesh)
+        ex = AnalyticsExecutor(query, scale, use_kernel, backend, mesh)
         reps = max(3, min(8, len(files) // bs))
         for i in range(reps):
             lo = (i * bs) % max(len(files) - bs, 1)
@@ -628,7 +747,7 @@ def measure_cost_model(query: AnalyticsQuery,
     # final-agg cost vs #batches
     for nb in (2, 8, 32):
         per = max(len(files) // nb, 1)
-        ex = AnalyticsExecutor(query, scale, use_kernel, backend)
+        ex = AnalyticsExecutor(query, scale, use_kernel, backend, mesh)
         for i in range(nb):
             ex.process_batch(concat_files(files[i * per: (i + 1) * per] or
                                           files[:1]))
